@@ -1,0 +1,29 @@
+"""Shared benchmark fixtures: one cached medium-scale tiering dataset."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BENCH_SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+
+@functools.lru_cache(maxsize=2)
+def bench_data(scale: str = BENCH_SCALE, min_support: float = 5e-5,
+               max_clauses: int = 4000):
+    from repro.data import incidence, synthetic
+    corpus, log = synthetic.make_tiering_dataset(0, scale)
+    data = incidence.build_tiering_data(
+        corpus, log, min_support=min_support, max_clauses=max_clauses)
+    return data
+
+
+def bench_problem(scale: str = BENCH_SCALE):
+    from repro.core import SCSKProblem
+    return SCSKProblem.from_data(bench_data(scale))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: XLA path wall-time (CPU host) + the VMEM/HBM
+traffic model for the TPU kernels (the quantity the Pallas tiling targets)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(out_dir: str = "artifacts/bench") -> None:
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+
+    for c, w in ((4096, 1024), (16384, 2048)):
+        a = jnp.asarray(rng.integers(0, 2 ** 32, (c, w), dtype=np.uint32))
+        x = jnp.asarray(rng.standard_normal((w * 32, 1)), jnp.float32)
+        mask = jnp.asarray(rng.integers(0, 2 ** 32, w, dtype=np.uint32))
+        dt = _time(lambda: ops.bit_matvec(a, x, backend="xla"))
+        hbm_gb = (c * w * 4 + w * 32 * 4 + c * 4) / 1e9
+        emit(f"kernel_bit_matvec_c{c}_w{w}", dt * 1e6,
+             f"hbm_GB={hbm_gb:.3f};tpu_mem_bound_us={hbm_gb / 819 * 1e6:.1f}")
+        dt = _time(lambda: ops.coverage_gain(a, mask, backend="xla"))
+        emit(f"kernel_coverage_gain_c{c}_w{w}", dt * 1e6,
+             f"hbm_GB={hbm_gb:.3f}")
+
+    ids = jnp.asarray(rng.integers(0, 2 ** 20, (4096, 512)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, 2 ** 15, dtype=np.uint32))
+    dt = _time(lambda: ops.sparse_gain(ids, mask, backend="xla"))
+    emit("kernel_sparse_gain_c4096_m512", dt * 1e6,
+         f"gather_GB={4096 * 512 * 4 / 1e9:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Regenerate the auto-built tables in EXPERIMENTS.md from artifacts/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("artifacts/dryrun/*/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        mesh = r["mesh"]
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], mesh, "SKIP (spec)", "-", "-",
+                         "-", "-"))
+            continue
+        m = r["memory_analysis"]
+        rows.append((
+            r["arch"], r["shape"], mesh, r["kind"],
+            f"{m.get('argument_size_in_bytes', 0) / 2**30:.2f}",
+            f"{m.get('temp_size_in_bytes', 0) / 2**30:.2f}",
+            f"{r['collectives']['total_bytes'] / 2**30:.2f}",
+            f"{r.get('compile_s', 0):.1f}",
+        ))
+    hdr = ("| arch | shape | mesh | kind | args GiB/dev | temp GiB/dev "
+           "| collective GiB (module) | compile s |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join("| " + " | ".join(map(str, r)) + " |"
+                           for r in rows)
+
+
+def roofline_table() -> str:
+    with open("artifacts/bench/roofline.json") as f:
+        rows = json.load(f)
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "model_flops_ratio", "roofline_frac", "cost_src"]
+    hdr = "| " + " | ".join(cols) + " |\n" + \
+        "|" + "---|" * len(cols) + "\n"
+    return hdr + "\n".join(
+        "| " + " | ".join(str(r[c]) for c in cols) + " |" for r in rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        print(dryrun_table())
+    if which in ("roofline", "both"):
+        print(roofline_table())

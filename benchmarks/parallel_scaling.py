@@ -1,0 +1,38 @@
+"""Paper Fig. 4: Opt/Pes speed vs parallel width.
+
+The paper varies CPU count; the TPU-native analogue is the batched refresh
+width K (how many candidates get exact re-evaluation per fused kernel call).
+Larger K = more parallel work per round = fewer rounds, exactly the paper's
+'more CPUs' axis."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import bench_data, bench_problem, emit
+
+
+def run(out_dir: str = "artifacts/bench") -> dict:
+    from repro.core import optpes_greedy
+    problem = bench_problem()
+    data = bench_data()
+    budget = data.n_docs // 4          # paper uses B = |D|/4 for Fig. 4
+
+    out = {}
+    for k in (16, 64, 256, 1024):
+        t0 = time.perf_counter()
+        r = optpes_greedy(problem, budget, k=k, time_limit=30.0)
+        dt = time.perf_counter() - t0
+        out[k] = {"seconds": dt, "f_final": r.f_final,
+                  "steps": len(r.order), "evals": r.n_exact_evals}
+        emit(f"fig4_optpes_k{k}", 1e6 * dt,
+             f"f={r.f_final:.4f};steps={len(r.order)}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig4_parallel.json"), "w") as f:
+        json.dump(out, f)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,143 @@
+"""Roofline report (deliverable g): reads artifacts/dryrun/*.json, derives
+the three terms per (arch x shape x mesh), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and emits the EXPERIMENTS.md table.
+
+Terms (per spec; cost_analysis on the SPMD-partitioned module is already
+per-device, so no extra ÷chips on flops/bytes; collective bytes are summed
+over the module and divided by chips x link bandwidth):
+  compute_s    = HLO_FLOPs_per_device / 197e12
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = collective_bytes_per_device / 50e9
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# tokens per step for MODEL_FLOPS = 6·N_active·D
+LM_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+             "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(arch: str, shape: str) -> float | None:
+    from repro.configs import registry as R
+    spec = R.all_archs().get(arch)
+    if spec is None or spec.family != "lm":
+        return None
+    cfg = spec.config_for(shape)
+    n = cfg.active_param_count()
+    d = LM_TOKENS[shape]
+    mult = 6 if shape == "train_4k" else 2   # fwd-only for serving shapes
+    return float(mult) * n * d
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+TIERING_SHAPES = {
+    "solve_dense_m": (131072, 2 ** 20, 2 ** 23, None),
+    "solve_dense_l": (2 ** 20, 2 ** 22, 2 ** 26, None),
+    "solve_optpes_l": (2 ** 20, 2 ** 22, 2 ** 26, 4096),
+    "solve_sparse_xl": (2 ** 20, 2 ** 22, 2 ** 28, 4096),
+}
+
+
+def _tiering_analytic(shape: str, n_chips: int) -> tuple[float, float] | None:
+    """(flops, bytes) per chip — analytic, because the XLA bit-matvec path
+    scans W-chunks and cost_analysis counts loop bodies once. Formulas:
+    dense round: 2·C·Nq MXU MACs + 2·C·Wd popcount ops; reads A_q + A_d.
+    optpes round: same per gathered row (K of them) + bound-array traffic.
+    sparse round: 2·C·M gather+test ops; reads id lists + gathered words."""
+    if shape == "serve_route":
+        b, v, nd, k, l = 4096, 2 ** 17, 2 ** 22, 2 ** 16, 8
+        wv, wd = v // 32, nd // 32
+        flops = b * k * wv * 2 + b * l * wd
+        bytes_ = 4.0 * (b * l * wd + k * wv + b * wd)
+        return flops / n_chips, bytes_ / n_chips
+    if shape not in TIERING_SHAPES:
+        return None
+    c, nq, nd, kk = TIERING_SHAPES[shape]
+    wq, wd = nq // 32, nd // 32
+    if shape == "solve_sparse_xl":
+        m = 4096
+        flops = 2.0 * c * m + 2.0 * c * nq            # g gather-test + f matvec
+        bytes_ = 4.0 * (2 * c * m + c * wq) + 4.0 * nq
+        return flops / n_chips, bytes_ / n_chips
+    rows = kk if shape == "solve_optpes_l" else c    # optpes: K gathered rows
+    flops = 2.0 * rows * nq + 2.0 * rows * wd
+    bytes_ = 4.0 * rows * (wq + wd) + 4.0 * nq + \
+        (6.0 * 4 * c if shape == "solve_optpes_l" else 4.0 * c)
+    return flops / n_chips, bytes_ / n_chips
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_chips"]
+    flops = max(rec.get("flops", 0.0), 0.0)
+    hbm = max(rec.get("bytes_accessed", 0.0), 0.0)
+    coll = rec["collectives"]["total_bytes"] / n   # module total -> per chip
+    src = "hlo"
+    probe = rec.get("probe")
+    if probe:                        # scan-corrected LM costs (see dryrun)
+        flops, hbm = probe["flops"], probe["bytes"]
+        coll = probe["coll"] / n
+        src = "probe"
+    elif rec["arch"] == "tiering-scsk":
+        ana = _tiering_analytic(rec["shape"], n)
+        if ana:
+            flops, hbm = ana
+            src = "analytic"
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = (mf / (flops * n)) if (mf and flops > 0) else None
+    roof_frac = (mf / n / PEAK_FLOPS) / bound if (mf and bound > 0) else None
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: f"{v:.3e}" for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops_ratio": f"{useful:.3f}" if useful else "-",
+        "roofline_frac": f"{roof_frac:.3f}" if roof_frac else "-",
+        "mem_per_dev_GB": f"{rec['memory_analysis'].get('total_per_device_bytes', 0) / 2**30:.1f}",
+        "cost_src": src,
+    }
+
+
+def run(art_dir: str = "artifacts/dryrun",
+        out_path: str = "artifacts/bench/roofline.json") -> list[dict]:
+    rows = [a for a in (analyze(r) for r in load_records(art_dir)) if a]
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    if rows:
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+    else:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Benchmark entrypoint: one section per paper table/figure + kernel micro
++ roofline summary. Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import generalization, kernels_micro, parallel_scaling, \
+        roofline, solvers
+    kernels_micro.run()
+    solvers.run()
+    parallel_scaling.run()
+    generalization.run()
+    # roofline summary (only if dry-run artifacts exist)
+    try:
+        rows = roofline.run()
+        print(f"roofline_rows,{len(rows)},see artifacts/bench/roofline.json")
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline_rows,0,unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

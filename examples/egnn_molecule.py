@@ -1,0 +1,73 @@
+"""EGNN on batched small molecules (the `molecule` shape): train a few steps
+on a synthetic E(n)-invariant target and verify rotation invariance of the
+prediction — the property EGNN buys architecturally.
+
+Run: PYTHONPATH=src python examples/egnn_molecule.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.models import egnn as G  # noqa: E402
+from repro.train.optimizer import OptimizerConfig  # noqa: E402
+from repro.train.trainer import make_train_step  # noqa: E402
+
+
+def make_batch(rng, n_graphs=32, n_nodes=12, n_edges=40, d_feat=8):
+    nodes = n_graphs * n_nodes
+    feat = rng.standard_normal((nodes, d_feat)).astype(np.float32)
+    coords = rng.standard_normal((nodes, 3)).astype(np.float32)
+    graph_ids = np.repeat(np.arange(n_graphs), n_nodes)
+    src = np.concatenate([rng.integers(0, n_nodes, n_edges) + g * n_nodes
+                          for g in range(n_graphs)])
+    dst = np.concatenate([rng.integers(0, n_nodes, n_edges) + g * n_nodes
+                          for g in range(n_graphs)])
+    edges = np.stack([src, dst]).astype(np.int32)
+    # invariant target: mean pairwise distance within the graph (per edge avg)
+    d = np.linalg.norm(coords[src] - coords[dst], axis=1)
+    targets = np.array([d[g * n_edges:(g + 1) * n_edges].mean()
+                        for g in range(n_graphs)], np.float32)
+    return {"node_feat": jnp.asarray(feat), "coords": jnp.asarray(coords),
+            "edges": jnp.asarray(edges), "graph_ids": jnp.asarray(graph_ids),
+            "targets": jnp.asarray(targets)}
+
+
+def main() -> None:
+    cfg = G.EGNNConfig(n_layers=3, d_hidden=32, d_feat=8, n_classes=1,
+                       task="graph_reg")
+    rng = np.random.default_rng(0)
+    batch = make_batch(rng)
+
+    init_state, train_step = make_train_step(
+        lambda p, b: G.loss_fn(p, b, cfg),
+        OptimizerConfig(lr=2e-3, warmup_steps=10, decay_steps=150))
+    state = init_state(G.init_params(jax.random.key(0), cfg))
+    step = jax.jit(train_step)
+    first = None
+    for i in range(150):
+        state, m = step(state, batch)
+        first = first or float(m["loss"])
+    print(f"train mse: {first:.4f} -> {float(m['loss']):.4f}")
+    assert float(m["loss"]) < first
+
+    # E(3) invariance of predictions under rotation + translation
+    theta = 0.7
+    q = np.array([[np.cos(theta), -np.sin(theta), 0],
+                  [np.sin(theta), np.cos(theta), 0], [0, 0, 1]], np.float32)
+    rot = dict(batch)
+    rot["coords"] = batch["coords"] @ jnp.asarray(q).T + 3.0
+    out1, _ = G.serve_step(state["params"], batch, cfg)
+    out2, _ = G.serve_step(state["params"], rot, cfg)
+    err = float(jnp.abs(out1 - out2).max())
+    print(f"rotation+translation invariance error: {err:.2e}")
+    assert err < 1e-3
+    print("EGNN example OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end driver (deliverable b): train a small LM for a few hundred
+steps with the production trainer — sharded state, checkpointing, resume.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+The model is a ~10M-param gemma2-style decoder (CPU-tractable); the exact
+same code path drives the full assigned configs on a real mesh.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="artifacts/ckpt/train_lm_example")
+    args = ap.parse_args()
+
+    from repro.distributed import mesh_context
+    from repro.launch import mesh as mesh_lib
+    from repro.models import transformer as T
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.trainer import DriverConfig, TrainingDriver, \
+        make_train_step
+
+    cfg = T.TransformerConfig(
+        name="lm-10m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        d_head=32, d_ff=1024, vocab_size=4096, local_window=64,
+        global_every=2, attn_softcap=50.0, final_softcap=30.0,
+        embed_scale=True, dtype="float32")
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+
+    # synthetic char-ish data with learnable structure (n-gram sequences)
+    rng = np.random.default_rng(0)
+    trans = rng.dirichlet(np.ones(64) * 0.05, size=cfg.vocab_size)
+    nxt = np.argsort(-trans, axis=1)[:, :64]
+
+    def batches():
+        while True:
+            toks = np.zeros((args.batch, args.seq), np.int32)
+            toks[:, 0] = rng.integers(0, cfg.vocab_size, args.batch)
+            for t in range(1, args.seq):
+                pick = rng.integers(0, 64, args.batch)
+                toks[:, t] = nxt[toks[:, t - 1], pick]
+            yield {"tokens": toks, "labels": toks}
+
+    mesh = mesh_lib.make_host_mesh()
+    with mesh, mesh_context.use_mesh(mesh):
+        init_state, train_step = make_train_step(
+            lambda p, b: T.loss_fn(p, b, cfg),
+            OptimizerConfig(lr=1e-3, warmup_steps=20,
+                            decay_steps=args.steps))
+        driver = TrainingDriver(init_state, train_step, DriverConfig(
+            ckpt_dir=args.ckpt, ckpt_every=50, max_steps=args.steps))
+        state, history = driver.run(
+            lambda: T.init_params(jax.random.key(0), cfg), batches())
+
+    print(f"steps run this process: {len(history)}")
+    print(f"loss: {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+    assert history[-1]["loss"] < history[0]["loss"], "no learning?"
+    print("checkpoints in", args.ckpt, "- rerun to resume from step",
+          int(state["step"]))
+
+
+if __name__ == "__main__":
+    main()

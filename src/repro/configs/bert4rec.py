@@ -1,0 +1,68 @@
+"""bert4rec [recsys]: embed_dim=64 n_blocks=2 n_heads=2 seq_len=200,
+bidirectional sequence encoder, masked-item objective [arXiv:1904.06690].
+1M-item catalog; training uses sampled softmax (8192 shared negatives)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import mesh as mesh_lib
+from repro.models import recsys as M
+
+CONFIG = M.Bert4RecConfig()
+
+
+def _cell(shape: str, mesh) -> R.Cell:
+    dp = mesh_lib.data_axes(mesh)
+    s = CONFIG.seq_len
+    if shape == "train_batch":
+        b = R.RECSYS_BATCH[shape]
+        return R.Cell("train", {
+            "seq": R.sds((b, s), R.i32),
+            "labels": R.sds((b, s), R.i32),
+            "negatives": R.sds((CONFIG.n_negatives,), R.i32),
+        }, {"seq": P(dp, None), "labels": P(dp, None), "negatives": P(None)})
+    if shape in ("serve_p99", "serve_bulk"):
+        b = R.RECSYS_BATCH[shape]
+        return R.Cell("serve", {"seq": R.sds((b, s), R.i32)},
+                      {"seq": P(dp, None)})
+    return R.Cell("serve", {
+        "seq": R.sds((1, s), R.i32),
+        "cand_ids": R.sds((R.N_CANDIDATES,), R.i32),
+    }, {"seq": P(None, None), "cand_ids": P(dp)})
+
+
+def _serve(cfg, shape):
+    if shape == "retrieval_cand":
+        return lambda p, b: M.bert4rec_serve_candidates(p, b, cfg)
+    return lambda p, b: M.bert4rec_serve(p, b, cfg)
+
+
+def _smoke():
+    cfg = M.Bert4RecConfig(n_items=64, embed_dim=16, seq_len=12, n_blocks=1,
+                           n_heads=2, n_negatives=16)
+    rng = np.random.default_rng(0)
+    labels = np.full((8, 12), -100)
+    labels[:, [2, 7]] = rng.integers(0, 64, (8, 2))
+    seq = rng.integers(0, 64, (8, 12))
+    seq[:, [2, 7]] = 64  # mask token
+    batch = {"seq": jnp.asarray(seq, jnp.int32),
+             "labels": jnp.asarray(labels, jnp.int32),
+             "negatives": jnp.asarray(rng.integers(0, 64, 16), jnp.int32)}
+    return cfg, batch, "train"
+
+
+R.register(R.ArchSpec(
+    name="bert4rec", family="recsys",
+    shapes=R.RECSYS_SHAPES, skips={},
+    config_for=lambda shape: CONFIG,
+    cell_for=_cell,
+    loss_fn=lambda cfg: (lambda p, b: M.bert4rec_loss(p, b, cfg)),
+    serve_fn=_serve,
+    abstract_params=lambda cfg: jax.eval_shape(
+        lambda: M.bert4rec_init(jax.random.key(0), cfg)),
+    param_specs=M.bert4rec_specs,
+    optimizer="adamw",
+    smoke=_smoke,
+))

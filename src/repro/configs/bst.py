@@ -1,0 +1,61 @@
+"""bst [recsys]: embed_dim=32 seq_len=20 n_blocks=1 n_heads=8
+mlp=1024-512-256, transformer-seq interaction (Alibaba) [arXiv:1905.06874]."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import mesh as mesh_lib
+from repro.models import recsys as M
+
+CONFIG = M.BSTConfig()
+
+
+def _cell(shape: str, mesh) -> R.Cell:
+    dp = mesh_lib.data_axes(mesh)
+    if shape in R.RECSYS_BATCH:
+        b = R.RECSYS_BATCH[shape]
+        kind = "train" if shape == "train_batch" else "serve"
+        inputs = {"hist": R.sds((b, CONFIG.seq_len), R.i32),
+                  "target": R.sds((b,), R.i32)}
+        specs = {"hist": P(dp, None), "target": P(dp)}
+        if kind == "train":
+            inputs["labels"] = R.sds((b,), R.f32)
+            specs["labels"] = P(dp)
+        return R.Cell(kind, inputs, specs)
+    return R.Cell("serve", {
+        "hist": R.sds((1, CONFIG.seq_len), R.i32),
+        "cand_ids": R.sds((R.N_CANDIDATES,), R.i32),
+    }, {"hist": P(None, None), "cand_ids": P(dp)})
+
+
+def _serve(cfg, shape):
+    if shape == "retrieval_cand":
+        return lambda p, b: M.bst_serve_candidates(p, b, cfg)
+    return lambda p, b: M.bst_serve(p, b, cfg)
+
+
+def _smoke():
+    cfg = M.BSTConfig(n_items=64, embed_dim=16, seq_len=5, n_heads=4,
+                      mlp_dims=(32, 16))
+    rng = np.random.default_rng(0)
+    batch = {"hist": jnp.asarray(rng.integers(0, 64, (8, 5)), jnp.int32),
+             "target": jnp.asarray(rng.integers(0, 64, 8), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 2, 8), jnp.float32)}
+    return cfg, batch, "train"
+
+
+R.register(R.ArchSpec(
+    name="bst", family="recsys",
+    shapes=R.RECSYS_SHAPES, skips={},
+    config_for=lambda shape: CONFIG,
+    cell_for=_cell,
+    loss_fn=lambda cfg: (lambda p, b: M.bst_loss(p, b, cfg)),
+    serve_fn=_serve,
+    abstract_params=lambda cfg: jax.eval_shape(
+        lambda: M.bst_init(jax.random.key(0), cfg)),
+    param_specs=M.bst_specs,
+    optimizer="adamw",
+    smoke=_smoke,
+))

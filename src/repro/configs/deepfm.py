@@ -1,0 +1,63 @@
+"""deepfm [recsys]: n_sparse=39 embed_dim=10 mlp=400-400-400 interaction=fm
+[arXiv:1703.04247]. Criteo-scale tables: 39 fields x 1M rows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import mesh as mesh_lib
+from repro.models import recsys as M
+
+CONFIG = M.DeepFMConfig()
+
+
+def _cell(shape: str, mesh) -> R.Cell:
+    dp = mesh_lib.data_axes(mesh)
+    if shape in R.RECSYS_BATCH:
+        b = R.RECSYS_BATCH[shape]
+        kind = "train" if shape == "train_batch" else "serve"
+        inputs = {"feat_ids": R.sds((b, CONFIG.n_fields), R.i32)}
+        specs = {"feat_ids": P(dp, None)}
+        if kind == "train":
+            inputs["labels"] = R.sds((b,), R.f32)
+            specs["labels"] = P(dp)
+        return R.Cell(kind, inputs, specs)
+    # retrieval_cand: 1 user context x 1M candidate items
+    return R.Cell("serve", {
+        "user_feat_ids": R.sds((1, CONFIG.n_fields - 1), R.i32),
+        "cand_ids": R.sds((R.N_CANDIDATES,), R.i32),
+    }, {
+        "user_feat_ids": P(None, None),
+        "cand_ids": P(dp),
+    })
+
+
+def _serve(cfg, shape):
+    if shape == "retrieval_cand":
+        return lambda p, b: M.deepfm_serve_candidates(p, b, cfg)
+    return lambda p, b: M.deepfm_serve(p, b, cfg)
+
+
+def _smoke():
+    cfg = M.DeepFMConfig(n_fields=6, vocab_per_field=50, embed_dim=8,
+                         mlp_dims=(32, 16))
+    rng = np.random.default_rng(0)
+    batch = {"feat_ids": jnp.asarray(rng.integers(0, 50, (16, 6)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 2, 16), jnp.float32)}
+    return cfg, batch, "train"
+
+
+R.register(R.ArchSpec(
+    name="deepfm", family="recsys",
+    shapes=R.RECSYS_SHAPES, skips={},
+    config_for=lambda shape: CONFIG,
+    cell_for=_cell,
+    loss_fn=lambda cfg: (lambda p, b: M.deepfm_loss(p, b, cfg)),
+    serve_fn=_serve,
+    abstract_params=lambda cfg: jax.eval_shape(
+        lambda: M.deepfm_init(jax.random.key(0), cfg)),
+    param_specs=M.deepfm_specs,
+    optimizer="adamw",
+    smoke=_smoke,
+))

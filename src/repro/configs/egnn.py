@@ -1,0 +1,50 @@
+"""egnn [gnn]: n_layers=4 d_hidden=64 E(n)-equivariant [arXiv:2102.09844].
+
+d_feat / n_classes / task vary per assigned shape (cora / reddit-sampled /
+ogb-products / batched molecules) — config_for(shape) reflects that.
+Citation graphs carry synthetic 3D positions (EGNN requires coordinates;
+DESIGN.md §Arch-applicability). minibatch_lg shapes are the static pads of
+the real neighbor sampler in models/sampler.py (fanout 15-10, 1024 seeds).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as R
+from repro.models import egnn as G
+
+
+def _cfg(shape: str) -> G.EGNNConfig:
+    n, e, d, c, task = R.GNN_DIMS[shape]
+    return G.EGNNConfig(n_layers=4, d_hidden=64, d_feat=d, n_classes=c,
+                        task=task)
+
+
+def _smoke():
+    cfg = G.EGNNConfig(n_layers=2, d_hidden=16, d_feat=8, n_classes=3)
+    rng = np.random.default_rng(0)
+    batch = {
+        "node_feat": jnp.asarray(rng.standard_normal((24, 8)), jnp.float32),
+        "coords": jnp.asarray(rng.standard_normal((24, 3)), jnp.float32),
+        "edges": jnp.asarray(rng.integers(0, 24, (2, 64)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 3, 24), jnp.int32),
+    }
+    return cfg, batch, "train"
+
+
+R.register(R.ArchSpec(
+    name="egnn", family="gnn",
+    shapes=R.GNN_SHAPES, skips={},
+    config_for=_cfg,
+    cell_for=lambda shape, mesh: R.gnn_cell(_cfg(shape), shape, mesh),
+    loss_fn=lambda cfg: (lambda params, batch: G.loss_fn(params, batch, cfg)),
+    serve_fn=lambda cfg, shape: (
+        lambda params, batch: G.serve_step(params, batch, cfg)),
+    abstract_params=lambda cfg: jax.eval_shape(
+        lambda: G.init_params(jax.random.key(0), cfg)),
+    param_specs=lambda cfg: jax.tree.map(
+        lambda _: jax.sharding.PartitionSpec(),
+        jax.eval_shape(lambda: G.init_params(jax.random.key(0), cfg))),
+    optimizer="adamw",
+    smoke=_smoke,
+))

@@ -1,0 +1,235 @@
+"""Architecture registry: every assigned arch (+ the paper's own) as a
+selectable config, with per-shape abstract inputs, shardings, smoke builders
+and the functions the dry-run lowers.
+
+Cell kinds:
+  train    -> trainer train_step(state, batch)   (optimizer update included)
+  prefill  -> LM prefill (forward + cache build)
+  decode   -> LM decode_step (1 new token against a seq_len KV cache)
+  serve    -> family-specific serving fn
+  solve    -> the paper's SCSK solver round (tiering arch)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    kind: str                       # train | prefill | decode | serve | solve
+    inputs: dict[str, Any]          # name -> ShapeDtypeStruct (pytree ok)
+    input_specs: dict[str, Any]     # name -> PartitionSpec (pytree ok)
+    n_micro: int = 1                # train microbatching
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                     # lm | gnn | recsys | tiering
+    shapes: tuple[str, ...]
+    skips: dict[str, str]
+    config_for: Callable[[str], Any]
+    cell_for: Callable[[str, Any], Cell]        # (shape, mesh) -> Cell
+    loss_fn: Callable | None        # (cfg) -> fn(params, batch)
+    serve_fn: Callable | None       # (cfg, shape) -> fn(params, batch)
+    abstract_params: Callable       # (cfg) -> pytree of SDS
+    param_specs: Callable           # (cfg) -> pytree of PartitionSpec
+    optimizer: str = "adamw"
+    grad_accum_dtype: str = "float32"
+    smoke: Callable | None = None   # () -> (cfg, batch, kind)
+
+    def runnable_shapes(self):
+        return [s for s in self.shapes if s not in self.skips]
+
+
+ARCHS: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec):
+    ARCHS[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    _load_all()
+    return ARCHS[name]
+
+
+_LOADED = False
+_ARCH_MODULES = [
+    "kimi_k2_1t_a32b", "llama4_maverick_400b_a17b", "gemma2_2b", "gemma3_12b",
+    "internlm2_1_8b", "egnn", "bert4rec", "bst", "deepfm",
+    "two_tower_retrieval", "tiering_scsk",
+]
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _LOADED = True
+
+
+def all_archs() -> dict[str, ArchSpec]:
+    _load_all()
+    return dict(ARCHS)
+
+
+# =============================================================================
+# LM family glue
+# =============================================================================
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def lm_cell(cfg, shape: str, mesh, n_micro: int, batch_div: int = 1) -> Cell:
+    from repro.models import transformer as T
+    dp = mesh_lib.data_axes(mesh)
+    if shape == "train_4k":
+        b, s = 256 // batch_div, 4096
+        if n_micro > 1:
+            tok = sds((n_micro, b // n_micro, s), i32)
+            spec = P(None, dp, None)
+        else:
+            tok = sds((b, s), i32)
+            spec = P(dp, None)
+        return Cell("train",
+                    {"tokens": tok, "labels": tok},
+                    {"tokens": spec, "labels": spec}, n_micro=n_micro)
+    if shape == "prefill_32k":
+        b, s = 32, 32768
+        return Cell("prefill", {"tokens": sds((b, s), i32)},
+                    {"tokens": P(dp, None)})
+    if shape in ("decode_32k", "long_500k"):
+        b, s = (128, 32768) if shape == "decode_32k" else (1, 524288)
+        shard_seq = b == 1
+        cache = {"k": sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head),
+                          cfg.adtype),
+                 "v": sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head),
+                          cfg.adtype)}
+        if shard_seq:
+            cspec = P(None, None, dp, None, "model")
+        else:
+            cspec = P(None, dp, None, None, "model")
+        return Cell("decode",
+                    {"cache": cache, "tokens": sds((b, 1), i32),
+                     "cur_len": sds((), i32)},
+                    {"cache": {"k": cspec, "v": cspec},
+                     "tokens": P(dp, None) if not shard_seq else P(None, None),
+                     "cur_len": P()})
+    raise KeyError(shape)
+
+
+def lm_loss(cfg):
+    from repro.models import transformer as T
+    return lambda params, batch: T.loss_fn(params, batch, cfg)
+
+
+def lm_serve(cfg, shape):
+    from repro.models import transformer as T
+    if shape == "prefill_32k":
+        def prefill(params, batch):
+            h, _ = T.forward(params, batch["tokens"], cfg)
+            return h[:, -1, :] @ T.unembed_matrix(params, cfg).astype(h.dtype)
+        return prefill
+
+    def decode(params, batch):
+        return T.decode_step(params, batch["cache"], batch["tokens"],
+                             batch["cur_len"], cfg)
+    return decode
+
+
+def register_lm(name: str, cfg, *, n_micro: int = 1, optimizer="adamw",
+                grad_accum_dtype: str = "float32", smoke_cfg=None):
+    from repro.models import transformer as T
+    skips = {}
+    if cfg.pure_full_attention:
+        skips["long_500k"] = ("pure full attention: 500k-token context is "
+                              "quadratic at prefill; spec says skip "
+                              "(DESIGN.md §Arch-applicability)")
+
+    def smoke():
+        scfg = smoke_cfg
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, scfg.vocab_size, (2, 32)), i32)
+        return scfg, {"tokens": toks, "labels": toks}, "train"
+
+    return register(ArchSpec(
+        name=name, family="lm", shapes=LM_SHAPES, skips=skips,
+        config_for=lambda shape: cfg,
+        cell_for=lambda shape, mesh: lm_cell(cfg, shape, mesh, n_micro),
+        loss_fn=lm_loss,
+        serve_fn=lm_serve,
+        abstract_params=lambda c: jax.eval_shape(
+            lambda: T.init_params(jax.random.key(0), c)),
+        param_specs=lambda c: T.param_specs(c),
+        optimizer=optimizer,
+        grad_accum_dtype=grad_accum_dtype,
+        smoke=smoke,
+    ))
+
+
+# =============================================================================
+# GNN family glue (EGNN)
+# =============================================================================
+
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+
+GNN_DIMS = {
+    # nodes, edges(padded to 512 multiple), d_feat, n_classes, task
+    "full_graph_sm": (2708, 10752, 1433, 7, "node_class"),
+    "minibatch_lg": (180224, 196608, 602, 41, "node_class"),
+    "ogb_products": (2449029, 61859328, 100, 47, "node_class"),
+    "molecule": (3840, 8192, 16, 1, "graph_reg"),
+}
+
+
+def gnn_cell(cfg, shape: str, mesh) -> Cell:
+    dp = mesh_lib.data_axes(mesh)
+    n, e, d, c, task = GNN_DIMS[shape]
+    inputs = {
+        "node_feat": sds((n, d), f32),
+        "coords": sds((n, 3), f32),
+        "edges": sds((2, e), i32),
+    }
+    specs = {
+        "node_feat": P(None, None),
+        "coords": P(None, None),
+        "edges": P(None, dp),
+    }
+    if task == "node_class":
+        inputs["labels"] = sds((n,), i32)
+        specs["labels"] = P(None)
+    else:
+        inputs["graph_ids"] = sds((n,), i32)
+        inputs["targets"] = sds((128,), f32)
+        specs["graph_ids"] = P(None)
+        specs["targets"] = P(None)
+    return Cell("train", inputs, specs)
+
+
+# =============================================================================
+# RecSys family glue
+# =============================================================================
+
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+RECSYS_BATCH = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144}
+N_CANDIDATES = 1_000_000

@@ -1,0 +1,259 @@
+"""tiering-scsk — the paper's own architecture: SCSK solver rounds and the
+two-tier serving path at production scale (paper §4: |D| 10^6..10^12,
+|X̄| 10^4..10^6), as dry-run-lowerable units.
+
+Shapes (extra cells beyond the 40 assigned ones):
+  solve_dense_m   dense bitset round, C=128k clauses, 1M queries, 8M docs
+  solve_dense_l   dense bitset round, C=1M, 4M queries, 64M docs
+  solve_optpes_l  Opt/Pes batched bound-refresh round at the _l scale
+  solve_sparse_xl sparse-id round, C=1M, m(c) padded to 4096, 256M docs
+  serve_route     two-tier classify+match, 64k-query batch
+
+Sharding: clause axis over ('pod','data'); query-word axis over 'model' for
+the f-side bit-matvec (psum over 'model'); covered masks replicated.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import mesh as mesh_lib
+
+u32 = jnp.uint32
+BOOL = jnp.bool_
+
+
+@dataclasses.dataclass(frozen=True)
+class TieringScaleConfig:
+    name: str = "tiering-scsk"
+    refresh_k: int = 4096          # Opt/Pes batch width
+
+
+CONFIG = TieringScaleConfig()
+
+SHAPES = {
+    # C, n_queries, n_docs, sparse M (or None)
+    "solve_dense_m": (131072, 2 ** 20, 2 ** 23, None),
+    "solve_dense_l": (2 ** 20, 2 ** 22, 2 ** 26, None),
+    "solve_optpes_l": (2 ** 20, 2 ** 22, 2 ** 26, None),
+    "solve_sparse_xl": (2 ** 20, 2 ** 22, 2 ** 28, 4096),
+    "serve_route": None,
+}
+
+
+def _cell(shape: str, mesh) -> R.Cell:
+    dp = mesh_lib.data_axes(mesh)
+    if shape == "serve_route":
+        # B bounded: a packed-postings AND-scan reads L*Wd words per query;
+        # production match uses compressed postings — this cell sizes the
+        # packed-Tier-1 regime (4M docs).
+        b, v, nd, k = 4096, 2 ** 17, 2 ** 22, 2 ** 16
+        wv, wd = v // 32, nd // 32
+        return R.Cell("solve", {
+            "tokens": R.sds((b, 8), R.i32),
+            "clause_vocab_bits": R.sds((k, wv), u32),
+            "postings": R.sds((v, wd), u32),
+            "tier1_mask": R.sds((wd,), u32),
+        }, {
+            "tokens": P(dp, None),
+            "clause_vocab_bits": P(dp, None),
+            "postings": P(None, "model"),
+            "tier1_mask": P(None),
+        })
+    c, nq, nd, m = SHAPES[shape]
+    wq, wd = nq // 32, nd // 32
+    inputs = {
+        "clause_query_bits": R.sds((c, wq), u32),
+        "query_weights": R.sds((nq,), R.f32),
+        "covered_q": R.sds((wq,), u32),
+        "covered_d": R.sds((wd,), u32),
+        "selected": R.sds((c,), BOOL),
+        "g_used": R.sds((), R.f32),
+        "budget": R.sds((), R.f32),
+    }
+    specs = {
+        "clause_query_bits": P(dp, "model"),
+        "query_weights": P(None),
+        "covered_q": P(None),
+        "covered_d": P(None),
+        "selected": P(dp),
+        "g_used": P(),
+        "budget": P(),
+    }
+    if m is not None:
+        inputs["clause_doc_ids"] = R.sds((c, m), R.i32)
+        specs["clause_doc_ids"] = P(dp, None)
+    else:
+        inputs["clause_doc_bits"] = R.sds((c, wd), u32)
+        specs["clause_doc_bits"] = P(dp, "model")
+    if shape == "solve_optpes_l":
+        for nm in ("fbar", "flow", "gbar", "glow"):
+            inputs[nm] = R.sds((c,), R.f32)
+            specs[nm] = P(dp)
+    return R.Cell("solve", inputs, specs)
+
+
+def solve_fn(shape: str):
+    """Returns fn(batch) for lowering (no trainable params)."""
+    from repro.core import bitset
+    from repro.core.greedy import ratio_of
+    from repro.core.sparse_step import sparse_greedy_step
+    from repro.kernels import ops
+
+    if shape == "serve_route":
+        def route(batch):
+            from repro.serve import matching
+            toks = batch["tokens"]
+            b = toks.shape[0]
+            wv = batch["clause_vocab_bits"].shape[1]
+            # query bits over vocab (subset test needs packed queries)
+            qbits = jax.vmap(
+                lambda t: bitset.from_indices(
+                    jnp.maximum(t, 0), wv * 32, valid=t >= 0, unique=True))(toks)
+            sub = jax.vmap(
+                lambda q: bitset.is_subset(batch["clause_vocab_bits"],
+                                           q[None, :]).any())(qbits)
+            m2 = matching.match_batch(batch["postings"], toks)
+            m1 = m2 & batch["tier1_mask"][None, :]
+            return jnp.where(sub[:, None], m1, m2), sub
+        return route
+
+    if shape == "solve_sparse_xl":
+        def sparse(batch):
+            return sparse_greedy_step(
+                batch["clause_doc_ids"], batch["clause_query_bits"],
+                batch["query_weights"], batch["covered_q"],
+                batch["covered_d"], batch["selected"], batch["g_used"],
+                batch["budget"])
+        return sparse
+
+    if shape == "solve_optpes_l":
+        def optpes(batch):
+            from repro.core.optpes import optpes_round
+            from repro.core.problem import SCSKProblem
+            wq = batch["clause_query_bits"].shape[1]
+            nq = batch["query_weights"].shape[0]
+            wpad = jnp.zeros(wq * 32, jnp.float32).at[:nq].set(
+                batch["query_weights"])
+            prob = SCSKProblem(
+                clause_query_bits=batch["clause_query_bits"],
+                clause_doc_bits=batch["clause_doc_bits"],
+                query_weights=wpad, test_weights=wpad,
+                n_queries=nq, n_docs=batch["covered_d"].shape[0] * 32)
+            state = (batch["covered_q"], batch["covered_d"],
+                     batch["selected"], batch["g_used"],
+                     batch["fbar"], batch["flow"], batch["gbar"],
+                     batch["glow"], jnp.float32(0.0))
+            return optpes_round(prob, state, batch["budget"],
+                                k=CONFIG.refresh_k)
+        return optpes
+
+    def dense(batch):
+        # gains inside shard_map: the chunked bit-matvec runs on LOCAL
+        # [C/dp, Wq/tp] blocks (no resharding of the scan chunks — the
+        # baseline pjit version let XLA reshard every W-chunk: 0.62 TB of
+        # all-gathers per round, §Perf); one psum over 'model' combines
+        # partial gains (C·4B — trivial).
+        from repro.distributed import mesh_context
+        from repro.launch import mesh as mesh_lib
+        from repro.models.moe import shard_map
+
+        mesh = mesh_context.current_mesh()
+        dp = mesh_lib.data_axes(mesh)
+        x = (batch["query_weights"] * (
+            1.0 - bitset.unpack(batch["covered_q"]).astype(jnp.float32)
+        )[:batch["query_weights"].shape[0]])[:, None]
+
+        if mesh.size > 1 and "model" in mesh.axis_names:
+            def gains(a_q, a_d, xw, cov_d):
+                fg_p = ops.bit_matvec(a_q, xw)[:, 0]
+                gg_p = ops.coverage_gain(a_d, cov_d).astype(jnp.float32)
+                return (jax.lax.psum(fg_p, "model"),
+                        jax.lax.psum(gg_p, "model"))
+
+            fg, gg = shard_map(
+                gains, mesh,
+                in_specs=(P(dp, "model"), P(dp, "model"),
+                          P("model"), P("model")),
+                out_specs=(P(dp), P(dp)),
+            )(batch["clause_query_bits"], batch["clause_doc_bits"],
+              x, batch["covered_d"])
+        else:
+            fg = ops.bit_matvec(batch["clause_query_bits"], x)[:, 0]
+            gg = ops.coverage_gain(batch["clause_doc_bits"],
+                                   batch["covered_d"]).astype(jnp.float32)
+        feasible = (~batch["selected"]) & \
+            (batch["g_used"] + gg <= batch["budget"]) & (fg > 0.0)
+        score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
+        j = jnp.argmax(score)
+        if mesh.size > 1 and "model" in mesh.axis_names:
+            # A[j] at a traced index on a (dp x model)-sharded operand makes
+            # XLA all-gather the WHOLE matrix (512 GB here — §Perf); instead
+            # the owning dp-rank dynamic-slices locally and a [W]-sized psum
+            # broadcasts the row.
+            row_q = _select_row(mesh, dp, batch["clause_query_bits"], j)
+            row_d = _select_row(mesh, dp, batch["clause_doc_bits"], j)
+        else:
+            row_q = batch["clause_query_bits"][j]
+            row_d = batch["clause_doc_bits"][j]
+        covered_q = batch["covered_q"] | row_q
+        covered_d = batch["covered_d"] | row_d
+        return covered_q, covered_d, batch["selected"].at[j].set(True), j
+    return dense
+
+
+def _select_row(mesh, dp, mat, j):
+    from repro.models.moe import shard_map
+
+    def body(a, jj):
+        rank = jnp.int32(0)
+        for ax in dp:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        c_loc = a.shape[0]
+        local_j = jj - rank * c_loc
+        inb = (local_j >= 0) & (local_j < c_loc)
+        row = a[jnp.clip(local_j, 0, c_loc - 1)]
+        row = jnp.where(inb, row, jnp.zeros_like(row))
+        for ax in dp:                       # only the owner contributes
+            row = jax.lax.psum(row, ax)
+        return row
+
+    return shard_map(body, mesh,
+                     in_specs=(P(dp, "model"), P()),
+                     out_specs=P("model"), check_vma=False)(mat, j)
+
+
+def _smoke():
+    # exercised through the core solver tests; smoke = tiny dense round
+    rng = np.random.default_rng(0)
+    c, nq, nd = 64, 256, 512
+    batch = {
+        "clause_query_bits": jnp.asarray(
+            rng.integers(0, 2 ** 32, (c, nq // 32), dtype=np.uint32)),
+        "clause_doc_bits": jnp.asarray(
+            rng.integers(0, 2 ** 32, (c, nd // 32), dtype=np.uint32)),
+        "query_weights": jnp.asarray(rng.random(nq), jnp.float32),
+        "covered_q": jnp.zeros(nq // 32, u32),
+        "covered_d": jnp.zeros(nd // 32, u32),
+        "selected": jnp.zeros(c, bool),
+        "g_used": jnp.float32(0),
+        "budget": jnp.float32(nd),
+    }
+    return CONFIG, batch, "solve"
+
+
+R.register(R.ArchSpec(
+    name="tiering-scsk", family="tiering",
+    shapes=tuple(SHAPES.keys()), skips={},
+    config_for=lambda shape: CONFIG,
+    cell_for=_cell,
+    loss_fn=None,
+    serve_fn=lambda cfg, shape: (lambda params, batch: solve_fn(shape)(batch)),
+    abstract_params=lambda cfg: {},
+    param_specs=lambda cfg: {},
+    optimizer="adamw",
+    smoke=_smoke,
+))

@@ -1,0 +1,78 @@
+"""two-tower-retrieval [recsys]: embed_dim=256 tower_mlp=1024-512-256
+interaction=dot, sampled-softmax retrieval [RecSys'19 YouTube].
+
+This is the arch the paper's technique integrates with first-class:
+`retrieval_cand` has a tiered variant (models/tiered_retrieval.py) where
+Tier-1 candidates are selected by the SCSK solver — see §Perf hillclimb."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import mesh as mesh_lib
+from repro.models import recsys as M
+
+CONFIG = M.TwoTowerConfig()
+
+
+def _cell(shape: str, mesh) -> R.Cell:
+    dp = mesh_lib.data_axes(mesh)
+    fu, fi = CONFIG.n_user_fields, CONFIG.n_item_fields
+    if shape in R.RECSYS_BATCH:
+        b = R.RECSYS_BATCH[shape]
+        kind = "train" if shape == "train_batch" else "serve"
+        inputs = {"user_ids": R.sds((b, fu), R.i32),
+                  "item_ids": R.sds((b, fi), R.i32)}
+        specs = {"user_ids": P(dp, None), "item_ids": P(dp, None)}
+        if kind == "train":
+            inputs["item_logq"] = R.sds((b,), R.f32)
+            specs["item_logq"] = P(dp)
+        return R.Cell(kind, inputs, specs)
+    if shape == "retrieval_cand_tiered":
+        # paper technique: Tier-1 = budget-frac of the corpus (B = |D|/2)
+        n1 = R.N_CANDIDATES // 2
+        return R.Cell("serve", {
+            "user_ids": R.sds((1, fu), R.i32),
+            "tier1_emb": R.sds((n1, CONFIG.embed_dim), R.f32),
+            "tier1_ids": R.sds((n1,), R.i32),
+        }, {"user_ids": P(None, None), "tier1_emb": P(dp, None),
+            "tier1_ids": P(dp)})
+    return R.Cell("serve", {
+        "user_ids": R.sds((1, fu), R.i32),
+        "cand_emb": R.sds((R.N_CANDIDATES, CONFIG.embed_dim), R.f32),
+    }, {"user_ids": P(None, None), "cand_emb": P(dp, None)})
+
+
+def _serve(cfg, shape):
+    if shape == "retrieval_cand":
+        return lambda p, b: M.twotower_serve_candidates(p, b, cfg)
+    if shape == "retrieval_cand_tiered":
+        return lambda p, b: M.twotower_serve_candidates_tiered(p, b, cfg)
+    return lambda p, b: M.twotower_serve(p, b, cfg)
+
+
+def _smoke():
+    cfg = M.TwoTowerConfig(n_user_fields=3, n_item_fields=3,
+                           vocab_per_field=50, field_dim=8,
+                           tower_dims=(32, 16), embed_dim=16)
+    rng = np.random.default_rng(0)
+    batch = {"user_ids": jnp.asarray(rng.integers(0, 50, (8, 3)), jnp.int32),
+             "item_ids": jnp.asarray(rng.integers(0, 50, (8, 3)), jnp.int32),
+             "item_logq": jnp.zeros(8, jnp.float32)}
+    return cfg, batch, "train"
+
+
+R.register(R.ArchSpec(
+    name="two-tower-retrieval", family="recsys",
+    shapes=R.RECSYS_SHAPES + ("retrieval_cand_tiered",), skips={},
+    config_for=lambda shape: CONFIG,
+    cell_for=_cell,
+    loss_fn=lambda cfg: (lambda p, b: M.twotower_loss(p, b, cfg)),
+    serve_fn=_serve,
+    abstract_params=lambda cfg: jax.eval_shape(
+        lambda: M.twotower_init(jax.random.key(0), cfg)),
+    param_specs=M.twotower_specs,
+    optimizer="adamw",
+    smoke=_smoke,
+))

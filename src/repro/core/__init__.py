@@ -1,0 +1,18 @@
+from repro.core.agnostic import agnostic_greedy          # noqa: F401
+from repro.core.greedy import greedy, greedy_step        # noqa: F401
+from repro.core.isk import isk                           # noqa: F401
+from repro.core.lazy_greedy import lazy_greedy           # noqa: F401
+from repro.core.optpes import optpes_greedy, optpes_round  # noqa: F401
+from repro.core.problem import SCSKProblem, SolverResult   # noqa: F401
+from repro.core.stochastic import stochastic_greedy      # noqa: F401
+from repro.core.tiering import ClauseTiering             # noqa: F401
+
+SOLVERS = {
+    "greedy": greedy,
+    "lazy": lazy_greedy,
+    "optpes": optpes_greedy,
+    "isk1": lambda p, b, **kw: isk(p, b, variant=1, **kw),
+    "isk2": lambda p, b, **kw: isk(p, b, variant=2, **kw),
+    "agnostic": agnostic_greedy,
+    "stochastic": stochastic_greedy,
+}

@@ -1,0 +1,77 @@
+"""Constraint-Agnostic Greedy (Iyer & Bilmes 2013) — the paper's baseline.
+
+Scores candidates by f-gain only (the cost g never enters the comparison),
+with a classic lazy heap [Minoux 1978]. Feasibility of the popped winner is
+still enforced (g(X ∪ {j}) <= B) — matching the paper's §5.1 description:
+"much faster ... because it ignores the constraint in the selection process,
+[but] converges to a clearly suboptimal solution".
+"""
+from __future__ import annotations
+
+import heapq
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lazy_greedy import _exact_gains_one, _singleton_gains
+from repro.core.problem import SCSKProblem, SolverResult
+
+
+def agnostic_greedy(problem: SCSKProblem, budget: float, *,
+                    max_steps: int | None = None,
+                    time_limit: float | None = None) -> SolverResult:
+    c = problem.n_clauses
+    covered_q, covered_d = problem.empty_state()
+    fbar_d, gg_d = _singleton_gains(problem, covered_q, covered_d)
+    fbar = np.asarray(fbar_d, np.float64)
+    n_exact = 2 * c
+
+    selected = np.zeros(c, bool)
+    order: list[int] = []
+    g_used, f_val = 0.0, 0.0
+    fh, gh, th = [0.0], [0.0], [0.0]
+    t0 = time.perf_counter()
+
+    heap = [(-fbar[j], j) for j in range(c) if fbar[j] > 0]
+    heapq.heapify(heap)
+    steps = max_steps or c
+    for _ in range(steps):
+        chosen = -1
+        while heap:
+            _, j = heapq.heappop(heap)
+            if selected[j]:
+                continue
+            fg, gg = _exact_gains_one(problem, covered_q, covered_d, jnp.int32(j))
+            fbar[j] = float(fg)
+            n_exact += 2
+            if fbar[j] <= 0:
+                continue
+            if g_used + float(gg) > budget:
+                continue                      # infeasible winner: drop
+            if not heap or fbar[j] >= -heap[0][0]:
+                chosen = j
+                break
+            heapq.heappush(heap, (-fbar[j], j))
+        if chosen < 0:
+            break
+        covered_q, covered_d = problem.add_clause(
+            covered_q, covered_d, jnp.int32(chosen))
+        selected[chosen] = True
+        order.append(chosen)
+        f_val += fbar[chosen]
+        g_used = float(problem.g_value(covered_d))
+        fh.append(f_val)
+        gh.append(g_used)
+        th.append(time.perf_counter() - t0)
+        if time_limit is not None and th[-1] > time_limit:
+            break
+
+    return SolverResult(
+        name="constraint-agnostic",
+        selected=selected, order=order,
+        f_final=float(problem.f_value(covered_q)),
+        g_final=g_used,
+        f_history=np.asarray(fh), g_history=np.asarray(gh),
+        time_history=np.asarray(th), n_exact_evals=n_exact,
+    )

@@ -1,0 +1,119 @@
+"""Query-selection (flow) baselines from Leung et al. [17], paper §2.3/§5.2.
+
+All three parameterize tiering by a document set D₁ + the memorized query set
+X^flow = {q ∈ Q_n : m(q) ⊆ D₁} (eq. 6/7) — so unseen queries always route to
+Tier 2, which is exactly the generalization failure the paper demonstrates.
+
+  popularity : doc score = P_{q~Qn}[d ∈ m(q)]; take top-B docs
+  flow-max   : doc score = max_{q: d∈m(q)} P[q]; take top-B docs
+  flow-sgd   : smooth-min convex relaxation of (5), minibatch SGD over doc
+               logits + budget penalty, λ-regularized (drop rare queries)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+
+if typing.TYPE_CHECKING:  # avoid circular import (data imports core.bitset)
+    from repro.data.incidence import TieringData
+
+
+@dataclasses.dataclass
+class FlowResult:
+    name: str
+    tier1_docs: np.ndarray          # bool [n_docs]
+    eligible_queries: np.ndarray    # bool [Nq]  (X^flow membership)
+    train_coverage: float
+    test_coverage: float
+    wall_seconds: float
+
+
+def _doc_scores_popularity(data: "TieringData", chunk: int = 1024) -> np.ndarray:
+    score = np.zeros(data.n_docs, np.float64)
+    w = data.log.train_weights
+    for s in range(0, data.n_queries, chunk):
+        blk = bitset.np_unpack(data.query_doc_bits[s:s + chunk], data.n_docs)
+        score += w[s:s + chunk] @ blk
+    return score
+
+
+def _doc_scores_flowmax(data: "TieringData", chunk: int = 1024) -> np.ndarray:
+    score = np.zeros(data.n_docs, np.float64)
+    w = data.log.train_weights
+    for s in range(0, data.n_queries, chunk):
+        blk = bitset.np_unpack(data.query_doc_bits[s:s + chunk], data.n_docs)
+        score = np.maximum(score, (w[s:s + chunk, None] * blk).max(axis=0))
+    return score
+
+
+def _finalize(name: str, data: "TieringData", doc_scores: np.ndarray, budget: int,
+              t0: float, lam: float = 0.0) -> FlowResult:
+    top = np.argsort(-doc_scores)[:budget]
+    tier1 = np.zeros(data.n_docs, bool)
+    tier1[top] = True
+    t1_bits = bitset.np_pack(tier1)
+    # X^flow: *training* queries (freq >= λ) whose match set fits in tier 1
+    contained = ~np.any(data.query_doc_bits & ~t1_bits[None, :], axis=1)
+    eligible = contained & (data.log.train_weights >= max(lam, 1e-300))
+    return FlowResult(
+        name=name,
+        tier1_docs=tier1,
+        eligible_queries=eligible,
+        train_coverage=float(data.log.train_weights[eligible].sum()),
+        test_coverage=float(data.log.test_weights[eligible].sum()),
+        wall_seconds=time.perf_counter() - t0,
+    )
+
+
+def popularity(data: "TieringData", budget: int) -> FlowResult:
+    t0 = time.perf_counter()
+    return _finalize("popularity", data, _doc_scores_popularity(data), budget, t0)
+
+
+def flow_max(data: "TieringData", budget: int) -> FlowResult:
+    t0 = time.perf_counter()
+    return _finalize("flow-max", data, _doc_scores_flowmax(data), budget, t0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_docs",))
+def _sgd_step(theta, q_bits, q_w, budget, lr, tau, mu, n_docs: int):
+    def loss_fn(theta):
+        z = jax.nn.sigmoid(theta)                                   # [D]
+        memb = bitset.unpack(q_bits, n_docs).astype(jnp.float32)    # [B, D]
+        # smooth min over m(q): -tau * logsumexp(-z/tau) restricted to members
+        neg = (-z[None, :] / tau) * memb + (1.0 - memb) * (-1e9)
+        y = -tau * jax.nn.logsumexp(neg, axis=1)                    # [B]
+        cover = jnp.sum(q_w * y)
+        over = jax.nn.relu(jnp.sum(z) - budget)
+        return -cover + mu * over * over / budget
+    g = jax.grad(loss_fn)(theta)
+    return theta - lr * g
+
+
+def flow_sgd(data: "TieringData", budget: int, *, lam: float = 0.0,
+             steps: int = 300, batch: int = 256, lr: float = 0.5,
+             tau: float = 0.05, mu: float = 10.0, seed: int = 0) -> FlowResult:
+    t0 = time.perf_counter()
+    w = data.log.train_weights.copy()
+    w[w < lam] = 0.0                               # λ-regularization (paper)
+    keep = np.nonzero(w > 0)[0]
+    probs = w[keep] / w[keep].sum()
+    rng = np.random.default_rng(seed)
+    theta = jnp.zeros(data.n_docs, jnp.float32)
+    q_bits_all = jnp.asarray(data.query_doc_bits)
+    for _ in range(steps):
+        idx = keep[rng.choice(len(keep), size=min(batch, len(keep)), p=probs)]
+        theta = _sgd_step(theta, q_bits_all[idx],
+                          jnp.ones(len(idx), jnp.float32) / len(idx),
+                          jnp.float32(budget), jnp.float32(lr),
+                          jnp.float32(tau), jnp.float32(mu), data.n_docs)
+    return _finalize(f"flow-sgd(λ={lam:g})", data,
+                     np.asarray(theta, np.float64), budget, t0, lam=lam)

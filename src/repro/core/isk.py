@@ -1,0 +1,141 @@
+"""Iterative Submodular Knapsack — paper Algorithm 3 (Iyer & Bilmes 2013).
+
+The submodular cost g is replaced by a modular upper bound that is tight at
+the current solution X_t (eq. 15):
+
+  ĝ₁: cost g(j|X_t∖j) for kept items, g({j}) for new items
+  ĝ₂: cost g(j|X̄∖j)  for kept items, g(j|X_t) for new items
+
+Since ĝ ≥ g everywhere, every inner solution is feasible for the true
+constraint. The inner problem — max f(X) s.t. modular cost ≤ B' — is a plain
+submodular knapsack solved with a batched cost-ratio greedy.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.core.greedy import ratio_of
+from repro.core.problem import SCSKProblem, SolverResult
+
+
+@functools.partial(jax.jit, donate_argnames=())
+def _knapsack_step(problem: SCSKProblem, covered_q, selected, spent, w, b_eff):
+    fg = problem.f_gains(covered_q)
+    feasible = (~selected) & (spent + w <= b_eff) & (fg > 0.0)
+    score = jnp.where(feasible, ratio_of(fg, w), -jnp.inf)
+    j = jnp.argmax(score)
+    stop = ~feasible[j]
+    cq = covered_q | problem.clause_query_bits[j]
+    covered_q = jnp.where(stop, covered_q, cq)
+    selected = selected.at[j].set(jnp.where(stop, selected[j], True))
+    spent = jnp.where(stop, spent, spent + w[j])
+    return covered_q, selected, spent, stop
+
+
+def _modular_knapsack(problem: SCSKProblem, w: jax.Array, b_eff: float,
+                      max_steps: int) -> np.ndarray:
+    covered_q = jnp.zeros(problem.wq, jnp.uint32)
+    selected = jnp.zeros(problem.n_clauses, bool)
+    spent = jnp.float32(0.0)
+    w = w.astype(jnp.float32)
+    b_eff = jnp.float32(b_eff)
+    for _ in range(max_steps):
+        covered_q, selected, spent, stop = _knapsack_step(
+            problem, covered_q, selected, spent, w, b_eff)
+        if bool(stop):
+            break
+    return np.asarray(selected)
+
+
+@jax.jit
+def _or_except_one(rows: jax.Array) -> jax.Array:
+    """[T, W] -> [T, W]: OR of all rows except row t (prefix/suffix trick)."""
+    t = rows.shape[0]
+    zeros = jnp.zeros((1, rows.shape[1]), rows.dtype)
+
+    def scan_or(carry, row):
+        return carry | row, carry
+    _, prefix = jax.lax.scan(scan_or, zeros[0], rows)
+    _, suffix = jax.lax.scan(scan_or, zeros[0], rows, reverse=True)
+    return prefix | suffix
+
+
+@jax.jit
+def _coverage_counts(rows: jax.Array) -> jax.Array:
+    """[C, W] packed -> int32 [W*32]: per-doc cover multiplicity."""
+    def body(acc, row):
+        return acc + bitset.unpack(row).astype(jnp.int32), None
+    acc0 = jnp.zeros(rows.shape[1] * 32, jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, rows)
+    return acc
+
+
+def isk(problem: SCSKProblem, budget: float, *, variant: int = 1,
+        max_outer: int = 10, max_inner: int | None = None,
+        time_limit: float | None = None) -> SolverResult:
+    assert variant in (1, 2)
+    c = problem.n_clauses
+    singleton_g = problem.g_gains(jnp.zeros(problem.wd, jnp.uint32))
+    if variant == 2:
+        # g(j | X̄∖j) = #docs covered *only* by clause j — precomputable
+        counts = _coverage_counts(problem.clause_doc_bits)            # [Wd*32]
+        only_once = (counts == 1).astype(jnp.float32)
+        w_kept_global = problem.f_gains(                              # reuse matvec
+            jnp.zeros(problem.wd, jnp.uint32), rows=problem.clause_doc_bits,
+            weights=only_once)
+
+    selected = np.zeros(c, bool)
+    fh, gh, th = [0.0], [0.0], [0.0]
+    t0 = time.perf_counter()
+    f_final, g_final = 0.0, 0.0
+    max_inner = max_inner or c
+
+    for _ in range(max_outer):
+        sel_idx = np.nonzero(selected)[0]
+        covered_d = (bitset.or_rows(problem.clause_doc_bits[sel_idx], axis=0)
+                     if len(sel_idx) else jnp.zeros(problem.wd, jnp.uint32))
+        g_xt = float(problem.g_value(covered_d))
+
+        w = np.asarray(singleton_g, np.float64).copy() if variant == 1 \
+            else np.asarray(problem.g_gains(covered_d), np.float64)
+        if len(sel_idx):
+            if variant == 1:
+                rows = problem.clause_doc_bits[sel_idx]
+                others = _or_except_one(rows)
+                kept = problem.g_gains(jnp.zeros(problem.wd, jnp.uint32),
+                                       rows=rows & ~others)
+                w[sel_idx] = np.asarray(kept, np.float64)
+            else:
+                w[sel_idx] = np.asarray(w_kept_global, np.float64)[sel_idx]
+        b_eff = budget - g_xt + float(w[sel_idx].sum()) if len(sel_idx) else budget
+
+        new_sel = _modular_knapsack(problem, jnp.asarray(w), b_eff, max_inner)
+        sel_idx2 = np.nonzero(new_sel)[0]
+        covered_d2 = (bitset.or_rows(problem.clause_doc_bits[sel_idx2], axis=0)
+                      if len(sel_idx2) else jnp.zeros(problem.wd, jnp.uint32))
+        covered_q2 = (bitset.or_rows(problem.clause_query_bits[sel_idx2], axis=0)
+                      if len(sel_idx2) else jnp.zeros(problem.wq, jnp.uint32))
+        f_final = float(problem.f_value(covered_q2))
+        g_final = float(problem.g_value(covered_d2))
+        fh.append(f_final)
+        gh.append(g_final)
+        th.append(time.perf_counter() - t0)
+        if np.array_equal(new_sel, selected):
+            break
+        selected = new_sel
+        if time_limit is not None and th[-1] > time_limit:
+            break
+
+    return SolverResult(
+        name=f"isk{variant}",
+        selected=selected, order=list(np.nonzero(selected)[0]),
+        f_final=f_final, g_final=g_final,
+        f_history=np.asarray(fh), g_history=np.asarray(gh),
+        time_history=np.asarray(th),
+    )

@@ -1,0 +1,115 @@
+"""SCSKProblem: device-resident operands + batched marginal-gain oracles.
+
+The paper's objective/constraint pair (eq. 12):
+    f(X) = P_{q~Qn}[∃c∈X: c ⊆ q]      (monotone submodular, Thm 3.3)
+    g(X) = |∪_{c∈X} m(c)|             (set cover, monotone submodular, Thm 3.4)
+
+State is two packed bitsets (covered queries, covered docs). Marginal gains
+are one fused kernel call each:
+    f(j|X) for all j = A_q  @ (w ⊙ uncovered_q)   (weighted bit-matvec)
+    g(j|X) for all j = popcount(A_d & ~covered_d)  (AND-NOT popcount)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.kernels import ops
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["clause_query_bits", "clause_doc_bits", "query_weights",
+                 "test_weights"],
+    meta_fields=["n_queries", "n_docs"],
+)
+@dataclasses.dataclass(frozen=True)
+class SCSKProblem:
+    clause_query_bits: jax.Array    # uint32 [C, Wq]
+    clause_doc_bits: jax.Array      # uint32 [C, Wd]
+    query_weights: jax.Array        # f32 [Wq*32] (zero-padded empirical probs)
+    test_weights: jax.Array         # f32 [Wq*32] (test-split probs, eval only)
+    n_queries: int
+    n_docs: int
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_data(cls, data) -> "SCSKProblem":
+        """From data.incidence.TieringData."""
+        wq = data.clause_query_bits.shape[1]
+        wtr = np.zeros(wq * 32, np.float32)
+        wtr[:data.n_queries] = data.log.train_weights
+        wte = np.zeros(wq * 32, np.float32)
+        wte[:data.n_queries] = data.log.test_weights
+        return cls(
+            clause_query_bits=jnp.asarray(data.clause_query_bits),
+            clause_doc_bits=jnp.asarray(data.clause_doc_bits),
+            query_weights=jnp.asarray(wtr),
+            test_weights=jnp.asarray(wte),
+            n_queries=data.n_queries,
+            n_docs=data.n_docs,
+        )
+
+    # -- shapes ---------------------------------------------------------------
+    @property
+    def n_clauses(self) -> int:
+        return self.clause_query_bits.shape[0]
+
+    @property
+    def wq(self) -> int:
+        return self.clause_query_bits.shape[1]
+
+    @property
+    def wd(self) -> int:
+        return self.clause_doc_bits.shape[1]
+
+    def empty_state(self):
+        return (jnp.zeros(self.wq, jnp.uint32), jnp.zeros(self.wd, jnp.uint32))
+
+    # -- oracles --------------------------------------------------------------
+    def f_gains(self, covered_q: jax.Array, *, rows: jax.Array | None = None,
+                weights: jax.Array | None = None) -> jax.Array:
+        """Weighted f(j|X) for all clauses (or a gathered row subset)."""
+        w = self.query_weights if weights is None else weights
+        x = w * (1.0 - bitset.unpack(covered_q).astype(jnp.float32))
+        a = self.clause_query_bits if rows is None else rows
+        return ops.bit_matvec(a, x[:, None])[:, 0]
+
+    def g_gains(self, covered_d: jax.Array, *, rows: jax.Array | None = None) -> jax.Array:
+        """g(j|X) for all clauses (or a gathered row subset)."""
+        a = self.clause_doc_bits if rows is None else rows
+        return ops.coverage_gain(a, covered_d).astype(jnp.float32)
+
+    def f_value(self, covered_q: jax.Array, *, weights: jax.Array | None = None) -> jax.Array:
+        w = self.query_weights if weights is None else weights
+        return jnp.sum(w * bitset.unpack(covered_q).astype(jnp.float32))
+
+    def g_value(self, covered_d: jax.Array) -> jax.Array:
+        return bitset.popcount(covered_d).sum().astype(jnp.float32)
+
+    def add_clause(self, covered_q: jax.Array, covered_d: jax.Array, j: jax.Array):
+        return (covered_q | self.clause_query_bits[j],
+                covered_d | self.clause_doc_bits[j])
+
+
+@dataclasses.dataclass
+class SolverResult:
+    """Common result record for every solver (drives Figs. 2/3/5)."""
+    name: str
+    selected: np.ndarray            # bool [C]
+    order: list[int]                # selection order (greedy family)
+    f_final: float
+    g_final: float
+    f_history: np.ndarray
+    g_history: np.ndarray
+    time_history: np.ndarray        # cumulative wall seconds per recorded point
+    n_exact_evals: int = 0          # marginal-gain evaluations (laziness metric)
+
+    def summary(self) -> str:
+        return (f"{self.name}: f={self.f_final:.4f} g={self.g_final:.0f} "
+                f"|X|={int(self.selected.sum())} evals={self.n_exact_evals}")

@@ -1,0 +1,112 @@
+"""Production-scale sparse SCSK solver round (dry-run unit for tiering arch).
+
+At |D| ~ 2^26+ the dense clause x doc bitset matrix is infeasible; each
+clause carries m(c) as a padded id list and the covered-doc state stays one
+packed bitset. This module is the shard-ready greedy round over that layout:
+clause lists sharded over ('pod','data'); the covered masks replicated
+(|D|/8 bytes); f-side incidence packed bits sharded over 'model'.
+
+Mesh-aware paths (same pathology class as EXPERIMENTS §Perf H3): the f-gain
+bit-matvec runs shard-locally with one psum, and the selected clause's rows
+are owner-gathered — a traced-index gather on a sharded operand would
+all-gather the whole matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.greedy import ratio_of
+from repro.kernels import ops
+
+P = jax.sharding.PartitionSpec
+
+
+def _mesh_dp():
+    from repro.distributed import mesh_context
+    mesh = mesh_context.current_mesh()
+    if mesh.size == 1 or "model" not in mesh.axis_names:
+        return None, ()
+    return mesh, tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _f_gains(clause_query_bits, x):
+    mesh, dp = _mesh_dp()
+    if mesh is None:
+        return ops.bit_matvec(clause_query_bits, x)[:, 0]
+    from repro.models.moe import shard_map
+
+    def body(a_q, xw):
+        return jax.lax.psum(ops.bit_matvec(a_q, xw)[:, 0], "model")
+
+    return shard_map(body, mesh,
+                     in_specs=(P(dp, "model"), P("model")),
+                     out_specs=P(dp), check_vma=False)(clause_query_bits, x)
+
+
+def _owner_row(mat, j, *, w_axis: str | None):
+    """Row `j` of a dp-sharded matrix without an all-gather."""
+    mesh, dp = _mesh_dp()
+    if mesh is None:
+        return mat[j]
+    from repro.models.moe import shard_map
+
+    def body(a, jj):
+        rank = jnp.int32(0)
+        for ax in dp:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        c_loc = a.shape[0]
+        lj = jj - rank * c_loc
+        inb = (lj >= 0) & (lj < c_loc)
+        row = jnp.where(inb, a[jnp.clip(lj, 0, c_loc - 1)],
+                        jnp.zeros_like(a[0]) if a.dtype != jnp.int32
+                        else jnp.full_like(a[0], -1))
+        if a.dtype == jnp.int32:
+            # -1-padded id rows: combine via max (non-owners hold -1)
+            for ax in dp:
+                row = jax.lax.pmax(row, ax)
+        else:
+            for ax in dp:
+                row = jax.lax.psum(row, ax)
+        return row
+
+    return shard_map(
+        body, mesh,
+        in_specs=(P(dp, w_axis), P()),
+        out_specs=P(w_axis), check_vma=False)(mat, j)
+
+
+@jax.jit
+def sparse_greedy_step(
+    clause_doc_ids: jnp.ndarray,     # int32 [C, M] (-1 padded, sorted)
+    clause_query_bits: jnp.ndarray,  # uint32 [C, Wq]
+    query_weights: jnp.ndarray,      # f32 [Wq*32]
+    covered_q: jnp.ndarray,          # uint32 [Wq]
+    covered_d: jnp.ndarray,          # uint32 [Wd]
+    selected: jnp.ndarray,           # bool [C]
+    g_used: jnp.ndarray,             # f32
+    budget: jnp.ndarray,             # f32
+):
+    """One cost-ratio greedy selection over the sparse layout."""
+    x = (query_weights * (1.0 - bitset.unpack(covered_q).astype(jnp.float32))
+         )[:, None]
+    fg = _f_gains(clause_query_bits, x)
+    gg = ops.sparse_gain(clause_doc_ids, covered_d).astype(jnp.float32)
+    feasible = (~selected) & (g_used + gg <= budget) & (fg > 0.0)
+    score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
+    j = jnp.argmax(score)
+    stop = ~feasible[j]
+
+    ids_j = _owner_row(clause_doc_ids, j, w_axis=None)
+    row_q = _owner_row(clause_query_bits, j, w_axis="model") \
+        if _mesh_dp()[0] is not None else clause_query_bits[j]
+    new_d = covered_d | bitset.from_indices(
+        jnp.maximum(ids_j, 0), covered_d.shape[0] * 32, valid=ids_j >= 0,
+        unique=True)  # match-set id lists are sorted+unique by construction
+    new_q = covered_q | row_q
+    covered_q = jnp.where(stop, covered_q, new_q)
+    covered_d = jnp.where(stop, covered_d, new_d)
+    selected = selected.at[j].set(jnp.where(stop, selected[j], True))
+    g_used = jnp.where(stop, g_used, g_used + gg[j])
+    return covered_q, covered_d, selected, g_used, j, stop

@@ -1,0 +1,85 @@
+"""Sharding utilities: FSDP-augmented param specs, opt-state spec derivation.
+
+Model modules publish TP ('model'-axis) PartitionSpecs; `add_fsdp` shards the
+big matrices' contraction dim over 'data' on top (ZeRO-3-style storage;
+XLA SPMD inserts the gather-on-use all-gathers). Optimizer-state specs are
+derived from param specs by shape matching (Adafactor's factored vr/vc drop
+one axis of the param spec).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def add_fsdp(specs, abstract_params, mesh, *, min_size: int = 2 ** 20):
+    """Shard the first currently-unsharded dim that divides the 'data' axis,
+    for every param with >= min_size elements."""
+    if "data" not in mesh.axis_names:
+        return specs
+    dp = tuple(a for a in mesh.axis_names if a != "model")  # ('pod','data')
+    n_data = 1
+    for a in dp:
+        n_data *= mesh.shape[a]
+
+    def one(spec: P, leaf):
+        shape = leaf.shape
+        if np.prod(shape) < min_size:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, pspec) in enumerate(zip(shape, parts)):
+            # dim >= 128 excludes the scanned layer-stack axis (slicing a
+            # 'data'-sharded leading axis inside scan would collective every
+            # layer) and keeps small tensors replicated.
+            if pspec is None and dim % n_data == 0 and dim >= 128:
+                parts[i] = dp if len(dp) > 1 else dp[0]
+                return P(*parts)
+        return spec
+
+    s_leaves, treedef = jax.tree.flatten(specs,
+                                         is_leaf=lambda x: isinstance(x, P))
+    p_leaves = treedef.flatten_up_to(abstract_params)
+    return jax.tree.unflatten(
+        treedef, [one(s, p) for s, p in zip(s_leaves, p_leaves)])
+
+
+def opt_state_specs(param_specs, abstract_params, abstract_opt):
+    """Match every optimizer-state leaf to its param's spec by shape."""
+    p_specs = {tuple(l.shape): s for s, l in zip(
+        jax.tree.leaves(param_specs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.leaves(abstract_params))}
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if shape in p_specs:
+            return p_specs[shape]
+        # factored second moments: param spec minus one trailing axis
+        for pshape, spec in p_specs.items():
+            parts = list(spec) + [None] * (len(pshape) - len(spec))
+            if shape == pshape[:-1]:                      # vr
+                return P(*parts[:-1])
+            if shape == pshape[:-2] + pshape[-1:]:        # vc
+                return P(*(parts[:-2] + parts[-1:]))
+        return P()                                        # scalars etc.
+
+    return jax.tree.map(one, abstract_opt)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(mesh, param_specs, abstract_state):
+    """Shardings for a trainer state {params, opt, ef, step}."""
+    out = {
+        "params": param_specs,
+        "opt": opt_state_specs(param_specs, abstract_state["params"],
+                               abstract_state["opt"]),
+        "ef": opt_state_specs(param_specs, abstract_state["params"],
+                              abstract_state["ef"]),
+        "step": P(),
+    }
+    return named(mesh, out)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: packed-bit matrix x dense matrix (weighted coverage gains).
+
+The SCSK gain oracle is `gains = A @ (w * uncovered)` where A is a {0,1}
+clause-incidence matrix. Storing A as packed uint32 gives a 32x reduction in
+HBM traffic versus an int8/bf16 materialization — the op is memory-bound, so
+this is a direct 32x on the dominant roofline term. Inside the kernel each
+VMEM tile is unpacked to f32 on the fly and fed to the MXU as a [BC, BW*32]
+x [BW*32, R] matmul.
+
+Tiling:
+  grid = (C/BC, W/BW); W is the minor (sequential) axis so the [BC, R] output
+  tile stays resident and accumulates across W-blocks.
+  VMEM per step: BC*BW*4 (packed A) + BW*32*R*4 (x) + BC*BW*32*4 (unpacked
+  scratch, compiler-managed) + BC*R*4 (acc). Defaults BC=128, BW=128 give a
+  working set of ~2.2 MB << 16 MB VMEM and a 4096-wide MXU contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD = 32
+
+
+def _kernel(a_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                                   # [BC, BW] uint32
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (a[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bits = bits.reshape(a.shape[0], -1).astype(jnp.float32)   # [BC, BW*32]
+    x = x_ref[...]                                   # [BW*32, R] f32
+    o_ref[...] += jnp.dot(bits, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_w", "interpret"))
+def bit_matvec(
+    a_bits: jnp.ndarray,       # uint32 [C, W]
+    x: jnp.ndarray,            # f32 [W*32, R]
+    *,
+    block_c: int = 128,
+    block_w: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:              # f32 [C, R]
+    c, w = a_bits.shape
+    wb, r = x.shape
+    assert wb == w * WORD, (a_bits.shape, x.shape)
+    bc = min(block_c, c)
+    bw = min(block_w, w)
+    # pad to tile multiples; zero words / zero x rows contribute nothing.
+    cp = -c % bc
+    wp = -w % bw
+    if cp or wp:
+        a_bits = jnp.pad(a_bits, ((0, cp), (0, wp)))
+        x = jnp.pad(x, ((0, wp * WORD), (0, 0)))
+    grid = ((c + cp) // bc, (w + wp) // bw)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((bw * WORD, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((c + cp), r), jnp.float32),
+        interpret=interpret,
+    )(a_bits, x)
+    return out[:c]

@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention: GQA + causal + sliding window + logit softcap.
+
+Same contract as models/common.chunked_attention (the XLA fallback) and
+kernels/ref.flash_attention (the oracle). Online-softmax accumulators (m, l,
+acc) live in VMEM scratch and persist across the KV grid axis; fully-masked
+KV blocks are skipped under the causal/window structure (the classic
+flash-attention block-skipping that the XLA path cannot express).
+
+Layout: heads are grouped GQA-style — inputs are reshaped to
+  q   [B, Hkv, G, Sq, D]
+  k,v [B, Hkv, Skv, D]
+grid = (B, Hkv, Sq/bq, Skv/bk), KV minor (sequential) for accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, n_k: int, causal: bool, window: int | None,
+            cap: float | None, q_offset: int, scale: float, kv_valid: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_valid          # padded KV columns contribute nothing
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)             # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)             # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [G, bq, bk]
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        s = jnp.where(mask[None], s, NEG)
+        m_prev = m_ref[...]                              # [G, bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [G, bq, D]
+        m_ref[...] = m_new
+
+    if causal or window is not None:
+        # block-level skip: first/last kv positions this block could touch
+        blk_q_lo = iq * bq + q_offset
+        blk_q_hi = blk_q_lo + bq - 1
+        blk_k_lo = ik * bk
+        live = jnp.bool_(True)
+        if causal:
+            live &= blk_k_lo <= blk_q_hi
+        if window is not None:
+            blk_k_hi = blk_k_lo + bk - 1
+            live &= blk_k_hi > blk_q_lo - window
+        pl.when(live)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[..., None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,                 # [B, Sq, Hq, D]
+    k: jnp.ndarray,                 # [B, Skv, Hkv, D]
+    v: jnp.ndarray,                 # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    from jax.experimental.pallas import tpu as pltpu
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    qp = (-sq) % bq
+    kp = (-skv) % bk
+    qh = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if qp:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, qp), (0, 0)))
+    if kp:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    n_q = (sq + qp) // bq
+    n_k = (skv + kp) // bk
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, n_k=n_k, causal=causal, window=window,
+        cap=softcap, q_offset=q_offset, scale=1.0 / np.sqrt(d),
+        kv_valid=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, bq, d), lambda b_, h, i, j: (b_, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, bq, d),
+                               lambda b_, h, i, j: (b_, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, sq + qp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :, :, :sq, :].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,89 @@
+"""Backend dispatch for the kernel package.
+
+Three execution paths per op:
+  * "pallas"     — real TPU lowering (pl.pallas_call, interpret=False)
+  * "interpret"  — Pallas interpret mode (kernel body evaluated on CPU);
+                   used by tests to validate the TPU kernel logic
+  * "xla"        — pure-jnp reference (chunked where memory-naive), the
+                   default on CPU hosts and the path dry-run lowering uses
+
+Default resolution: pallas on TPU backends, xla elsewhere. Override with the
+env var REPRO_KERNEL_BACKEND or the per-call `backend=` argument.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bit_matvec as _bm
+from repro.kernels import coverage_gain as _cg
+from repro.kernels import ref as _ref
+from repro.kernels import sparse_gain as _sg
+
+WORD = 32
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    b = backend or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert b in ("pallas", "interpret", "xla"), b
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_w",))
+def _bit_matvec_xla(a_bits: jnp.ndarray, x: jnp.ndarray, chunk_w: int = 256) -> jnp.ndarray:
+    """Chunked unpack+matmul so the f32 unpack never exceeds ~C*chunk_w*128B."""
+    c, w = a_bits.shape
+    cw = min(chunk_w, w)
+    pad = -w % cw
+    if pad:
+        a_bits = jnp.pad(a_bits, ((0, 0), (0, pad)))
+        x = jnp.pad(x, ((0, pad * WORD), (0, 0)))
+    nw = (w + pad) // cw
+    a_c = a_bits.reshape(c, nw, cw).transpose(1, 0, 2)        # [nw, C, cw]
+    x_c = x.reshape(nw, cw * WORD, x.shape[-1])               # [nw, cw*32, R]
+
+    def body(acc, operand):
+        a_blk, x_blk = operand
+        return acc + _ref.unpack_bits_f32(a_blk) @ x_blk, None
+
+    # init inherits the inputs' varying-manual-axes (shard_map vma tracking):
+    # a plain zeros carry would mismatch the body output type inside shard_map
+    init = (jnp.zeros((c, x.shape[-1]), jnp.float32)
+            + x[:1, :] * 0.0 + a_bits[:, :1].astype(jnp.float32) * 0.0)
+    acc, _ = jax.lax.scan(body, init, (a_c, x_c))
+    return acc
+
+
+def bit_matvec(a_bits: jnp.ndarray, x: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C, R] = unpack(a_bits [C, W]) @ x [W*32, R]."""
+    b = resolve_backend(backend)
+    if b == "pallas":
+        return _bm.bit_matvec(a_bits, x)
+    if b == "interpret":
+        return _bm.bit_matvec(a_bits, x, interpret=True)
+    return _bit_matvec_xla(a_bits, x)
+
+
+def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C] = popcount(a_bits & ~mask)."""
+    b = resolve_backend(backend)
+    if b == "pallas":
+        return _cg.coverage_gain(a_bits, mask)
+    if b == "interpret":
+        return _cg.coverage_gain(a_bits, mask, interpret=True)
+    return _ref.coverage_gain(a_bits, mask)
+
+
+def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C] over padded id lists."""
+    b = resolve_backend(backend)
+    if b == "pallas":
+        return _sg.sparse_gain(doc_ids, mask)
+    if b == "interpret":
+        return _sg.sparse_gain(doc_ids, mask, interpret=True)
+    return _ref.sparse_gain(doc_ids, mask)

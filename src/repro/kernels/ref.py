@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes and
+asserts allclose against these functions. They are also the XLA fallback used
+on non-TPU backends (memory-naive; `ops.py` chunks them where needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def unpack_bits_f32(words: jnp.ndarray) -> jnp.ndarray:
+    """uint32 [..., W] -> f32 [..., W*32] of {0,1}."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,)).astype(jnp.float32)
+
+
+def bit_matvec(a_bits: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Packed-bit matrix times dense matrix.
+
+    a_bits: uint32 [C, W]   (bit i of row c = A[c, i])
+    x:      f32    [W*32, R]
+    returns f32 [C, R] = unpack(A) @ x
+    """
+    return unpack_bits_f32(a_bits) @ x
+
+
+def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Unweighted marginal coverage gains.
+
+    a_bits: uint32 [C, W] candidate incidence rows
+    mask:   uint32 [W]    already-covered bitset
+    returns int32 [C] = popcount(a & ~mask) per row
+    """
+    fresh = a_bits & ~mask[None, :]
+    return jnp.sum(jax.lax.population_count(fresh).astype(jnp.int32), axis=-1)
+
+
+def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Gather-based marginal gains over padded id lists (production scale).
+
+    doc_ids: int32 [C, M], padded with -1
+    mask:    uint32 [W] covered bitset over the id universe
+    returns int32 [C] = |{m : id >= 0 and bit(mask, id) == 0}|
+    """
+    valid = doc_ids >= 0
+    idx = jnp.where(valid, doc_ids, 0)
+    words = mask[idx >> 5]
+    bit = (words >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.sum((valid & (bit == 0)).astype(jnp.int32), axis=-1)
+
+
+def flash_attention(
+    q: jnp.ndarray,      # [B, Sq, Hq, D]
+    k: jnp.ndarray,      # [B, Skv, Hkv, D]
+    v: jnp.ndarray,      # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,     # sliding window (local attention)
+    softcap: float | None = None,  # gemma-style logit soft-capping
+    q_offset: int = 0,             # absolute position of q[0] (decode)
+) -> jnp.ndarray:
+    """Reference GQA attention with optional sliding window + logit softcap."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

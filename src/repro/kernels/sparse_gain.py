@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: gather-based coverage gains over padded doc-id lists.
+
+At production scale (|D| ~ 2^26+, |X̄| ~ 2^20) a dense clause x doc bitset
+matrix is infeasible (TBs); each clause instead carries its match set m(c) as
+a padded int32 id list. The covered-doc set stays a packed bitset (|D|/8
+bytes, e.g. 8 MB for 64M docs) and lives whole in VMEM; the kernel gathers
+covered bits at the candidate's doc ids and counts the uncovered ones.
+
+gains[c] = |{m : ids[c, m] >= 0 and bit(covered, ids[c, m]) == 0}|
+
+TPU note: the inner op is a dynamic VMEM gather (`mask[idx >> 5]`), which
+lowers to per-lane dynamic slices on TPU; the id lists should be sorted at
+build time so gathers are quasi-sequential (we do this in data/incidence.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, mask_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                          # [BC, BM] int32
+    valid = ids >= 0
+    idx = jnp.where(valid, ids, 0)
+    words = mask_ref[0, idx >> 5]               # [BC, BM] uint32 (VMEM gather)
+    bit = (words >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    fresh = valid & (bit == jnp.uint32(0))
+    o_ref[...] += jnp.sum(fresh.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_m", "interpret"))
+def sparse_gain(
+    doc_ids: jnp.ndarray,     # int32 [C, M], -1 padded
+    mask: jnp.ndarray,        # uint32 [W]
+    *,
+    block_c: int = 64,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:             # int32 [C]
+    c, m = doc_ids.shape
+    bc = min(block_c, c)
+    bm = min(block_m, m)
+    cp = -c % bc
+    mp = -m % bm
+    if cp or mp:
+        doc_ids = jnp.pad(doc_ids, ((0, cp), (0, mp)), constant_values=-1)
+    grid = ((c + cp) // bc, (m + mp) // bm)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, mask.shape[0]), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c + cp, 1), jnp.int32),
+        interpret=interpret,
+    )(doc_ids, mask[None, :])
+    return out[:c, 0]

@@ -1,0 +1,79 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline term extraction.
+
+`cost_analysis()` gives HLO FLOPs / bytes but not collective traffic, so we
+parse the compiled module text and sum the *result* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Result-size is the standard proxy (operand≈result for reduce ops;
+all-gather results are the post-gather size — an upper bound on per-link
+traffic that we divide by chip count downstream).
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind over the compiled module."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        type_str, opname = m.groups()
+        base = opname
+        for k in COLLECTIVES:
+            if base == k or base.startswith(k + "-start") or \
+                    base == k + "-start":
+                out[k]["count"] += 1
+                out[k]["bytes"] += _shape_bytes(type_str)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# TPU v5e hardware constants (spec §ROOFLINE)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link assumed)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    return {
+        "compute_s": flops / (n_chips * PEAK_FLOPS),
+        "memory_s": hbm_bytes / (n_chips * HBM_BW),
+        "collective_s": coll_bytes / (n_chips * ICI_BW),
+    }
+
+
+def dominant(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])

@@ -1,0 +1,151 @@
+"""Shared model building blocks (pure functional, no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, D], positions: [S] or [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(rng: jax.Array, shape: tuple[int, ...], in_axis: int = -2) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(rng, shape, jnp.float32) / np.sqrt(fan_in))
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def chunked_attention(
+    q: jnp.ndarray,                # [B, Sq, Hq, D]
+    k: jnp.ndarray,                # [B, Skv, Hkv, D]
+    v: jnp.ndarray,                # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | jnp.ndarray | None = None,
+    cap: float | None = None,
+    q_offset: int | jnp.ndarray = 0,
+    kv_len: jnp.ndarray | None = None,    # valid KV prefix length (decode)
+    chunk: int = 1024,
+    unroll: bool = False,   # python loop over chunks (dry-run cost probes:
+                            # lax.scan bodies are counted ONCE by XLA cost
+                            # analysis, so probes unroll)
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure JAX (lax.scan over KV
+    chunks). Never materializes the [Sq, Skv] score matrix — the memory
+    roofline term sees O(Sq * chunk) transients only. Supports GQA, sliding
+    windows, logit softcap and decode offsets; the Pallas kernel
+    (kernels/flash_attention.py) implements the same contract on TPU.
+
+    `window` may be a traced scalar (per-layer flag inside a scanned stack).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    qf = (q.astype(jnp.float32) / np.sqrt(d)).reshape(b, sq, hkv, group, d)
+    q_pos = jnp.arange(sq) + q_offset                       # [Sq]
+
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (skv + pad) // chunk
+    kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, k_blk, v_blk = xs
+        k_pos = ci * chunk + jnp.arange(chunk)              # [chunk]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_blk.astype(jnp.float32))
+        s = softcap(s, cap)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        mask &= k_pos[None, :] < skv                        # padding
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, group), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, group, d), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, (jnp.int32(ci), kc[ci], vc[ci]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def chunked_cross_entropy(
+    hidden: jnp.ndarray,           # [B, S, D]
+    unembed: jnp.ndarray,          # [D, V]
+    labels: jnp.ndarray,           # [B, S] int32 (-100 = ignore)
+    *,
+    cap: float | None = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Sequence-chunked softmax xent: logits [B, chunk, V] transients instead
+    of [B, S, V] — kills the dominant memory term of LM training steps."""
+    b, s, d = hidden.shape
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    n = (s + pad) // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_blk, y_blk = xs
+        logits = softcap(
+            jnp.einsum("bsd,dv->bsv", h_blk.astype(jnp.float32),
+                       unembed.astype(jnp.float32)), cap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        y = jnp.maximum(y_blk, 0)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        valid = y_blk >= 0
+        tot += jnp.sum(jnp.where(valid, logz - gold, 0.0))
+        cnt += jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with expert parallelism (replicated-token EP).
+
+Sharding strategy (DESIGN.md §7): expert weights are sharded over the mesh
+'model' axis; tokens are sharded over the remaining axes ('pod','data') and
+replicated across 'model'. Each model-rank computes the contribution of its
+local expert shard for all of its tokens — no all-to-all; one psum over
+'model' combines expert outputs (same collective cost as a tensor-parallel
+MLP). Capacity is per-expert (GShard-style) so the grouped GEMM is a dense
+[E_local, cap, D] x [E_local, D, F] einsum — static shapes, MXU-friendly,
+trivially differentiable.
+
+Routing (gate, top-k, aux loss) happens *outside* the shard_map in plain
+SPMD-land, so the expert-parallel path and the dense oracle route
+identically and the load-balance statistics are global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import mesh_context
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.7
+
+    def shard_map(f, mesh, in_specs, out_specs, **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _sm_old
+
+    def shard_map(f, mesh, in_specs, out_specs, **kw):
+        kw.pop("check_vma", None)
+        return _sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       **kw)
+
+P = jax.sharding.PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+
+
+def init_moe_params(rng: jax.Array, d_model: int, cfg: MoEConfig) -> dict:
+    k = jax.random.split(rng, 4)
+    e, f = cfg.n_experts, cfg.d_expert
+    s_in = 1.0 / math.sqrt(d_model)
+    s_f = 1.0 / math.sqrt(f)
+    return {
+        "gate": jax.random.normal(k[0], (d_model, e), jnp.float32) * s_in,
+        "w1": jax.random.normal(k[1], (e, d_model, f), jnp.float32) * s_in,
+        "w3": jax.random.normal(k[2], (e, d_model, f), jnp.float32) * s_in,
+        "w2": jax.random.normal(k[3], (e, f, d_model), jnp.float32) * s_f,
+    }
+
+
+def _route(params: dict, x: jnp.ndarray, cfg: MoEConfig):
+    logits = (x @ params["gate"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_e = jax.lax.top_k(probs, cfg.top_k)
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(topk_e[:, 0], cfg.n_experts).mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return topk_e, topk_p, aux
+
+
+def _dispatch_local(x, topk_e, topk_p, w1, w3, w2, *, cfg: MoEConfig,
+                    n_ranks: int, axis: str | None, cap_e: int):
+    """Per-device body. x: [T_loc, D]; w*: local expert shard [E_local, ...]."""
+    t, d = x.shape
+    e_local = cfg.n_experts // n_ranks
+    rank = jax.lax.axis_index(axis) if axis else 0
+    lo = rank * e_local
+
+    e_flat = topk_e.reshape(-1)                                  # [T*k]
+    p_flat = topk_p.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t), cfg.top_k)
+
+    local = (e_flat >= lo) & (e_flat < lo + e_local)
+    e_loc = jnp.where(local, e_flat - lo, 0)
+    onehot = (e_loc[:, None] == jnp.arange(e_local)[None, :]) & local[:, None]
+    pos = jnp.cumsum(onehot, axis=0) - onehot.astype(jnp.int32)
+    pos = (pos * onehot).sum(-1)                                 # rank within expert
+    keep = local & (pos < cap_e)
+    slot = jnp.where(keep, e_loc * cap_e + pos, e_local * cap_e)  # overflow row
+
+    # dispatch/combine one top-k slice at a time: a pair-major [T*k, D]
+    # gather would materialize 1.75 GB/step/device f32 buffers at kimi-k2
+    # scale (EXPERIMENTS.md §Perf); per-slice intermediates are [T, D].
+    k = cfg.top_k
+    slot_k = slot.reshape(t, k)
+    keep_k = keep.reshape(t, k)
+    p_k = topk_p.astype(x.dtype)
+    x_buf = jnp.zeros((e_local * cap_e + 1, d), x.dtype)
+    for j in range(k):
+        s_j = jnp.where(keep_k[:, j], slot_k[:, j], e_local * cap_e)
+        x_buf = x_buf.at[s_j].set(x, mode="drop")
+    xb = x_buf[:-1].reshape(e_local, cap_e, d)
+    h1 = jnp.einsum("ecd,edf->ecf", xb, w1.astype(x.dtype))
+    h3 = jnp.einsum("ecd,edf->ecf", xb, w3.astype(x.dtype))
+    yb = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h1) * h3, w2.astype(x.dtype))
+    y_buf = jnp.concatenate(
+        [yb.reshape(e_local * cap_e, d), jnp.zeros((1, d), x.dtype)])
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        s_j = jnp.where(keep_k[:, j], slot_k[:, j], e_local * cap_e)
+        y = y + y_buf[s_j] * p_k[:, j:j + 1]
+
+    if axis is not None:
+        y = jax.lax.psum(y, axis)
+    return y
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [T, D] -> ([T, D], aux_loss). Expert-parallel over the ambient
+    mesh's 'model' axis when present."""
+    mesh = mesh_context.current_mesh()
+    axis = mesh_context.model_axis_in(mesh)
+    n_ranks = mesh.shape[axis] if axis else 1
+    assert cfg.n_experts % n_ranks == 0, (cfg.n_experts, n_ranks)
+
+    topk_e, topk_p, aux = _route(params, x, cfg)
+
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    data_ranks = 1
+    for a in data_axes:
+        data_ranks *= mesh.shape[a]
+    t_local = max(1, x.shape[0] // max(1, data_ranks))
+    cap_e = max(1, math.ceil(t_local * cfg.top_k * cfg.capacity_factor
+                             / cfg.n_experts))
+
+    if axis is None:
+        return _dispatch_local(
+            x, topk_e, topk_p, params["w1"], params["w3"], params["w2"],
+            cfg=cfg, n_ranks=1, axis=None, cap_e=cap_e), aux
+
+    def body(x, te, tp, w1, w3, w2):
+        return _dispatch_local(x, te, tp, w1, w3, w2, cfg=cfg,
+                               n_ranks=n_ranks, axis=axis, cap_e=cap_e)
+
+    tok_spec = P(data_axes if data_axes else None)
+    fn = shard_map(
+        body, mesh,
+        in_specs=(tok_spec, tok_spec, tok_spec, P(axis), P(axis), P(axis)),
+        out_specs=tok_spec,
+    )
+    return fn(x, topk_e, topk_p, params["w1"], params["w3"], params["w2"]), aux
+
+
+def moe_apply_dense_oracle(params: dict, x: jnp.ndarray, cfg: MoEConfig) -> jnp.ndarray:
+    """Reference: python loop over experts, no capacity dropping (tests)."""
+    topk_e, topk_p, _ = _route(params, x, cfg)
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        h1 = x @ params["w1"][e].astype(x.dtype)
+        h3 = x @ params["w3"][e].astype(x.dtype)
+        ye = (jax.nn.silu(h1) * h3) @ params["w2"][e].astype(x.dtype)
+        w_e = jnp.sum(jnp.where(topk_e == e, topk_p, 0.0), axis=-1)
+        y += ye * w_e[:, None].astype(x.dtype)
+    return y

@@ -1,0 +1,450 @@
+"""RecSys architectures: DeepFM, BST, BERT4Rec, two-tower retrieval.
+
+Every model exposes (Config, init_params, loss_fn, serve_step,
+serve_candidates, param_specs). Embedding tables are huge (10^6+ rows per
+field) and row-sharded via models/embedding.py. Large-vocab softmaxes use
+in-batch/sampled softmax (the two-tower spec's "sampled-softmax retrieval").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, embedding
+from repro.models.egnn import _mlp, _mlp_params  # plain MLP helpers
+
+P = jax.sharding.PartitionSpec
+
+
+# =============================================================================
+# DeepFM (arXiv:1703.04247)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    dtype: str = "float32"
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+
+def deepfm_init(rng: jax.Array, cfg: DeepFMConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    return {
+        "emb": jax.random.normal(ks[0], (cfg.total_vocab, cfg.embed_dim),
+                                 jnp.float32) * 0.01,
+        "lin": jax.random.normal(ks[1], (cfg.total_vocab, 1), jnp.float32) * 0.01,
+        "mlp": _mlp_params(ks[2], (cfg.n_fields * cfg.embed_dim,)
+                           + cfg.mlp_dims + (1,)),
+        "bias": jnp.zeros(()),
+    }
+
+
+def deepfm_specs(cfg: DeepFMConfig) -> dict:
+    return {
+        "emb": embedding.table_spec(),
+        "lin": embedding.table_spec(),
+        "mlp": [{"w": P(None, None), "b": P(None)} for _ in
+                range(len(cfg.mlp_dims) + 1)],
+        "bias": P(),
+    }
+
+
+def _field_offsets(cfg: DeepFMConfig) -> jnp.ndarray:
+    return jnp.arange(cfg.n_fields, dtype=jnp.int32) * cfg.vocab_per_field
+
+
+def deepfm_logits(params: dict, feat_ids: jnp.ndarray, cfg: DeepFMConfig):
+    """feat_ids [B, n_fields] (per-field local ids)."""
+    idx = feat_ids + _field_offsets(cfg)[None, :]
+    v = embedding.lookup(params["emb"], idx)                 # [B, F, D]
+    lin = embedding.lookup(params["lin"], idx)[..., 0]       # [B, F]
+    # FM second order: ½((Σv)² − Σv²)
+    s = v.sum(axis=1)
+    fm2 = 0.5 * (s * s - (v * v).sum(axis=1)).sum(axis=-1)   # [B]
+    deep = _mlp(params["mlp"], v.reshape(v.shape[0], -1))[:, 0]
+    return params["bias"] + lin.sum(axis=1) + fm2 + deep
+
+
+def deepfm_loss(params: dict, batch: dict, cfg: DeepFMConfig):
+    logits = deepfm_logits(params, batch["feat_ids"], cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jax.nn.softplus(logits) - y * logits)    # BCE-with-logits
+    return loss, {"bce": loss}
+
+
+def deepfm_serve(params: dict, batch: dict, cfg: DeepFMConfig):
+    return jax.nn.sigmoid(deepfm_logits(params, batch["feat_ids"], cfg))
+
+
+def deepfm_serve_candidates(params: dict, batch: dict, cfg: DeepFMConfig):
+    """retrieval_cand: one user context × N candidate items. The candidate
+    item id fills field 0; user context fields 1..F-1 are broadcast."""
+    user = jnp.broadcast_to(batch["user_feat_ids"],
+                            (batch["cand_ids"].shape[0],
+                             batch["user_feat_ids"].shape[-1]))
+    feat = jnp.concatenate([batch["cand_ids"][:, None], user], axis=1)
+    scores = deepfm_logits(params, feat, cfg)
+    return jax.lax.top_k(scores, min(100, scores.shape[0]))
+
+
+# =============================================================================
+# BST — Behavior Sequence Transformer (arXiv:1905.06874)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 1_000_000
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    dtype: str = "float32"
+
+
+def _tx_block_init(rng, d, ff_mult=4):
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq": common.dense_init(ks[0], (d, d)),
+        "wk": common.dense_init(ks[1], (d, d)),
+        "wv": common.dense_init(ks[2], (d, d)),
+        "wo": common.dense_init(ks[3], (d, d)),
+        "ln1": jnp.zeros(d), "ln2": jnp.zeros(d),
+        "ff1": common.dense_init(ks[4], (d, ff_mult * d)),
+        "ff2": common.dense_init(ks[5], (ff_mult * d, d)),
+    }
+
+
+def _tx_block(bp, h, n_heads):
+    b, s, d = h.shape
+    dh = d // n_heads
+    a = common.rms_norm(h, bp["ln1"])
+    q = (a @ bp["wq"].astype(a.dtype)).reshape(b, s, n_heads, dh)
+    k = (a @ bp["wk"].astype(a.dtype)).reshape(b, s, n_heads, dh)
+    v = (a @ bp["wv"].astype(a.dtype)).reshape(b, s, n_heads, dh)
+    out = common.chunked_attention(q, k, v, causal=False, chunk=s)
+    h = h + out.reshape(b, s, d) @ bp["wo"].astype(h.dtype)
+    m = common.rms_norm(h, bp["ln2"])
+    return h + jax.nn.gelu(m @ bp["ff1"].astype(m.dtype)) @ bp["ff2"].astype(m.dtype)
+
+
+def bst_init(rng: jax.Array, cfg: BSTConfig) -> dict:
+    ks = jax.random.split(rng, 4 + cfg.n_blocks)
+    d = cfg.embed_dim
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, d), jnp.float32) * 0.01,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len + 1, d), jnp.float32) * 0.01,
+        "blocks": [_tx_block_init(ks[2 + i], d) for i in range(cfg.n_blocks)],
+        "mlp": _mlp_params(ks[-1], ((cfg.seq_len + 1) * d,) + cfg.mlp_dims + (1,)),
+    }
+
+
+def bst_specs(cfg: BSTConfig) -> dict:
+    blk = {"wq": P(None, "model"), "wk": P(None, "model"),
+           "wv": P(None, "model"), "wo": P("model", None),
+           "ln1": P(None), "ln2": P(None),
+           "ff1": P(None, "model"), "ff2": P("model", None)}
+    return {
+        "item_emb": embedding.table_spec(),
+        "pos_emb": P(None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+        "mlp": [{"w": P(None, None), "b": P(None)} for _ in
+                range(len(cfg.mlp_dims) + 1)],
+    }
+
+
+def bst_logits(params: dict, hist: jnp.ndarray, target: jnp.ndarray,
+               cfg: BSTConfig):
+    """hist [B, L] item ids (-1 pad), target [B] item id."""
+    seq = jnp.concatenate([jnp.maximum(hist, 0), target[:, None]], axis=1)
+    h = embedding.lookup(params["item_emb"], seq)            # [B, L+1, D]
+    h = h + params["pos_emb"][None].astype(h.dtype)
+    for bp in params["blocks"]:
+        h = _tx_block(bp, h, cfg.n_heads)
+    return _mlp(params["mlp"], h.reshape(h.shape[0], -1))[:, 0]
+
+
+def bst_loss(params: dict, batch: dict, cfg: BSTConfig):
+    logits = bst_logits(params, batch["hist"], batch["target"], cfg)
+    logits = logits.astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jax.nn.softplus(logits) - y * logits)
+    return loss, {"bce": loss}
+
+
+def bst_serve(params: dict, batch: dict, cfg: BSTConfig):
+    return jax.nn.sigmoid(bst_logits(params, batch["hist"], batch["target"], cfg))
+
+
+def bst_serve_candidates(params: dict, batch: dict, cfg: BSTConfig):
+    """One user history × N candidate targets."""
+    n = batch["cand_ids"].shape[0]
+    hist = jnp.broadcast_to(batch["hist"], (n, batch["hist"].shape[-1]))
+    scores = bst_logits(params, hist, batch["cand_ids"], cfg)
+    return jax.lax.top_k(scores, min(100, n))
+
+
+# =============================================================================
+# BERT4Rec (arXiv:1904.06690)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000          # +1 mask token appended
+    embed_dim: int = 64
+    seq_len: int = 200
+    n_blocks: int = 2
+    n_heads: int = 2
+    n_negatives: int = 8192           # sampled softmax
+    dtype: str = "float32"
+
+    @property
+    def table_rows(self) -> int:
+        # mask token + padding up to a 512 multiple so the row-sharded table
+        # divides any mesh axis combination
+        return -(-(self.n_items + 1) // 512) * 512
+
+
+def bert4rec_init(rng: jax.Array, cfg: Bert4RecConfig) -> dict:
+    ks = jax.random.split(rng, 3 + cfg.n_blocks)
+    d = cfg.embed_dim
+    return {
+        "item_emb": jax.random.normal(
+            ks[0], (cfg.table_rows, d), jnp.float32) * 0.01,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d), jnp.float32) * 0.01,
+        "blocks": [_tx_block_init(ks[2 + i], d) for i in range(cfg.n_blocks)],
+        "out_norm": jnp.zeros(d),
+    }
+
+
+def bert4rec_specs(cfg: Bert4RecConfig) -> dict:
+    blk = {"wq": P(None, "model"), "wk": P(None, "model"),
+           "wv": P(None, "model"), "wo": P("model", None),
+           "ln1": P(None), "ln2": P(None),
+           "ff1": P(None, "model"), "ff2": P("model", None)}
+    return {
+        "item_emb": embedding.table_spec(),
+        "pos_emb": P(None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+        "out_norm": P(None),
+    }
+
+
+def bert4rec_encode(params: dict, seq: jnp.ndarray, cfg: Bert4RecConfig):
+    h = embedding.lookup(params["item_emb"], jnp.maximum(seq, 0))
+    h = h + params["pos_emb"][None].astype(h.dtype)
+    for bp in params["blocks"]:
+        h = _tx_block(bp, h, cfg.n_heads)
+    return common.rms_norm(h, params["out_norm"])            # [B, S, D]
+
+
+def bert4rec_loss(params: dict, batch: dict, cfg: Bert4RecConfig):
+    """Masked-item prediction with sampled softmax.
+
+    batch: seq [B, S] (mask token = n_items), labels [B, S] (-100 = not
+    masked), negatives [K] sampled item ids (shared across the batch).
+    """
+    h = bert4rec_encode(params, batch["seq"], cfg)
+    labels = batch["labels"]
+    valid = labels >= 0
+    gold = jnp.maximum(labels, 0)
+    pos_emb = embedding.lookup(params["item_emb"], gold)     # [B, S, D]
+    neg_emb = embedding.lookup(params["item_emb"], batch["negatives"])  # [K, D]
+    pos_logit = jnp.sum(h * pos_emb, axis=-1, keepdims=True)            # [B,S,1]
+    neg_logit = jnp.einsum("bsd,kd->bsk", h, neg_emb)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    xent = logz - logits[..., 0]
+    loss = jnp.sum(jnp.where(valid, xent, 0.0)) / jnp.maximum(valid.sum(), 1)
+    return loss, {"xent": loss}
+
+
+def bert4rec_serve(params: dict, batch: dict, cfg: Bert4RecConfig,
+                   *, naive: bool = False, k: int = 100, chunk: int = 2048):
+    """Next-item top-k over the full catalog for the last position.
+
+    Production path (§Perf hillclimb): the [B, V] score matrix must never
+    leave its model-shard — each rank computes scores against its LOCAL
+    table rows in batch chunks, takes a LOCAL top-k, and only the [ranks, k]
+    candidates are all-gathered and merged. vs the naive path this removes
+    the B*V score all-gather (~1 TB collective at serve_bulk scale) and
+    keeps the score transient at [chunk, V/ranks].
+    """
+    from repro.distributed import mesh_context
+    from repro.models.moe import shard_map
+
+    h = bert4rec_encode(params, batch["seq"], cfg)[:, -1]    # [B, D]
+    mesh = mesh_context.current_mesh()
+    axis = mesh_context.model_axis_in(mesh)
+    if naive or axis is None:
+        scores = h @ params["item_emb"].T.astype(h.dtype)    # [B, rows]
+        valid = jnp.arange(cfg.table_rows) < cfg.n_items
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+        return jax.lax.top_k(scores, k)
+
+    n_ranks = mesh.shape[axis]
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dranks = 1
+    for a in dp:
+        dranks *= mesh.shape[a]
+    tok_spec = P(dp) if (dp and h.shape[0] % dranks == 0) else P()
+
+    def body(h_loc, emb_loc):
+        v_loc = emb_loc.shape[0]
+        rank = jax.lax.axis_index(axis)
+        lo = rank * v_loc
+        valid = (jnp.arange(v_loc) + lo) < cfg.n_items
+        b_loc = h_loc.shape[0]
+        bc = min(chunk, b_loc)
+        outs_v, outs_i = [], []
+        for s in range(0, b_loc, bc):           # unrolled: probe-countable
+            sc = h_loc[s:s + bc] @ emb_loc.T.astype(h_loc.dtype)
+            sc = jnp.where(valid[None, :], sc, -jnp.inf)
+            v, i = jax.lax.top_k(sc, k)         # local top-k: [bc, k]
+            outs_v.append(v)
+            outs_i.append(i + lo)
+        v = jnp.concatenate(outs_v)             # [B_loc, k]
+        i = jnp.concatenate(outs_i)
+        # merge across model ranks: k*ranks candidates per row, tiny
+        v_all = jax.lax.all_gather(v, axis, axis=1)   # [B_loc, R, k]
+        i_all = jax.lax.all_gather(i, axis, axis=1)
+        v_all = v_all.reshape(v.shape[0], -1)
+        i_all = i_all.reshape(v.shape[0], -1)
+        vk, sel = jax.lax.top_k(v_all, k)
+        return vk, jnp.take_along_axis(i_all, sel, axis=1)
+
+    return shard_map(
+        body, mesh,
+        in_specs=(tok_spec, P(axis, None)),
+        out_specs=(tok_spec, tok_spec),
+        # outputs ARE replicated over 'model' (post-all_gather merge), but
+        # the static checker can't see through top_k/take_along_axis
+        check_vma=False,
+    )(h, params["item_emb"])
+
+
+def bert4rec_serve_candidates(params: dict, batch: dict, cfg: Bert4RecConfig):
+    h = bert4rec_encode(params, batch["seq"], cfg)[:, -1]    # [1, D]
+    cand = embedding.lookup(params["item_emb"], batch["cand_ids"])
+    scores = (cand @ h[0]).astype(jnp.float32)
+    return jax.lax.top_k(scores, min(100, scores.shape[0]))
+
+
+# =============================================================================
+# Two-tower retrieval (YouTube RecSys'19-style, sampled softmax + logQ)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_user_fields: int = 8
+    n_item_fields: int = 8
+    vocab_per_field: int = 1_000_000
+    field_dim: int = 32
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    embed_dim: int = 256
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+
+def twotower_init(rng: jax.Array, cfg: TwoTowerConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    du = cfg.n_user_fields * cfg.field_dim
+    di = cfg.n_item_fields * cfg.field_dim
+    return {
+        "user_emb": jax.random.normal(
+            ks[0], (cfg.n_user_fields * cfg.vocab_per_field, cfg.field_dim),
+            jnp.float32) * 0.01,
+        "item_emb": jax.random.normal(
+            ks[1], (cfg.n_item_fields * cfg.vocab_per_field, cfg.field_dim),
+            jnp.float32) * 0.01,
+        "user_mlp": _mlp_params(ks[2], (du,) + cfg.tower_dims),
+        "item_mlp": _mlp_params(ks[3], (di,) + cfg.tower_dims),
+    }
+
+
+def twotower_specs(cfg: TwoTowerConfig) -> dict:
+    return {
+        "user_emb": embedding.table_spec(),
+        "item_emb": embedding.table_spec(),
+        "user_mlp": [{"w": P(None, None), "b": P(None)} for _ in cfg.tower_dims],
+        "item_mlp": [{"w": P(None, None), "b": P(None)} for _ in cfg.tower_dims],
+    }
+
+
+def _tower(emb_table, mlp, feat_ids, n_fields, vocab):
+    idx = feat_ids + (jnp.arange(n_fields, dtype=jnp.int32) * vocab)[None, :]
+    v = embedding.lookup(emb_table, idx)                     # [B, F, d]
+    z = _mlp(mlp, v.reshape(v.shape[0], -1))
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_user(params, user_ids, cfg: TwoTowerConfig):
+    return _tower(params["user_emb"], params["user_mlp"], user_ids,
+                  cfg.n_user_fields, cfg.vocab_per_field)
+
+
+def twotower_item(params, item_ids, cfg: TwoTowerConfig):
+    return _tower(params["item_emb"], params["item_mlp"], item_ids,
+                  cfg.n_item_fields, cfg.vocab_per_field)
+
+
+def twotower_loss(params: dict, batch: dict, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: user_ids [B, Fu], item_ids [B, Fi], item_logq [B] (log sampling
+    probability of each in-batch item, for the correction)."""
+    u = twotower_user(params, batch["user_ids"], cfg)        # [B, D]
+    it = twotower_item(params, batch["item_ids"], cfg)       # [B, D]
+    scores = (u @ it.T).astype(jnp.float32) / cfg.temperature
+    scores = scores - batch["item_logq"][None, :]            # logQ correction
+    b = scores.shape[0]
+    labels = jnp.arange(b)
+    logz = jax.nn.logsumexp(scores, axis=-1)
+    gold = jnp.take_along_axis(scores, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean(jnp.argmax(scores, -1) == labels)
+    return loss, {"xent": loss, "in_batch_acc": acc}
+
+
+def twotower_serve(params: dict, batch: dict, cfg: TwoTowerConfig):
+    """Online scoring: user × item pairwise dot (p99 path)."""
+    u = twotower_user(params, batch["user_ids"], cfg)
+    it = twotower_item(params, batch["item_ids"], cfg)
+    return jnp.sum(u * it, axis=-1)
+
+
+def twotower_serve_candidates(params: dict, batch: dict, cfg: TwoTowerConfig):
+    """retrieval_cand: 1 user × N precomputed candidate embeddings
+    [N, D] -> top-k. The candidate matrix is the serving index (built
+    offline by `twotower_item` over the catalog)."""
+    u = twotower_user(params, batch["user_ids"], cfg)        # [1, D]
+    scores = (batch["cand_emb"] @ u[0]).astype(jnp.float32)  # [N]
+    return jax.lax.top_k(scores, min(100, scores.shape[0]))
+
+
+def twotower_serve_candidates_tiered(params: dict, batch: dict,
+                                     cfg: TwoTowerConfig):
+    """The paper's technique in the retrieval hot path: a ψ^clause-eligible
+    query scores ONLY the Tier-1 slice of the index (|D1|/|D| of the FLOPs
+    and candidate-matrix HBM traffic); Theorem 3.1 guarantees no matching
+    candidate is lost. `tier1_emb` is the materialized Tier-1 index
+    (gathered offline at tiering-build time, like the Tier-1 postings).
+    Ineligible queries fall back to the full index (handled by the plain
+    serve path; the dry-run cell measures the Tier-1-hit cost)."""
+    u = twotower_user(params, batch["user_ids"], cfg)        # [1, D]
+    scores = (batch["tier1_emb"] @ u[0]).astype(jnp.float32)  # [N1]
+    v, i = jax.lax.top_k(scores, min(100, scores.shape[0]))
+    return v, batch["tier1_ids"][i]                           # global ids

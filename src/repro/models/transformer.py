@@ -1,0 +1,336 @@
+"""Decoder-only transformer LM family (5 assigned archs).
+
+Features per the assigned configs: GQA, RoPE, local/global attention
+alternation (gemma2 1:1, gemma3 5:1), attention + final logit softcaps
+(gemma2), QK-norm (gemma3), dense SwiGLU or MoE FFN (kimi-k2, llama4),
+tied/untied embeddings, scan-over-layers with remat, chunked flash-style
+attention, sequence-chunked cross-entropy, KV-cache decode.
+
+Everything is shape-static and lowers on abstract inputs; MoE layers use
+the ambient-mesh expert-parallel shard_map (models/moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.moe import MoEConfig, init_moe_params, moe_apply
+
+P = jax.sharding.PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    moe: MoEConfig | None = None
+    rope_theta: float = 10000.0
+    local_window: int | None = None     # sliding window for local layers
+    global_every: int = 0               # 0: all-global; n: every n-th layer global
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    qk_norm: bool = False
+    tie_embeddings: bool = True
+    embed_scale: bool = False           # gemma-style sqrt(D) embedding scale
+    dtype: str = "bfloat16"             # activation dtype
+    param_dtype: str = "float32"        # storage dtype (bf16 for 1T configs)
+    remat: bool = True
+    xent_chunk: int = 512
+    attn_chunk: int = 1024
+    pure_full_attention: bool = False   # True => long_500k cell is skipped
+    # cost-probe knobs (dry-run only): XLA cost analysis counts scan bodies
+    # once, so probes unroll the layer stack and the attention KV chunks
+    unroll_layers: bool = False
+    attn_unroll: bool = False
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    def is_global_layer(self) -> np.ndarray:
+        if self.global_every <= 0 or self.local_window is None:
+            return np.ones(self.n_layers, bool)
+        idx = np.arange(self.n_layers)
+        return (idx % self.global_every) == (self.global_every - 1)
+
+    def param_count(self) -> int:
+        """Exact parameter count (for MODEL_FLOPS = 6·N·D bookkeeping)."""
+        p = self.vocab_size * self.d_model          # embed
+        if not self.tie_embeddings:
+            p += self.d_model * self.vocab_size
+        per_layer = (self.d_model * (self.n_heads + 2 * self.n_kv_heads)
+                     * self.d_head
+                     + self.n_heads * self.d_head * self.d_model
+                     + 2 * self.d_model)
+        if self.qk_norm:
+            per_layer += 2 * self.d_head
+        if self.moe is not None:
+            per_layer += self.d_model * self.moe.n_experts
+            per_layer += self.moe.n_experts * 3 * self.d_model * self.moe.d_expert
+        else:
+            per_layer += 3 * self.d_model * self.d_ff
+        return p + self.n_layers * per_layer + self.d_model
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full_experts = self.n_layers * self.moe.n_experts * 3 * self.d_model * self.moe.d_expert
+        active_experts = self.n_layers * self.moe.top_k * 3 * self.d_model * self.moe.d_expert
+        return self.param_count() - full_experts + active_experts
+
+
+# -----------------------------------------------------------------------------
+# params
+# -----------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> dict:
+    keys = jax.random.split(rng, 8)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    l = cfg.n_layers
+
+    def stack(fn, key):
+        return jax.vmap(fn)(jax.random.split(key, l))
+
+    def layer_attn(k):
+        ks = jax.random.split(k, 4)
+        return {
+            "wq": common.dense_init(ks[0], (d, h * dh)),
+            "wk": common.dense_init(ks[1], (d, kv * dh)),
+            "wv": common.dense_init(ks[2], (d, kv * dh)),
+            "wo": common.dense_init(ks[3], (h * dh, d)) / math.sqrt(2 * l),
+        }
+
+    def layer_ffn(k):
+        if cfg.moe is not None:
+            return init_moe_params(k, d, cfg.moe)
+        ks = jax.random.split(k, 3)
+        return {
+            "w1": common.dense_init(ks[0], (d, cfg.d_ff)),
+            "w3": common.dense_init(ks[1], (d, cfg.d_ff)),
+            "w2": common.dense_init(ks[2], (cfg.d_ff, d)) / math.sqrt(2 * l),
+        }
+
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.01,
+        "layers": {
+            "attn": stack(layer_attn, keys[1]),
+            "ffn": stack(layer_ffn, keys[2]),
+            "ln1": jnp.zeros((l, d)),
+            "ln2": jnp.zeros((l, d)),
+        },
+        "final_norm": jnp.zeros(d),
+    }
+    if cfg.qk_norm:
+        params["layers"]["qnorm"] = jnp.zeros((l, dh))
+        params["layers"]["knorm"] = jnp.zeros((l, dh))
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.dense_init(keys[3], (d, cfg.vocab_size))
+    pdt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda p: p.astype(pdt), params)
+
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    """PartitionSpecs matching init_params' tree (megatron-style TP over
+    'model'; FSDP over 'data' is applied on top by the trainer when on)."""
+    attn = {"wq": P(None, None, "model"), "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"), "wo": P(None, "model", None)}
+    if cfg.moe is not None:
+        ffn = {"gate": P(None, None, None),
+               "w1": P(None, "model", None, None),
+               "w3": P(None, "model", None, None),
+               "w2": P(None, "model", None, None)}
+    else:
+        ffn = {"w1": P(None, None, "model"), "w3": P(None, None, "model"),
+               "w2": P(None, "model", None)}
+    specs = {
+        "embed": P(None, "model"),
+        "layers": {"attn": attn, "ffn": ffn,
+                   "ln1": P(None, None), "ln2": P(None, None)},
+        "final_norm": P(None),
+    }
+    if cfg.qk_norm:
+        specs["layers"]["qnorm"] = P(None, None)
+        specs["layers"]["knorm"] = P(None, None)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, "model")
+    return specs
+
+
+# -----------------------------------------------------------------------------
+# forward
+# -----------------------------------------------------------------------------
+
+_NO_WINDOW = 1 << 30
+
+
+def _attention_block(cfg: TransformerConfig, lp: dict, h: jnp.ndarray,
+                     window: jnp.ndarray, *, positions, kv_len=None,
+                     cache_kv=None):
+    """Returns (attn_out, (k_new, v_new)). cache_kv: (k,v) [B,Smax,kv,dh]."""
+    b, s, d = h.shape
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    a = common.rms_norm(h, lp["ln1"])
+    q = (a @ lp["attn"]["wq"].astype(a.dtype)).reshape(b, s, nh, dh)
+    k = (a @ lp["attn"]["wk"].astype(a.dtype)).reshape(b, s, nkv, dh)
+    v = (a @ lp["attn"]["wv"].astype(a.dtype)).reshape(b, s, nkv, dh)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, lp["qnorm"])
+        k = common.rms_norm(k, lp["knorm"])
+    q = common.rope(q, positions, cfg.rope_theta)
+    k = common.rope(k, positions, cfg.rope_theta)
+
+    if cache_kv is None:
+        out = common.chunked_attention(
+            q, k, v, causal=True, window=window, cap=cfg.attn_softcap,
+            chunk=min(cfg.attn_chunk, s), q_offset=0,
+            unroll=cfg.attn_unroll)
+        k_new, v_new = k, v
+    else:
+        ck, cv = cache_kv
+        pos0 = positions[0]
+        k_new = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                             (0, pos0, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                             (0, pos0, 0, 0))
+        out = common.chunked_attention(
+            q, k_new, v_new, causal=True, window=window, cap=cfg.attn_softcap,
+            chunk=min(cfg.attn_chunk, k_new.shape[1]),
+            q_offset=pos0, kv_len=kv_len, unroll=cfg.attn_unroll)
+    out = out.reshape(b, s, nh * dh)
+    return out @ lp["attn"]["wo"].astype(out.dtype), (k_new, v_new)
+
+
+def _ffn_block(cfg: TransformerConfig, lp: dict, h: jnp.ndarray):
+    b, s, d = h.shape
+    m = common.rms_norm(h, lp["ln2"])
+    if cfg.moe is not None:
+        y, aux = moe_apply(lp["ffn"], m.reshape(b * s, d), cfg.moe)
+        return y.reshape(b, s, d), aux
+    w = lp["ffn"]
+    hh = jax.nn.silu(m @ w["w1"].astype(m.dtype)) * (m @ w["w3"].astype(m.dtype))
+    return hh @ w["w2"].astype(m.dtype), jnp.float32(0.0)
+
+
+def _window_of(cfg: TransformerConfig, is_global: jnp.ndarray) -> jnp.ndarray:
+    w = cfg.local_window if cfg.local_window is not None else _NO_WINDOW
+    return jnp.where(is_global, _NO_WINDOW, w)
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (hidden [B, S, D], aux_loss)."""
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(cfg.adtype)
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    positions = jnp.arange(s)
+    flags = jnp.asarray(cfg.is_global_layer())
+
+    from repro.distributed import mesh_context
+
+    def layer(h, xs):
+        lp, flag = xs
+        dp = mesh_context.data_axes()
+        attn, _ = _attention_block(cfg, lp, h, _window_of(cfg, flag),
+                                   positions=positions)
+        # pin the residual stream to token-sharding (megatron row-parallel
+        # all-reduce after wo / w2) — see mesh_context.shard_hint
+        h = mesh_context.shard_hint(h + attn, dp, None, None)
+        ffn, aux = _ffn_block(cfg, lp, h)
+        return mesh_context.shard_hint(h + ffn, dp, None, None), aux
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    if cfg.unroll_layers:   # cost probes: scan bodies are cost-counted once
+        aux_sum = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, aux = body(h, (lp, flags[i]))
+            aux_sum = aux_sum + aux
+        return common.rms_norm(h, params["final_norm"]), aux_sum
+    h, auxs = jax.lax.scan(body, h, (params["layers"], flags))
+    h = common.rms_norm(h, params["final_norm"])
+    return h, jnp.sum(auxs)
+
+
+def unembed_matrix(params: dict, cfg: TransformerConfig) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig):
+    """batch: tokens [B, S] int32, labels [B, S] int32 (-100 ignored)."""
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    xent = common.chunked_cross_entropy(
+        hidden, unembed_matrix(params, cfg), batch["labels"],
+        cap=cfg.final_softcap, chunk=min(cfg.xent_chunk, hidden.shape[1]))
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# -----------------------------------------------------------------------------
+# decode (serve_step)
+# -----------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype)}
+
+
+def cache_specs(cfg: TransformerConfig, shard_seq: bool) -> dict:
+    """KV cache sharding: batch over 'data' (or, for batch-1 long-context,
+    sequence over 'data'); head_dim over 'model' (kv-head counts don't divide
+    16-way TP, head_dim always does)."""
+    if shard_seq:
+        spec = P(None, None, "data", None, "model")
+    else:
+        spec = P(None, "data", None, None, "model")
+    return {"k": spec, "v": spec}
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                cur_len: jnp.ndarray, cfg: TransformerConfig):
+    """One serving step: tokens [B, 1] given a cache filled to cur_len.
+    Returns (next-token logits [B, V], updated cache)."""
+    b = tokens.shape[0]
+    h = params["embed"][tokens].astype(cfg.adtype)
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    positions = jnp.full((1,), cur_len, jnp.int32)
+    flags = jnp.asarray(cfg.is_global_layer())
+
+    def layer(h, xs):
+        lp, flag, ck, cv = xs
+        attn, (k_new, v_new) = _attention_block(
+            cfg, lp, h, _window_of(cfg, flag), positions=positions,
+            kv_len=cur_len + 1, cache_kv=(ck, cv))
+        h = h + attn
+        ffn, _ = _ffn_block(cfg, lp, h)
+        return h + ffn, (k_new, v_new)
+
+    if cfg.unroll_layers:   # cost probes
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, (kn, vn) = layer(h, (lp, flags[i], cache["k"][i],
+                                    cache["v"][i]))
+            ks.append(kn)
+            vs.append(vn)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (k_new, v_new) = jax.lax.scan(
+            layer, h, (params["layers"], flags, cache["k"], cache["v"]))
+    h = common.rms_norm(h, params["final_norm"])
+    logits = h[:, 0, :] @ unembed_matrix(params, cfg).astype(h.dtype)
+    logits = common.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,97 @@
+"""Two-tier serving engine (paper Fig. 1) with clause query classification.
+
+Request path per batch:
+  1. ψ^clause — packed subset test of the selected clauses against each query
+  2. eligible queries  -> Tier-1 match (postings restricted to D₁)
+  3. ineligible queries -> Tier-2 match (full postings)
+Theorem 3.1 guarantees step 2 returns the COMPLETE match set for eligible
+queries; `TieredEngine.serve` asserts nothing silently — the integration test
+compares every result against single-tier matching.
+
+Cost accounting: Tier-1 postings only index |D₁| docs, so a Tier-1 match
+touches ~|D₁|/|D| of the word traffic — the engine reports both tiers' word
+traffic so benchmarks can translate coverage into served-cost savings (the
+paper's "half-sized Tier 1 needs half the machines" argument, §2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.core.tiering import ClauseTiering
+from repro.serve import matching
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    n_tier1: int = 0
+    tier1_words: int = 0      # postings words scanned in tier 1
+    tier2_words: int = 0
+
+    @property
+    def tier1_fraction(self) -> float:
+        return self.n_tier1 / max(1, self.n_queries)
+
+    full_words_per_query: int = 0
+
+    @property
+    def cost_saving(self) -> float:
+        """Word-traffic saving vs an untiered (Tier-2-only) system."""
+        base = self.n_queries * self.full_words_per_query
+        if base == 0:
+            return 0.0
+        return 1.0 - (self.tier1_words + self.tier2_words) / base
+
+
+class TieredEngine:
+    def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
+                 n_docs: int):
+        self.n_docs = n_docs
+        self.tiering = tiering
+        self.postings_t2 = jnp.asarray(postings)
+        # tier-1 sub-index: only D₁ columns survive
+        self.postings_t1 = jnp.asarray(
+            matching.tier_postings(postings, tiering.tier1_docs))
+        # a production Tier-1 re-indexes with a compacted |D1| doc space:
+        # its per-query word traffic is ceil(|D1|/32), not the full W.
+        self.tier1_words_per_query = bitset.n_words(int(tiering.tier1_docs.sum()))
+        self.stats = ServeStats(
+            full_words_per_query=postings.shape[1])
+
+    def classify(self, queries: list[tuple[int, ...]]) -> np.ndarray:
+        qbits = np.zeros((len(queries), self.tiering.vocab_size), bool)
+        for i, q in enumerate(queries):
+            qbits[i, list(q)] = True
+        return self.tiering.classify_queries(bitset.np_pack(qbits))
+
+    def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
+        """Returns the match set (sorted doc ids) per query."""
+        elig = self.classify(queries)
+        toks = matching.pad_token_batch(queries)
+        out: list[np.ndarray | None] = [None] * len(queries)
+        w = self.postings_t2.shape[1]
+        for tier, sel in ((1, elig), (2, ~elig)):
+            idx = np.nonzero(sel)[0]
+            if len(idx) == 0:
+                continue
+            postings = self.postings_t1 if tier == 1 else self.postings_t2
+            m = np.asarray(matching.match_batch(postings, jnp.asarray(toks[idx])))
+            for row, qi in enumerate(idx):
+                out[qi] = bitset.np_to_indices(m[row], self.n_docs)
+            if tier == 1:
+                self.stats.n_tier1 += len(idx)
+                self.stats.tier1_words += len(idx) * self.tier1_words_per_query
+            else:
+                self.stats.tier2_words += len(idx) * w
+        self.stats.n_queries += len(queries)
+        return [o if o is not None else np.empty(0, np.int64) for o in out]
+
+    def serve_reference(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
+        """Single-tier oracle for correctness tests."""
+        toks = matching.pad_token_batch(queries)
+        m = np.asarray(matching.match_batch(self.postings_t2, jnp.asarray(toks)))
+        return [bitset.np_to_indices(r, self.n_docs) for r in m]

@@ -1,0 +1,207 @@
+"""Optimizers: AdamW (low-precision states) and Adafactor (for 1T-param configs).
+
+AdamW keeps m/v in a configurable dtype (bf16 default) — at 512-chip scale
+this halves optimizer HBM, which the kimi-k2 memory analysis needs. Adafactor
+factors the second moment into row/col statistics (O(n+m) instead of O(nm)),
+the standard choice when even bf16 Adam states don't fit (1T params).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "bfloat16"    # adamw m/v dtype
+    min_dim_factored: int = 128      # adafactor: factor only matrices >= this
+    # scan the elementwise update over axis 0 of layer-stacked leaves: the
+    # f32 temporaries then cover ONE layer slice instead of the whole stack
+    # (kimi-k2: three 5.4 GB/device expert leaves -> ~90 MB working set).
+    scan_update_axis0: bool = False
+    scan_update_min_bytes: int = 1 << 28
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps) / max(1, cfg.decay_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_scale(grads, max_norm: float):
+    """Global-norm clip as a SCALAR — folded into the per-leaf update so no
+    scaled f32 copy of the whole gradient tree is ever materialized (at 1T
+    params that copy alone is 16 GB/device)."""
+    norm = _global_norm(grads)
+    if max_norm <= 0:
+        return jnp.float32(1.0), norm
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9)), norm
+
+
+def _maybe_scan_axis0(cfg: OptimizerConfig, fn, args: tuple):
+    """Apply a per-leaf update fn, scanning over axis 0 for big stacked
+    leaves (memory: one slice of temporaries live at a time)."""
+    lead = args[0]
+    big = lead.size * lead.dtype.itemsize >= cfg.scan_update_min_bytes
+    same_lead = all(a.ndim >= 1 and a.shape[:1] == lead.shape[:1]
+                    for a in args)
+    if cfg.scan_update_axis0 and big and lead.ndim >= 3 and same_lead \
+            and lead.shape[0] > 1:
+        _, outs = jax.lax.scan(lambda c, xs: (c, fn(*xs)), None, args)
+        return outs
+    return fn(*args)
+
+
+# -----------------------------------------------------------------------------
+# AdamW
+# -----------------------------------------------------------------------------
+
+def adamw_init(cfg: OptimizerConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params, step):
+    scale, gnorm = clip_scale(grads, cfg.grad_clip)
+    lr = schedule(cfg, step)
+    c1 = 1.0 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd_elem(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    def upd(g, m, v, p):
+        return _maybe_scan_axis0(cfg, upd_elem, (g, m, v, p))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    updates = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return updates, {"m": m, "v": v}, {"grad_norm": gnorm, "lr": lr}
+
+
+# -----------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), momentum-free
+# -----------------------------------------------------------------------------
+
+def _factored(cfg: OptimizerConfig, shape) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_factored
+            and shape[-2] >= cfg.min_dim_factored)
+
+
+def adafactor_init(cfg: OptimizerConfig, params):
+    def init_one(p):
+        if _factored(cfg, p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"fac": jax.tree.map(init_one, params,
+                                is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params, step):
+    scale, gnorm = clip_scale(grads, cfg.grad_clip)
+    lr = schedule(cfg, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+
+    def _core(g, p, vr=None, vc=None, v=None):
+        g32 = g.astype(jnp.float32) * scale
+        sq = g32 * g32 + 1e-30
+        if vr is not None:
+            vr = beta2 * vr + (1 - beta2) * sq.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * sq.mean(axis=-2)
+            denom = (vr[..., :, None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True)[..., :, None], 1e-30)) \
+                * vc[..., None, :]
+            pre = g32 * jax.lax.rsqrt(jnp.maximum(denom, 1e-30))
+        else:
+            v = beta2 * v + (1 - beta2) * sq
+            pre = g32 * jax.lax.rsqrt(jnp.maximum(v, 1e-30))
+        # update clipping by RMS (Adafactor's d=1.0)
+        rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-30)
+        pre = pre / jnp.maximum(1.0, rms)
+        delta = pre + cfg.weight_decay * p.astype(jnp.float32)
+        if vr is not None:
+            return (-lr * delta).astype(p.dtype), vr, vc
+        return (-lr * delta).astype(p.dtype), v
+
+    def upd(g, s, p):
+        if "vr" in s:
+            delta, vr, vc = _maybe_scan_axis0(
+                cfg, lambda g_, p_, vr_, vc_: _core(g_, p_, vr=vr_, vc=vc_),
+                (g, p, s["vr"], s["vc"]))
+            return delta, {"vr": vr, "vc": vc}
+        delta, v = _maybe_scan_axis0(
+            cfg, lambda g_, p_, v_: _core(g_, p_, v=v_), (g, p, s["v"]))
+        return delta, {"v": v}
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    s_leaves = treedef.flatten_up_to(state["fac"])
+    p_leaves = treedef.flatten_up_to(params)
+    out = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+    updates = jax.tree.unflatten(treedef, [o[0] for o in out])
+    fac = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return updates, {"fac": fac}, {"grad_norm": gnorm, "lr": lr}
+
+
+# -----------------------------------------------------------------------------
+# registry
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any
+    update: Any
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return Optimizer(init=functools.partial(adamw_init, cfg),
+                         update=functools.partial(adamw_update, cfg))
+    if cfg.name == "adafactor":
+        return Optimizer(init=functools.partial(adafactor_init, cfg),
+                         update=functools.partial(adafactor_update, cfg))
+    if cfg.name == "sgd":
+        def sgd_init(params):
+            return {}
+
+        def sgd_update(grads, state, params, step):
+            scale, gnorm = clip_scale(grads, cfg.grad_clip)
+            lr = schedule(cfg, step)
+            ups = jax.tree.map(
+                lambda g, p: (-lr * scale * g.astype(jnp.float32)
+                              ).astype(p.dtype), grads, params)
+            return ups, state, {"grad_norm": gnorm, "lr": lr}
+        return Optimizer(init=sgd_init, update=sgd_update)
+    raise ValueError(cfg.name)

@@ -1,0 +1,140 @@
+"""Generic trainer: grad-accumulation, compression hook, fault-tolerant loop.
+
+`make_train_step(loss_fn, opt_cfg, ...)` builds a single jittable
+train_step(state, batch) -> (state, metrics) where
+state = {params, opt, ef, step}. This is the exact function the multi-pod
+dry-run lowers — optimizer update and compression numerics included.
+
+`TrainingDriver` is the host-side loop: checkpoint/restart (auto-resume from
+the newest committed checkpoint), failure injection for tests, and a
+deadline-based straggler policy on the data iterator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+
+def make_train_step(
+    loss_fn: Callable,                   # (params, batch) -> (loss, metrics)
+    opt_cfg: OptimizerConfig,
+    *,
+    n_micro: int = 1,
+    compression: comp.CompressionConfig = comp.CompressionConfig(),
+    grad_accum_dtype: str = "float32",
+):
+    opt = make_optimizer(opt_cfg)
+
+    def init_state(params):
+        return {
+            "params": params,
+            "opt": opt.init(params),
+            "ef": comp.init_error_state(compression, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def train_step(state, batch):
+        params = state["params"]
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # batch leaves are [n_micro, ...]; scan accumulates grads so only
+            # one microbatch's activations are live at a time.
+            acc_dt = jnp.dtype(grad_accum_dtype)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss), metrics = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), batch)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        grads, ef = comp.compress_grads(compression, grads, state["ef"])
+        updates, opt_state, opt_metrics = opt.update(
+            grads, state["opt"], params, state["step"])
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        new_state = {"params": params, "opt": opt_state, "ef": ef,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    return init_state, train_step
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    max_steps: int = 200
+    fail_at_step: int = -1          # failure injection (tests)
+    batch_deadline_s: float | None = None   # straggler policy
+
+
+class StragglerStats:
+    def __init__(self):
+        self.skipped = 0
+        self.fetch_times: list[float] = []
+
+
+class TrainingDriver:
+    """Fault-tolerant host loop around a jitted train_step."""
+
+    def __init__(self, init_state, train_step, cfg: DriverConfig):
+        self.init_state = init_state
+        self.train_step = jax.jit(train_step, donate_argnums=(0,))
+        self.cfg = cfg
+        self.straggler = StragglerStats()
+
+    def run(self, params_init: Callable[[], Any],
+            batches: Iterator[Any]) -> tuple[dict, list[dict]]:
+        cfg = self.cfg
+        os.makedirs(cfg.ckpt_dir, exist_ok=True)
+        step0 = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if step0 is not None:
+            template = self.init_state(params_init())
+            _, state, _ = ckpt_lib.restore(cfg.ckpt_dir, template)
+            state = jax.tree.map(jnp.asarray, state)
+        else:
+            state = self.init_state(params_init())
+
+        history: list[dict] = []
+        while int(state["step"]) < cfg.max_steps:
+            t0 = time.perf_counter()
+            batch = next(batches)
+            fetch = time.perf_counter() - t0
+            self.straggler.fetch_times.append(fetch)
+            if (cfg.batch_deadline_s is not None
+                    and fetch > cfg.batch_deadline_s):
+                # straggler mitigation: drop the late batch, take the next
+                self.straggler.skipped += 1
+                continue
+            state, metrics = self.train_step(state, batch)
+            step = int(state["step"])
+            history.append({k: float(v) for k, v in metrics.items()})
+            if step % cfg.ckpt_every == 0 or step == cfg.max_steps:
+                ckpt_lib.save(cfg.ckpt_dir, step, jax.device_get(state),
+                              keep_last=cfg.keep_last)
+            if cfg.fail_at_step == step:
+                raise RuntimeError(f"injected failure at step {step}")
+        return state, history

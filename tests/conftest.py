@@ -1,0 +1,30 @@
+import os
+import sys
+
+# tests run against the source tree
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# smoke tests and kernel tests must see exactly ONE device; the 512-device
+# dry-run sets XLA_FLAGS itself in a subprocess (launch/dryrun.py).
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_data():
+    from repro.data import incidence, synthetic
+    corpus, log = synthetic.make_tiering_dataset(0, "tiny")
+    return incidence.build_tiering_data(corpus, log, min_support=0.001)
+
+
+@pytest.fixture(scope="session")
+def tiny_problem(tiny_data):
+    from repro.core import SCSKProblem
+    return SCSKProblem.from_data(tiny_data)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)

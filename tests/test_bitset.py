@@ -1,0 +1,74 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 200))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) < 0.3
+    packed = bitset.np_pack(bits)
+    assert packed.shape == (bitset.n_words(n),)
+    np.testing.assert_array_equal(bitset.np_unpack(packed, n), bits)
+    # jnp path agrees with numpy path
+    jpacked = np.asarray(bitset.pack(jnp.asarray(bits)))
+    np.testing.assert_array_equal(jpacked, packed)
+    np.testing.assert_array_equal(
+        np.asarray(bitset.unpack(jnp.asarray(packed), n)), bits)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 300))
+@settings(max_examples=30, deadline=None)
+def test_popcount(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) < 0.5
+    packed = bitset.np_pack(bits)
+    assert bitset.np_popcount(packed) == bits.sum()
+    assert int(bitset.popcount(jnp.asarray(packed))) == bits.sum()
+
+
+def test_from_indices_and_to_indices():
+    idx = np.array([0, 3, 31, 32, 64, 64, 90])  # duplicate on purpose
+    out = np.asarray(bitset.from_indices(jnp.asarray(idx), 96))
+    expected = bitset.np_from_indices(idx, 96)
+    np.testing.assert_array_equal(out, expected)
+    np.testing.assert_array_equal(
+        bitset.np_to_indices(expected, 96), np.unique(idx))
+
+
+def test_from_indices_with_validity_mask():
+    idx = jnp.asarray([5, 17, 40, 0, 0])
+    valid = jnp.asarray([True, True, True, False, False])
+    out = np.asarray(bitset.from_indices(idx, 64, valid=valid))
+    expected = bitset.np_from_indices(np.array([5, 17, 40]), 64)
+    np.testing.assert_array_equal(out, expected)
+
+
+def test_count_and_not():
+    rng = np.random.default_rng(0)
+    a = rng.random((8, 130)) < 0.4
+    m = rng.random(130) < 0.5
+    got = np.asarray(bitset.count_and_not(
+        jnp.asarray(bitset.np_pack(a)), jnp.asarray(bitset.np_pack(m))))
+    np.testing.assert_array_equal(got, (a & ~m).sum(axis=1))
+
+
+def test_is_subset():
+    a = bitset.np_pack(np.array([1, 0, 1, 0, 0, 0], bool))
+    b = bitset.np_pack(np.array([1, 1, 1, 0, 1, 0], bool))
+    assert bool(bitset.is_subset(jnp.asarray(a), jnp.asarray(b)))
+    assert not bool(bitset.is_subset(jnp.asarray(b), jnp.asarray(a)))
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 100])
+def test_or_rows(n):
+    rng = np.random.default_rng(n)
+    rows = rng.random((5, n)) < 0.3
+    packed = jnp.asarray(bitset.np_pack(rows))
+    got = np.asarray(bitset.or_rows(packed, axis=0))
+    np.testing.assert_array_equal(got, bitset.np_pack(rows.any(axis=0)))

@@ -1,0 +1,51 @@
+"""Beyond-2-tier and stochastic-solver extensions (paper §3.2 / §6)."""
+import numpy as np
+
+from repro.core.multitier import build_multitier, verify_multitier
+from repro.core.stochastic import stochastic_greedy
+
+
+def test_stochastic_greedy_approaches_exact(tiny_problem, tiny_data):
+    from repro.core import greedy
+    budget = tiny_data.n_docs // 2
+    exact = greedy(tiny_problem, budget)
+    stoch = stochastic_greedy(tiny_problem, budget, batch_queries=2048,
+                              seed=0)
+    assert stoch.g_final <= budget + 1e-6          # cost stays exact
+    assert stoch.f_final >= 0.93 * exact.f_final   # estimator noise bounded
+
+
+def test_stochastic_greedy_small_batch_is_worse_but_feasible(tiny_problem,
+                                                             tiny_data):
+    budget = tiny_data.n_docs // 2
+    tiny_batch = stochastic_greedy(tiny_problem, budget, batch_queries=32,
+                                   seed=1)
+    assert tiny_batch.g_final <= budget + 1e-6
+    assert tiny_batch.f_final > 0.2                # still learns something
+
+
+def test_multitier_nesting_and_correctness(tiny_data):
+    budgets = [tiny_data.n_docs // 8, tiny_data.n_docs // 4,
+               tiny_data.n_docs // 2]
+    mt = build_multitier(tiny_data, budgets)
+    # budgets respected
+    for docs, b in zip(mt.tier_docs, budgets):
+        assert docs.sum() <= b
+    # nesting + per-level Theorem 3.1, exhaustively
+    assert verify_multitier(mt, tiny_data)
+
+
+def test_multitier_routing_monotone_coverage(tiny_data):
+    budgets = [tiny_data.n_docs // 8, tiny_data.n_docs // 2]
+    mt = build_multitier(tiny_data, budgets)
+    cov = mt.coverage(tiny_data.log.query_bits, tiny_data.log.test_weights)
+    assert len(cov) == 3
+    assert abs(sum(cov) - tiny_data.log.test_weights.sum()) < 1e-9
+    # a 3-tier system beats the equivalent 2-tier on expected scan cost
+    cost3 = mt.expected_cost(tiny_data.log.query_bits,
+                             tiny_data.log.test_weights)
+    mt2 = build_multitier(tiny_data, [budgets[-1]])
+    cost2 = mt2.expected_cost(tiny_data.log.query_bits,
+                              tiny_data.log.test_weights)
+    assert cost3 <= cost2 + 1e-9
+    assert cost3 < 1.0                              # beats untiered

@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel: shape/feature sweep vs ref oracle, plus
+consistency with the XLA chunked-attention path used by the models."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.models import common
+
+
+def _qkv(rng, b, sq, skv, hq, hkv, d, dtype=np.float32):
+    q = rng.standard_normal((b, sq, hq, d)).astype(dtype)
+    k = rng.standard_normal((b, skv, hkv, d)).astype(dtype)
+    v = rng.standard_normal((b, skv, hkv, d)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+CASES = [
+    # b, sq, skv, hq, hkv, d, causal, window, cap, q_offset
+    (1, 16, 16, 2, 1, 8, True, None, None, 0),
+    (2, 32, 32, 4, 2, 16, True, None, None, 0),
+    (1, 32, 32, 4, 4, 8, True, 8, None, 0),          # sliding window
+    (1, 24, 24, 2, 1, 8, True, None, 20.0, 0),       # softcap
+    (1, 16, 16, 8, 2, 8, False, None, None, 0),      # bidirectional
+    (1, 1, 48, 4, 2, 8, True, None, None, 47),       # decode step
+    (1, 1, 48, 4, 2, 8, True, 16, 30.0, 40),         # decode + window + cap
+    (1, 20, 36, 2, 2, 8, True, None, None, 16),      # ragged, non-tile sizes
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d,causal,window,cap,q_offset", CASES)
+def test_flash_vs_ref(b, sq, skv, hq, hkv, d, causal, window, cap, q_offset):
+    rng = np.random.default_rng(sq * skv + hq)
+    q, k, v = _qkv(rng, b, sq, skv, hq, hkv, d)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          q_offset=q_offset, block_q=8, block_k=8,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=cap, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 1, 16, 16, 4, 2, 16)
+    q, k, v = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    got = flash_attention(q, k, v, block_q=8, block_k=8, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_xla_chunked_path_matches_ref():
+    """The model-side chunked attention (what the dry-run lowers) is
+    numerically identical to the oracle too."""
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 2, 32, 32, 4, 2, 16)
+    got = common.chunked_attention(q, k, v, causal=True, window=8,
+                                   cap=30.0, chunk=8)
+    want = ref.flash_attention(q, k, v, causal=True, window=8, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_kv_len_masking():
+    """chunked_attention's kv_len masking == truncating the cache."""
+    rng = np.random.default_rng(2)
+    q, k, v = _qkv(rng, 1, 1, 32, 4, 2, 8)
+    got = common.chunked_attention(q, k, v, causal=True, q_offset=19,
+                                   kv_len=jnp.int32(20), chunk=8)
+    want = ref.flash_attention(q, k[:, :20], v[:, :20], causal=True,
+                               q_offset=19)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

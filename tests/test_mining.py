@@ -1,0 +1,38 @@
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import mining
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_fpgrowth_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    n_tx = int(rng.integers(5, 40))
+    txs, ws = [], []
+    for _ in range(n_tx):
+        k = int(rng.integers(1, 6))
+        txs.append(tuple(sorted(set(rng.integers(0, 12, size=k).tolist()))))
+        ws.append(float(rng.integers(1, 5)))
+    min_support = float(rng.uniform(0.5, 4.0))
+    got = mining.fpgrowth(txs, ws, min_support, max_len=3)
+    want = mining.brute_force_frequent(txs, ws, min_support, max_len=3)
+    assert set(got) == set(want)
+    for clause, sup in want.items():
+        assert abs(got[clause] - sup) < 1e-9, clause
+
+
+def test_fpgrowth_weighted_probabilities():
+    txs = [(0, 1), (0, 2), (0, 1, 2)]
+    ws = [0.5, 0.3, 0.2]
+    out = mining.fpgrowth(txs, ws, 0.19, max_len=2)
+    assert abs(out[(0,)] - 1.0) < 1e-12
+    assert abs(out[(0, 1)] - 0.7) < 1e-12
+    assert abs(out[(1, 2)] - 0.2) < 1e-12
+
+
+def test_fpgrowth_max_len():
+    txs = [(0, 1, 2, 3)] * 3
+    out = mining.fpgrowth(txs, None, 1.0, max_len=2)
+    assert max(len(c) for c in out) == 2

@@ -1,0 +1,40 @@
+"""End-to-end system test: data -> mining -> SCSK solve -> tiering -> serving.
+
+This is the full paper pipeline at 'tiny' scale, asserting the headline
+behaviours: correctness (Thm 3.1), budget feasibility, generalization to
+novel queries, and serving-cost savings.
+"""
+import numpy as np
+
+from repro.core import SOLVERS, SCSKProblem
+from repro.core.tiering import ClauseTiering
+from repro.data import incidence, synthetic
+from repro.serve.engine import TieredEngine
+
+
+def test_end_to_end_pipeline():
+    corpus, log = synthetic.make_tiering_dataset(7, "tiny")
+    assert log.novel_test_mass() > 0.0      # test traffic has unseen queries
+
+    data = incidence.build_tiering_data(corpus, log, min_support=2e-3)
+    assert len(data.clauses) > 10
+
+    problem = SCSKProblem.from_data(data)
+    budget = corpus.n_docs // 2
+    result = SOLVERS["optpes"](problem, budget)
+    assert result.g_final <= budget
+
+    tiering = ClauseTiering.from_selection(data, result.selected)
+    assert tiering.verify_correctness(data)
+    cov = tiering.coverage(data)
+    assert cov["train"] > 0.3               # tier 1 worth building
+    assert cov["test"] > 0.3                # ... and it generalizes
+    assert cov["tier1_frac"] <= 0.5 + 1e-9
+
+    engine = TieredEngine(data.postings, tiering, data.n_docs)
+    queries = [log.queries[i] for i in range(128)]
+    got = engine.serve(queries)
+    want = engine.serve_reference(queries)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+    assert engine.stats.n_tier1 > 0

@@ -1,0 +1,76 @@
+"""The paper's Table-1 worked example, asserted exactly (§2.1 and §3.1)."""
+import numpy as np
+
+from repro.core import bitset
+from repro.core.tiering import ClauseTiering
+from repro.data import incidence
+from repro.data.synthetic import Corpus
+
+RED, BLUE, SHIRT, PANTS, STRIPED = range(5)
+DOCS = [
+    (RED, SHIRT, STRIPED),      # D1
+    (BLUE, SHIRT, STRIPED),     # D2
+    (RED, SHIRT),               # D3
+    (RED, PANTS, STRIPED),      # D4
+    (BLUE, PANTS, STRIPED),     # D5
+    (BLUE, PANTS),              # D6
+]
+
+
+def make_corpus():
+    bits = np.zeros((6, 5), bool)
+    for i, d in enumerate(DOCS):
+        bits[i, list(d)] = True
+    return Corpus(doc_tokens=[tuple(sorted(d)) for d in DOCS],
+                  doc_bits=bitset.np_pack(bits), vocab_size=5)
+
+
+def test_match_sets():
+    corpus = make_corpus()
+    postings = incidence.build_postings(corpus)
+    # m({red, shirt}) = {D1, D3}
+    m = incidence.match_bits(postings, (RED, SHIRT), 6)
+    np.testing.assert_array_equal(bitset.np_to_indices(m, 6), [0, 2])
+    # m({blue, pants, striped}) = {D5}
+    m = incidence.match_bits(postings, (BLUE, PANTS, STRIPED), 6)
+    np.testing.assert_array_equal(bitset.np_to_indices(m, 6), [4])
+
+
+def test_clause_classifiers_section_3_1():
+    """X = {{red}, {blue, shirt}} => D1 = {D1..D4}; serves 'red shirt' etc,
+    but not 'blue pants' (paper's §3.1 walkthrough)."""
+    corpus = make_corpus()
+    postings = incidence.build_postings(corpus)
+    clauses = [(RED,), (BLUE, SHIRT)]
+    cd = incidence.clause_doc_incidence(postings, clauses, 6)
+    tier1 = bitset.np_unpack(cd[0] | cd[1], 6)
+    np.testing.assert_array_equal(np.nonzero(tier1)[0], [0, 1, 2, 3])
+
+    tiering = ClauseTiering(
+        clauses=clauses,
+        clause_vocab_bits=bitset.np_pack(np.array(
+            [[1, 0, 0, 0, 0], [0, 1, 1, 0, 0]], bool)),
+        tier1_docs=tier1, vocab_size=5)
+
+    def q(toks):
+        b = np.zeros((1, 5), bool)
+        b[0, list(toks)] = True
+        return bool(tiering.classify_queries(bitset.np_pack(b))[0])
+
+    assert q((RED,))
+    assert q((RED, SHIRT))
+    assert q((RED, PANTS))
+    assert q((BLUE, SHIRT, STRIPED))
+    assert not q((BLUE, PANTS))
+
+
+def test_theorem_3_1_on_example():
+    """Eligible queries' match sets are contained in Tier 1."""
+    corpus = make_corpus()
+    postings = incidence.build_postings(corpus)
+    clauses = [(RED,), (BLUE, SHIRT)]
+    cd = incidence.clause_doc_incidence(postings, clauses, 6)
+    tier1_bits = cd[0] | cd[1]
+    for query in [(RED,), (RED, SHIRT), (RED, PANTS), (BLUE, SHIRT, STRIPED)]:
+        m = incidence.match_bits(postings, query, 6)
+        assert not np.any(m & ~tier1_bits), query

@@ -1,0 +1,126 @@
+"""Hypothesis property tests for the paper's theorems (3.1, 3.3, 3.4, 4.1, 4.2)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SCSKProblem, bitset
+from repro.data import incidence, synthetic
+
+
+def _random_instance(seed, n_docs=40, vocab=24, n_queries=60):
+    rng = np.random.default_rng(seed)
+    corpus = synthetic.make_corpus(rng, vocab_size=vocab, n_docs=n_docs,
+                                   doc_len_mean=5.0)
+    log = synthetic.make_query_log(rng, corpus, pool_size=n_queries,
+                                   n_train=500, n_test=200, max_query_len=3)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-4,
+                                        max_clause_len=3, max_clauses=120)
+    return data, SCSKProblem.from_data(data)
+
+
+def _f(problem, sel_idx):
+    cq = (bitset.or_rows(problem.clause_query_bits[jnp.asarray(sel_idx)], 0)
+          if len(sel_idx) else jnp.zeros(problem.wq, jnp.uint32))
+    return float(problem.f_value(cq))
+
+
+def _g(problem, sel_idx):
+    cd = (bitset.or_rows(problem.clause_doc_bits[jnp.asarray(sel_idx)], 0)
+          if len(sel_idx) else jnp.zeros(problem.wd, jnp.uint32))
+    return float(problem.g_value(cd))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_monotone_submodular_f_and_g(seed):
+    """Theorems 3.3 / 3.4: monotonicity and diminishing returns."""
+    data, problem = _random_instance(seed)
+    c = problem.n_clauses
+    if c < 3:
+        return
+    rng = np.random.default_rng(seed + 1)
+    for fn in (_f, _g):
+        y = list(rng.choice(c, size=min(4, c - 1), replace=False))
+        extra = [j for j in range(c) if j not in y]
+        z = y + list(rng.choice(extra, size=min(3, len(extra)), replace=False))
+        j = int(rng.choice([i for i in range(c) if i not in z]))
+        gain_y = fn(problem, y + [j]) - fn(problem, y)
+        gain_z = fn(problem, z + [j]) - fn(problem, z)
+        assert gain_y >= -1e-9          # monotone
+        assert gain_z >= -1e-9
+        assert gain_y >= gain_z - 1e-6  # submodular (Y ⊆ Z)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_theorem_3_1_correctness(seed):
+    """Any clause selection yields a correct query classifier."""
+    from repro.core.tiering import ClauseTiering
+    data, problem = _random_instance(seed)
+    rng = np.random.default_rng(seed + 2)
+    c = problem.n_clauses
+    sel = np.zeros(c, bool)
+    sel[rng.choice(c, size=max(1, c // 4), replace=False)] = True
+    tiering = ClauseTiering.from_selection(data, sel)
+    assert tiering.verify_correctness(data)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_theorem_4_1_lower_bound_update(seed):
+    """g̲ updated by eq. (14) stays a valid lower bound along any greedy path."""
+    data, problem = _random_instance(seed)
+    c = problem.n_clauses
+    if c < 4:
+        return
+    rng = np.random.default_rng(seed + 3)
+    covered_d = jnp.zeros(problem.wd, jnp.uint32)
+    glow = np.asarray(problem.g_gains(covered_d), np.float64)  # exact at X^0
+    order = rng.permutation(c)[:5]
+    for j_t in order:
+        gg = np.asarray(problem.g_gains(covered_d), np.float64)
+        # invariant BEFORE update: glow <= exact gains
+        assert np.all(glow <= gg + 1e-6)
+        # select j_t, apply (14)
+        glow = np.maximum(0.0, glow - gg[j_t])
+        covered_d = covered_d | problem.clause_doc_bits[int(j_t)]
+    gg = np.asarray(problem.g_gains(covered_d), np.float64)
+    assert np.all(glow <= gg + 1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_theorem_4_2_refresh_set_contains_argmax(seed):
+    """The optimistic/pessimistic refresh set C always contains the exact
+    greedy argmax j^(t)."""
+    from repro.core.greedy import ratio_of
+    data, problem = _random_instance(seed)
+    c = problem.n_clauses
+    if c < 4:
+        return
+    rng = np.random.default_rng(seed + 4)
+    covered_q, covered_d = problem.empty_state()
+    # exact bounds at X^0, then take two arbitrary steps with (14)-updates
+    fbar = problem.f_gains(covered_q)
+    flow = fbar
+    gbar = problem.g_gains(covered_d)
+    glow = gbar
+    budget = float(problem.n_docs)
+    for j_t in rng.permutation(c)[:2]:
+        fg = problem.f_gains(covered_q)
+        gg = problem.g_gains(covered_d)
+        flow = jnp.maximum(0.0, flow - fg[int(j_t)])
+        glow = jnp.maximum(0.0, glow - gg[int(j_t)])
+        covered_q, covered_d = problem.add_clause(covered_q, covered_d, int(j_t))
+    fg = np.asarray(problem.f_gains(covered_q))
+    gg = np.asarray(problem.g_gains(covered_d))
+    exact_ratio = np.asarray(ratio_of(jnp.asarray(fg), jnp.asarray(gg)))
+    feasible = fg > 0
+    if not feasible.any():
+        return
+    j_star = int(np.argmax(np.where(feasible, exact_ratio, -np.inf)))
+    opt = np.asarray(ratio_of(fbar, glow))
+    pes = np.asarray(ratio_of(flow, gbar))
+    in_c = opt >= pes.max()
+    assert in_c[j_star]
