@@ -19,7 +19,7 @@ from benchmarks.common import emit
 
 
 def _heavy_tail_data():
-    from repro.data import incidence, synthetic
+    from repro.data import synthetic
     rng = np.random.default_rng(7)
     corpus = synthetic.make_corpus(rng, vocab_size=800, n_docs=4000,
                                    doc_len_mean=8.0)
@@ -30,9 +30,7 @@ def _heavy_tail_data():
 
 
 def run(out_dir: str = "artifacts/bench") -> dict:
-    from repro.core import SCSKProblem, flow, optpes_greedy
-    from repro.core.tiering import ClauseTiering
-    from repro.data import incidence
+    from repro import api
 
     corpus, log = _heavy_tail_data()
     budget = corpus.n_docs // 2
@@ -40,15 +38,13 @@ def run(out_dir: str = "artifacts/bench") -> dict:
     emit("fig5_novel_test_mass", 0.0, f"{novel:.4f}")
     points = []
 
-    # clause method across regularization λ
+    # clause method across regularization λ — through the pipeline facade
     for lam in (1e-3, 3e-4, 1e-4, 3e-5):
-        data = incidence.build_tiering_data(
-            corpus, log, min_support=lam, max_clauses=12000)
-        problem = SCSKProblem.from_data(data)
-        r = optpes_greedy(problem, budget, time_limit=60.0)
-        tier = ClauseTiering.from_selection(data, r.selected)
-        cov = tier.coverage(data)
-        elig = tier.classify_queries(data.log.query_bits)
+        pipe = (api.TieringPipeline.from_corpus(corpus, log)
+                .mine(min_support=lam, max_clauses=12000)
+                .solve("optpes", budget=budget, time_limit=60.0))
+        cov = pipe.coverage()
+        elig = pipe.tiering().classify_queries(pipe.data.log.query_bits)
         novel_cov = float(log.test_weights[
             elig & (log.train_weights == 0)].sum())
         points.append({"method": "clause", "lam": lam,
@@ -58,25 +54,28 @@ def run(out_dir: str = "artifacts/bench") -> dict:
              f"train={cov['train']:.4f};test={cov['test']:.4f};"
              f"novel={novel_cov:.4f}")
 
-    data = incidence.build_tiering_data(corpus, log, min_support=3e-4,
-                                        max_clauses=12000)
+    # flow baselines iterate the SAME registry via their data adapters
+    pipe = (api.TieringPipeline.from_corpus(corpus, log)
+            .mine(min_support=3e-4, max_clauses=12000))
     for lam in (0.0, 1e-4, 1e-3):
-        r = flow.flow_sgd(data, budget, lam=lam, steps=250)
+        r = api.solve(pipe.data, api.SolveConfig(
+            budget=budget, solver="flow-sgd",
+            options={"lam": lam, "steps": 250}))
         novel_cov = float(log.test_weights[
-            r.eligible_queries & (log.train_weights == 0)].sum())
+            r.extra["eligible_queries"] & (log.train_weights == 0)].sum())
         points.append({"method": "flow-sgd", "lam": lam,
-                       "train": r.train_coverage, "test": r.test_coverage,
+                       "train": r.f_final, "test": r.extra["test_coverage"],
                        "novel_cov": novel_cov})
-        emit(f"fig5_flowsgd_lam{lam:g}", 1e6 * r.wall_seconds,
-             f"train={r.train_coverage:.4f};test={r.test_coverage:.4f};"
+        emit(f"fig5_flowsgd_lam{lam:g}", 1e6 * r.time_history[-1],
+             f"train={r.f_final:.4f};test={r.extra['test_coverage']:.4f};"
              f"novel={novel_cov:.4f}")
-    for fn, nm in ((flow.popularity, "popularity"), (flow.flow_max, "flow-max")):
-        r = fn(data, budget)
+    for name, nm in (("flow-popularity", "popularity"), ("flow-max", "flow-max")):
+        r = api.solve(pipe.data, api.SolveConfig(budget=budget, solver=name))
         points.append({"method": nm, "lam": None,
-                       "train": r.train_coverage, "test": r.test_coverage,
+                       "train": r.f_final, "test": r.extra["test_coverage"],
                        "novel_cov": 0.0})
-        emit(f"fig5_{nm}", 1e6 * r.wall_seconds,
-             f"train={r.train_coverage:.4f};test={r.test_coverage:.4f}")
+        emit(f"fig5_{nm}", 1e6 * r.time_history[-1],
+             f"train={r.f_final:.4f};test={r.extra['test_coverage']:.4f}")
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig5_generalization.json"), "w") as f:

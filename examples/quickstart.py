@@ -1,4 +1,4 @@
-"""Quickstart: the full paper pipeline in ~40 lines.
+"""Quickstart: the full paper pipeline through the `repro.api` facade.
 
   data -> FPGrowth clause mining -> SCSK solve (Opt/Pes greedy) ->
   clause tiering -> two-tier serving with guaranteed-complete match sets.
@@ -12,37 +12,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import SCSKProblem, optpes_greedy  # noqa: E402
-from repro.core.tiering import ClauseTiering  # noqa: E402
-from repro.data import incidence, synthetic  # noqa: E402
-from repro.serve.engine import TieredEngine  # noqa: E402
+from repro import api  # noqa: E402
 
 
 def main() -> None:
     # 1. corpus + heavy-tailed query log (train/test split)
-    corpus, log = synthetic.make_tiering_dataset(seed=0, scale="tiny")
+    pipe = api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+    corpus, log = pipe.corpus, pipe.log
     print(f"corpus: {corpus.n_docs} docs, {log.n_queries} unique queries, "
           f"{log.novel_test_mass():.1%} of test traffic unseen in training")
 
     # 2. regularized ground set: frequent clauses (paper §3.3, FPGrowth)
-    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
-    print(f"mined {len(data.clauses)} clauses with support >= 1e-3")
+    pipe.mine(min_support=1e-3)
+    print(f"mined {len(pipe.data.clauses)} clauses with support >= 1e-3")
 
-    # 3. SCSK solve: max query coverage s.t. |Tier-1 docs| <= B (paper §4)
-    problem = SCSKProblem.from_data(data)
-    budget = corpus.n_docs // 2
-    result = optpes_greedy(problem, budget)
-    print(f"solved: {result.summary()}")
+    # 3. SCSK solve: max query coverage s.t. |Tier-1 docs| <= B (paper §4).
+    #    Any registered solver works here — api.list_solvers() names them.
+    pipe.solve("optpes", budget_frac=0.5)
+    print(f"solved: {pipe.result.summary()}")
 
     # 4. deployable tiering artifact + coverage report (paper Fig. 5 axes)
-    tiering = ClauseTiering.from_selection(data, result.selected)
-    cov = tiering.coverage(data)
+    cov = pipe.coverage()
     print(f"coverage: train={cov['train']:.3f} test={cov['test']:.3f} "
           f"tier1={cov['tier1_frac']:.2%} of corpus")
-    assert tiering.verify_correctness(data), "Theorem 3.1 violated?!"
+    assert pipe.verify(), "Theorem 3.1 violated?!"
 
     # 5. serve traffic through the two-tier engine
-    engine = TieredEngine(data.postings, tiering, data.n_docs)
+    engine = pipe.deploy()
     queries = [log.queries[i] for i in np.random.default_rng(0).choice(
         log.n_queries, 256)]
     results = engine.serve(queries)
@@ -51,6 +47,12 @@ def main() -> None:
     print(f"served {len(queries)} queries — match sets identical to "
           f"single-tier oracle; {engine.stats.tier1_fraction:.1%} hit Tier 1, "
           f"word-traffic saving {engine.stats.cost_saving:.1%}")
+
+    # 6. budget sweeps warm-start one SolverState instead of re-solving
+    #    (paper Fig. 3: greedy finds the whole solution path)
+    sweep = pipe.sweep([corpus.n_docs // 4, corpus.n_docs // 2], "greedy")
+    print("sweep:  " + "; ".join(
+        f"B={int(r.g_final)}: f={r.f_final:.3f}" for r in sweep))
 
 
 if __name__ == "__main__":

@@ -22,7 +22,10 @@ from repro.models.tiered_retrieval import (  # noqa: E402
 
 
 def main() -> None:
-    index = build_tiered_index(seed=0, scale="tiny", budget_frac=0.5)
+    # offline: build_tiered_index runs the api.TieringPipeline facade
+    # (mine -> solve -> tiering); any registered solver name slots in
+    index = build_tiered_index(seed=0, scale="tiny", budget_frac=0.5,
+                               solver="optpes")
     data = index.data
     n_items = data.n_docs
     print(f"catalog: {n_items} items; Tier-1 = {index.tier1_frac:.1%} "

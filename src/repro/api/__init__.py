@@ -1,0 +1,47 @@
+"""repro.api — the unified solver surface.
+
+One import gives the whole redesigned API:
+
+  * `SolverState`      — registered-dataclass pytree of solve progress;
+                         every solver is warm-startable/checkpointable.
+  * `SolveConfig`      — one config dataclass for every solver (budget,
+                         max_steps, record_every, time_limit, seed, options).
+  * `solve(problem, config, state=None)`
+                       — the uniform entrypoint over the solver registry
+                         (all SCSK solvers + the flow-baseline adapters).
+  * `solve_sweep(problem, budgets, config)`
+                       — warm-started budget sweeps (Fig. 2/3) that resume
+                         the same `SolverState` instead of re-solving.
+  * `register_solver`  — decorator to add new solvers to the registry.
+  * `Trace`            — shared per-solve recorder (history, timing,
+                         `on_step`/`on_record` callbacks, time limits).
+  * `TieringPipeline`  — fluent facade for the full paper pipeline:
+                         data -> mine -> solve -> tiering -> deploy.
+
+Quickstart:
+
+    from repro import api
+
+    pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+            .mine(min_support=1e-3)
+            .solve("optpes", budget_frac=0.5))
+    assert pipe.verify()                  # Theorem 3.1
+    engine = pipe.deploy()                # serve.TieredEngine
+"""
+from repro.core.config import SolveConfig                      # noqa: F401
+from repro.core.problem import SCSKProblem, SolverResult       # noqa: F401
+from repro.core.registry import (                              # noqa: F401
+    SolverSpec, get_solver, list_solvers, register_solver, solve, solve_sweep)
+from repro.core.state import SolverState                       # noqa: F401
+from repro.core.trace import Trace                             # noqa: F401
+
+# importing these populates the registry
+import repro.core  # noqa: F401,E402  (SCSK solvers self-register)
+from repro.api import flow_adapter  # noqa: F401,E402  (flow baselines)
+from repro.api.pipeline import TieringPipeline  # noqa: F401,E402
+
+__all__ = [
+    "SCSKProblem", "SolveConfig", "SolverResult", "SolverSpec", "SolverState",
+    "TieringPipeline", "Trace", "get_solver", "list_solvers",
+    "register_solver", "solve", "solve_sweep",
+]

@@ -1,12 +1,44 @@
-from repro.core.agnostic import agnostic_greedy          # noqa: F401
-from repro.core.greedy import greedy, greedy_step        # noqa: F401
-from repro.core.isk import isk                           # noqa: F401
-from repro.core.lazy_greedy import lazy_greedy           # noqa: F401
-from repro.core.optpes import optpes_greedy, optpes_round  # noqa: F401
-from repro.core.problem import SCSKProblem, SolverResult   # noqa: F401
-from repro.core.stochastic import stochastic_greedy      # noqa: F401
-from repro.core.tiering import ClauseTiering             # noqa: F401
+"""SCSK core: problem oracles, solver state, and the solver family.
 
+The canonical way to run a solver is the `repro.api` layer:
+
+    from repro import api
+
+    pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+            .mine(min_support=1e-3)
+            .solve("optpes", budget_frac=0.5))
+    engine = pipe.deploy()                      # -> serve.TieredEngine
+
+or, one level lower, the uniform registry entrypoint:
+
+    cfg = api.SolveConfig(budget=100.0, solver="greedy")
+    result = api.solve(problem, cfg)            # -> SolverResult
+    more = api.solve(problem, cfg.replace(budget=200.0), state=result.state)
+
+Every solver in this package (greedy eq. 13, lazy Alg. 1, opt/pes Alg. 2,
+isk1/isk2 Alg. 3, agnostic, stochastic) self-registers with
+`@register_solver(name)` and shares the `SolverState` pytree + `Trace`
+recorder, so all of them are warm-startable/checkpointable through one
+signature: `solve(problem, config, state=None)`.
+
+The bare functions (`greedy(problem, budget, ...)`, ...) and the `SOLVERS`
+dict remain as thin legacy shims over the registry.
+"""
+from repro.core.agnostic import agnostic_greedy, solve_agnostic    # noqa: F401
+from repro.core.config import SolveConfig                          # noqa: F401
+from repro.core.greedy import greedy, greedy_step, solve_greedy    # noqa: F401
+from repro.core.isk import isk, solve_isk1, solve_isk2             # noqa: F401
+from repro.core.lazy_greedy import lazy_greedy, solve_lazy_greedy  # noqa: F401
+from repro.core.optpes import optpes_greedy, optpes_round, solve_optpes  # noqa: F401
+from repro.core.problem import SCSKProblem, SolverResult           # noqa: F401
+from repro.core.registry import (                                  # noqa: F401
+    get_solver, list_solvers, register_solver, solve, solve_sweep)
+from repro.core.state import SolverState                           # noqa: F401
+from repro.core.stochastic import solve_stochastic, stochastic_greedy  # noqa: F401
+from repro.core.tiering import ClauseTiering                       # noqa: F401
+from repro.core.trace import Trace                                 # noqa: F401
+
+# Legacy name -> callable(problem, budget, **kw) shim over the registry.
 SOLVERS = {
     "greedy": greedy,
     "lazy": lazy_greedy,

@@ -5,37 +5,46 @@ with a classic lazy heap [Minoux 1978]. Feasibility of the popped winner is
 still enforced (g(X ∪ {j}) <= B) — matching the paper's §5.1 description:
 "much faster ... because it ignores the constraint in the selection process,
 [but] converges to a clearly suboptimal solution".
+
+Registered as "agnostic" (`repro.api`).
 """
 from __future__ import annotations
 
 import heapq
-import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import SolveConfig
 from repro.core.lazy_greedy import _exact_gains_one, _singleton_gains
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
 
 
-def agnostic_greedy(problem: SCSKProblem, budget: float, *,
-                    max_steps: int | None = None,
-                    time_limit: float | None = None) -> SolverResult:
+@register_solver("agnostic", supports_state=True,
+                 description="f-gain-only lazy greedy baseline (§5.1)")
+def solve_agnostic(problem: SCSKProblem, config: SolveConfig,
+                   state: SolverState | None = None) -> SolverResult:
     c = problem.n_clauses
-    covered_q, covered_d = problem.empty_state()
-    fbar_d, gg_d = _singleton_gains(problem, covered_q, covered_d)
+    state = problem.init_state() if state is None else state
+    covered_q, covered_d = state.covered_q, state.covered_d
+    budget = config.budget
+
+    fbar_d, _ = _singleton_gains(problem, covered_q, covered_d)
     fbar = np.asarray(fbar_d, np.float64)
-    n_exact = 2 * c
 
-    selected = np.zeros(c, bool)
+    selected = np.asarray(state.selected).copy()
     order: list[int] = []
-    g_used, f_val = 0.0, 0.0
-    fh, gh, th = [0.0], [0.0], [0.0]
-    t0 = time.perf_counter()
+    g_used = float(state.g_used)
+    f_val = float(problem.f_value(covered_q))
+    trace = Trace(config, f0=f_val, g0=g_used)
+    trace.add_evals(2 * c)
 
-    heap = [(-fbar[j], j) for j in range(c) if fbar[j] > 0]
+    heap = [(-fbar[j], j) for j in range(c) if fbar[j] > 0 and not selected[j]]
     heapq.heapify(heap)
-    steps = max_steps or c
+    steps = config.max_steps or c
     for _ in range(steps):
         chosen = -1
         while heap:
@@ -44,7 +53,7 @@ def agnostic_greedy(problem: SCSKProblem, budget: float, *,
                 continue
             fg, gg = _exact_gains_one(problem, covered_q, covered_d, jnp.int32(j))
             fbar[j] = float(fg)
-            n_exact += 2
+            trace.add_evals(2)
             if fbar[j] <= 0:
                 continue
             if g_used + float(gg) > budget:
@@ -61,17 +70,21 @@ def agnostic_greedy(problem: SCSKProblem, budget: float, *,
         order.append(chosen)
         f_val += fbar[chosen]
         g_used = float(problem.g_value(covered_d))
-        fh.append(f_val)
-        gh.append(g_used)
-        th.append(time.perf_counter() - t0)
-        if time_limit is not None and th[-1] > time_limit:
+        trace.on_select(f_val, g_used)
+        if trace.should_stop():
             break
 
-    return SolverResult(
-        name="constraint-agnostic",
-        selected=selected, order=order,
-        f_final=float(problem.f_value(covered_q)),
-        g_final=g_used,
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th), n_exact_evals=n_exact,
-    )
+    final = SolverState(
+        covered_q=covered_q, covered_d=covered_d,
+        selected=jnp.asarray(selected), g_used=jnp.float32(g_used),
+        step=state.step + len(order))
+    return trace.result("constraint-agnostic", problem, final, order)
+
+
+def agnostic_greedy(problem: SCSKProblem, budget: float, *,
+                    max_steps: int | None = None,
+                    time_limit: float | None = None) -> SolverResult:
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return solve_agnostic(problem, SolveConfig(
+        budget=budget, solver="agnostic", max_steps=max_steps,
+        time_limit=time_limit))

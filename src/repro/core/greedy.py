@@ -4,17 +4,24 @@ Each step evaluates f(j|X) and g(j|X) for every candidate (two fused kernel
 calls) and adds argmax_{feasible} f(j|X)/g(j|X). This is the semantics of
 record: Lazy Greedy (Alg. 1) and Opt/Pes Greedy (Alg. 2) must select the same
 sequence (up to exact ties), which the tests assert.
+
+Registered as "greedy" (`repro.api`). Warm-startable: pass the `state` of a
+previous `SolverResult` to resume — with `stop_policy="truncate"` the
+selection path is budget-independent, so `solve_sweep` resumes across budgets
+instead of re-solving from scratch (paper Fig. 3).
 """
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.config import SolveConfig
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
 
 BIG = 1e12   # ratio stand-in for "free" clauses (g-gain == 0, f-gain > 0)
 
@@ -23,61 +30,64 @@ def ratio_of(fg: jax.Array, gg: jax.Array) -> jax.Array:
     return jnp.where(gg <= 0.0, fg * BIG, fg / jnp.maximum(gg, 1e-30))
 
 
-@functools.partial(jax.jit, static_argnames=("cost_aware",))
-def greedy_step(problem: SCSKProblem, covered_q, covered_d, selected,
-                g_used, budget, *, cost_aware: bool = True):
-    """One greedy selection. Returns updated state + (j, stop)."""
-    fg = problem.f_gains(covered_q)
-    gg = problem.g_gains(covered_d)
-    feasible = (~selected) & (g_used + gg <= budget) & (fg > 0.0)
+@functools.partial(jax.jit, static_argnames=("cost_aware", "truncate"))
+def greedy_step(problem: SCSKProblem, state: SolverState, budget, *,
+                cost_aware: bool = True, truncate: bool = False):
+    """One greedy selection over a SolverState.
+
+    Returns (state, f_val, j, stop). `truncate=False` masks the score to
+    feasible candidates ("exhaust": classic greedy); `truncate=True` ranks
+    ALL unselected candidates and stops at the first infeasible argmax, which
+    makes the selection path budget-independent (warm-start sweeps).
+    """
+    fg = problem.f_gains(state.covered_q)
+    gg = problem.g_gains(state.covered_d)
+    candidates = (~state.selected) & (fg > 0.0)
+    feasible = candidates & (state.g_used + gg <= budget)
     score = ratio_of(fg, gg) if cost_aware else fg
-    score = jnp.where(feasible, score, -jnp.inf)
+    score = jnp.where(candidates if truncate else feasible, score, -jnp.inf)
     j = jnp.argmax(score)
     stop = ~feasible[j]
-    covered_q2, covered_d2 = problem.add_clause(covered_q, covered_d, j)
-    covered_q = jnp.where(stop, covered_q, covered_q2)
-    covered_d = jnp.where(stop, covered_d, covered_d2)
-    selected = selected.at[j].set(jnp.where(stop, selected[j], True))
-    g_used = problem.g_value(covered_d)
-    f_val = problem.f_value(covered_q)
-    return covered_q, covered_d, selected, g_used, f_val, j, stop
+    applied = problem.apply(state, j)
+    state = jax.tree_util.tree_map(
+        lambda cur, new: jnp.where(stop, cur, new), state, applied)
+    f_val = problem.f_value(state.covered_q)
+    return state, f_val, j, stop
+
+
+@register_solver("greedy", supports_state=True, supports_truncate=True,
+                 description="dense cost-ratio greedy (paper eq. 13)")
+def solve_greedy(problem: SCSKProblem, config: SolveConfig,
+                 state: SolverState | None = None) -> SolverResult:
+    cost_aware = bool(config.opt("cost_aware", True))
+    state = problem.init_state() if state is None else state
+    trace = Trace(config, f0=float(problem.f_value(state.covered_q)),
+                  g0=float(state.g_used))
+    budget = jnp.float32(config.budget)
+    truncate = config.stop_policy == "truncate"
+    c = problem.n_clauses
+
+    order: list[int] = []
+    steps = config.max_steps or c
+    for _ in range(steps):
+        state, f_val, j, stop = greedy_step(
+            problem, state, budget, cost_aware=cost_aware, truncate=truncate)
+        trace.add_evals(2 * c)
+        if bool(stop):
+            break
+        order.append(int(j))
+        trace.on_select(float(f_val), float(state.g_used))
+        if trace.should_stop():
+            break
+    name = "greedy" if cost_aware else "agnostic-dense"
+    return trace.result(name, problem, state, order)
 
 
 def greedy(problem: SCSKProblem, budget: float, *, cost_aware: bool = True,
            max_steps: int | None = None, record_every: int = 1,
            time_limit: float | None = None) -> SolverResult:
-    c = problem.n_clauses
-    covered_q, covered_d = problem.empty_state()
-    selected = jnp.zeros(c, bool)
-    g_used = jnp.float32(0.0)
-    budget = jnp.float32(budget)
-
-    order: list[int] = []
-    fh, gh, th = [0.0], [0.0], [0.0]
-    t0 = time.perf_counter()
-    n_evals = 0
-    steps = max_steps or c
-    for t in range(steps):
-        covered_q, covered_d, selected, g_used, f_val, j, stop = greedy_step(
-            problem, covered_q, covered_d, selected, g_used, budget,
-            cost_aware=cost_aware)
-        n_evals += 2 * c
-        if bool(stop):
-            break
-        order.append(int(j))
-        if (t % record_every) == 0:
-            fh.append(float(f_val))
-            gh.append(float(g_used))
-            th.append(time.perf_counter() - t0)
-        if time_limit is not None and th[-1] > time_limit:
-            break
-    name = "greedy" if cost_aware else "agnostic-dense"
-    return SolverResult(
-        name=name,
-        selected=np.asarray(selected),
-        order=order,
-        f_final=float(problem.f_value(covered_q)),
-        g_final=float(g_used),
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th), n_exact_evals=n_evals,
-    )
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return solve_greedy(problem, SolveConfig(
+        budget=budget, solver="greedy", max_steps=max_steps,
+        record_every=record_every, time_limit=time_limit,
+        options={"cost_aware": cost_aware}))

@@ -13,15 +13,18 @@ submodular knapsack solved with a batched cost-ratio greedy.
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
+from repro.core.config import SolveConfig
 from repro.core.greedy import ratio_of
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
 
 
 @functools.partial(jax.jit, donate_argnames=())
@@ -76,10 +79,12 @@ def _coverage_counts(rows: jax.Array) -> jax.Array:
     return acc
 
 
-def isk(problem: SCSKProblem, budget: float, *, variant: int = 1,
-        max_outer: int = 10, max_inner: int | None = None,
-        time_limit: float | None = None) -> SolverResult:
+def _solve_isk(problem: SCSKProblem, config: SolveConfig, variant: int,
+               state: SolverState | None = None) -> SolverResult:
     assert variant in (1, 2)
+    if state is not None:
+        raise ValueError("isk does not support warm starts")
+    budget = config.budget
     c = problem.n_clauses
     singleton_g = problem.g_gains(jnp.zeros(problem.wd, jnp.uint32))
     if variant == 2:
@@ -91,10 +96,12 @@ def isk(problem: SCSKProblem, budget: float, *, variant: int = 1,
             weights=only_once)
 
     selected = np.zeros(c, bool)
-    fh, gh, th = [0.0], [0.0], [0.0]
-    t0 = time.perf_counter()
+    trace = Trace(config)
     f_final, g_final = 0.0, 0.0
-    max_inner = max_inner or c
+    max_inner = config.opt("max_inner") or c
+    max_outer = int(config.opt("max_outer", 10))
+    covered_q2 = jnp.zeros(problem.wq, jnp.uint32)
+    covered_d2 = jnp.zeros(problem.wd, jnp.uint32)
 
     for _ in range(max_outer):
         sel_idx = np.nonzero(selected)[0]
@@ -123,19 +130,37 @@ def isk(problem: SCSKProblem, budget: float, *, variant: int = 1,
                       if len(sel_idx2) else jnp.zeros(problem.wq, jnp.uint32))
         f_final = float(problem.f_value(covered_q2))
         g_final = float(problem.g_value(covered_d2))
-        fh.append(f_final)
-        gh.append(g_final)
-        th.append(time.perf_counter() - t0)
+        trace.on_select(f_final, g_final)
         if np.array_equal(new_sel, selected):
             break
         selected = new_sel
-        if time_limit is not None and th[-1] > time_limit:
+        if trace.should_stop():
             break
 
-    return SolverResult(
-        name=f"isk{variant}",
-        selected=selected, order=list(np.nonzero(selected)[0]),
-        f_final=f_final, g_final=g_final,
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th),
-    )
+    final = SolverState(
+        covered_q=covered_q2, covered_d=covered_d2,
+        selected=jnp.asarray(selected), g_used=jnp.float32(g_final),
+        step=jnp.int32(int(selected.sum())))
+    return trace.result(f"isk{variant}", problem, final,
+                        list(np.nonzero(selected)[0]))
+
+
+@register_solver("isk1", description="iterative submodular knapsack, ĝ₁ bound")
+def solve_isk1(problem: SCSKProblem, config: SolveConfig,
+               state: SolverState | None = None) -> SolverResult:
+    return _solve_isk(problem, config, 1, state)
+
+
+@register_solver("isk2", description="iterative submodular knapsack, ĝ₂ bound")
+def solve_isk2(problem: SCSKProblem, config: SolveConfig,
+               state: SolverState | None = None) -> SolverResult:
+    return _solve_isk(problem, config, 2, state)
+
+
+def isk(problem: SCSKProblem, budget: float, *, variant: int = 1,
+        max_outer: int = 10, max_inner: int | None = None,
+        time_limit: float | None = None) -> SolverResult:
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return _solve_isk(problem, SolveConfig(
+        budget=budget, solver=f"isk{variant}", time_limit=time_limit,
+        options={"max_outer": max_outer, "max_inner": max_inner}), variant)

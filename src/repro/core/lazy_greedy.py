@@ -9,18 +9,26 @@ Keeps a max-heap keyed by the optimistic ratio f̄(j|X)/g̲(j|X) where
 Only heap-top candidates get exact (expensive) re-evaluation, so the count of
 exact oracle calls — `n_exact_evals` — is the laziness metric benchmarked in
 Fig. 2/4. The selected sequence provably equals dense greedy's (tested).
+
+Registered as "lazy" (`repro.api`). Warm-startable: resuming re-seeds the
+bounds with exact singleton gains at the resumed state (valid upper/lower
+bounds by submodularity), so the continuation equals a fresh lazy solve over
+the residual problem.
 """
 from __future__ import annotations
 
 import heapq
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import SolveConfig
 from repro.core.greedy import BIG
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
 
 
 @jax.jit
@@ -39,25 +47,27 @@ def _ratio(f: float, g: float) -> float:
     return f * BIG if g <= 0 else f / g
 
 
-def lazy_greedy(problem: SCSKProblem, budget: float, *,
-                max_steps: int | None = None,
-                time_limit: float | None = None) -> SolverResult:
+@register_solver("lazy", supports_state=True,
+                 description="lazy greedy with Thm-4.1 bounds (Alg. 1)")
+def solve_lazy_greedy(problem: SCSKProblem, config: SolveConfig,
+                      state: SolverState | None = None) -> SolverResult:
     c = problem.n_clauses
-    covered_q, covered_d = problem.empty_state()
+    state = problem.init_state() if state is None else state
+    covered_q, covered_d = state.covered_q, state.covered_d
+    budget = config.budget
 
     fbar_d, gg_d = _singleton_gains(problem, covered_q, covered_d)
     fbar = np.asarray(fbar_d, np.float64)
     glow = np.asarray(gg_d, np.float64)
-    n_exact = 2 * c
 
-    selected = np.zeros(c, bool)
+    selected = np.asarray(state.selected).copy()
     order: list[int] = []
-    g_used = 0.0
-    f_val = 0.0
-    fh, gh, th = [0.0], [0.0], [0.0]
-    t0 = time.perf_counter()
+    g_used = float(state.g_used)
+    f_val = float(problem.f_value(covered_q))
+    trace = Trace(config, f0=f_val, g0=g_used)
+    trace.add_evals(2 * c)
 
-    steps = max_steps or c
+    steps = config.max_steps or c
     for _ in range(steps):
         # rebuild heap of optimistically-feasible candidates (Alg. 1 outer loop)
         heap = [(-_ratio(fbar[j], glow[j]), j) for j in range(c)
@@ -69,7 +79,7 @@ def lazy_greedy(problem: SCSKProblem, budget: float, *,
             # tighten bounds with exact evaluation
             fg, gg = _exact_gains_one(problem, covered_q, covered_d, jnp.int32(j))
             fbar[j], glow[j] = float(fg), float(gg)
-            n_exact += 2
+            trace.add_evals(2)
             if g_used + glow[j] > budget:
                 continue                          # Alg. 1: infeasible, skip
             if fbar[j] <= 0:
@@ -92,17 +102,21 @@ def lazy_greedy(problem: SCSKProblem, budget: float, *,
         # Theorem 4.1 bound update (eq. 14) for every candidate
         glow = np.maximum(0.0, glow - gg_star)
         # f̄ stays as-is: stale f-gains upper-bound current ones (submodularity)
-        fh.append(f_val)
-        gh.append(g_used)
-        th.append(time.perf_counter() - t0)
-        if time_limit is not None and th[-1] > time_limit:
+        trace.on_select(f_val, g_used)
+        if trace.should_stop():
             break
 
-    return SolverResult(
-        name="lazy-greedy",
-        selected=selected, order=order,
-        f_final=float(problem.f_value(covered_q)),
-        g_final=g_used,
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th), n_exact_evals=n_exact,
-    )
+    final = SolverState(
+        covered_q=covered_q, covered_d=covered_d,
+        selected=jnp.asarray(selected), g_used=jnp.float32(g_used),
+        step=state.step + len(order))
+    return trace.result("lazy-greedy", problem, final, order)
+
+
+def lazy_greedy(problem: SCSKProblem, budget: float, *,
+                max_steps: int | None = None,
+                time_limit: float | None = None) -> SolverResult:
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return solve_lazy_greedy(problem, SolveConfig(
+        budget=budget, solver="lazy", max_steps=max_steps,
+        time_limit=time_limit))

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
-from repro.core.optpes import optpes_greedy
+from repro.core.config import SolveConfig
 from repro.core.problem import SCSKProblem
 from repro.core.tiering import ClauseTiering
 
@@ -52,9 +52,11 @@ class MultiTiering:
         return float(sum(c * sizes[k] for k, c in enumerate(cov)))
 
 
-def build_multitier(data, budgets: list[int], *, solver=optpes_greedy,
+def build_multitier(data, budgets: list[int], *, solver="optpes",
                     **solver_kw) -> MultiTiering:
     """budgets: ascending Tier-1..Tier-(n-1) document budgets.
+    `solver` is a registry name (or a legacy `(problem, budget, **kw)`
+    callable); solver-specific knobs ride in `solver_kw`.
 
     Construction: ONE greedy solve at the largest budget; each smaller tier
     is the longest greedy-path PREFIX fitting its budget. This is exactly
@@ -70,7 +72,16 @@ def build_multitier(data, budgets: list[int], *, solver=optpes_greedy,
     assert list(budgets) == sorted(budgets), "budgets must ascend"
     n_docs = data.n_docs
     problem = SCSKProblem.from_data(data)
-    result = solver(problem, budgets[-1], **solver_kw)
+    if callable(solver):
+        result = solver(problem, budgets[-1], **solver_kw)
+    else:
+        from repro.core import registry
+        cfg_kw = {k: solver_kw.pop(k) for k in
+                  ("max_steps", "record_every", "time_limit", "seed",
+                   "stop_policy") if k in solver_kw}
+        result = registry.solve(problem, SolveConfig(
+            budget=float(budgets[-1]), solver=solver, options=solver_kw,
+            **cfg_kw))
     order = result.order
     assert order, "empty solve"
 

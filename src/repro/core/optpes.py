@@ -14,14 +14,16 @@ Bounds maintained per candidate (all eq.-14-style updates, Thm 4.1):
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.greedy import BIG, ratio_of
+from repro.core.config import SolveConfig
+from repro.core.greedy import ratio_of
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
 
 NEG = -jnp.inf
 
@@ -161,47 +163,53 @@ def optpes_round(problem: SCSKProblem, state, budget, *, k: int):
     return state, do_select, any_feasible, j_star
 
 
-def optpes_greedy(problem: SCSKProblem, budget: float, *, k: int = 256,
-                  max_steps: int | None = None,
-                  time_limit: float | None = None) -> SolverResult:
+@register_solver("optpes", supports_state=True,
+                 description="batched optimistic/pessimistic greedy (Alg. 2)")
+def solve_optpes(problem: SCSKProblem, config: SolveConfig,
+                 state: SolverState | None = None) -> SolverResult:
     c = problem.n_clauses
-    k = min(k, c)
-    covered_q, covered_d = problem.empty_state()
+    k = min(int(config.opt("k", 256)), c)
+    state = problem.init_state() if state is None else state
+    covered_q, covered_d = state.covered_q, state.covered_d
+    f0 = float(problem.f_value(covered_q))
+    # warm start: exact singleton gains at the resumed state are valid
+    # optimistic AND pessimistic bounds (they are exact)
     fg0 = problem.f_gains(covered_q)
     gg0 = problem.g_gains(covered_d)
-    state = (covered_q, covered_d, jnp.zeros(c, bool), jnp.float32(0.0),
-             fg0, fg0, gg0, gg0, jnp.float32(0.0))
-    budget = jnp.float32(budget)
+    round_state = (covered_q, covered_d, state.selected, state.g_used,
+                   fg0, fg0, gg0, gg0, jnp.float32(f0))
+    budget = jnp.float32(config.budget)
 
+    trace = Trace(config, f0=f0, g0=float(state.g_used))
+    trace.add_evals(2 * c)
     order: list[int] = []
-    fh, gh, th = [0.0], [0.0], [0.0]
-    n_exact = 2 * c
-    t0 = time.perf_counter()
-    max_sel = max_steps or c
+    max_sel = config.max_steps or c
     rounds_cap = 50 * c // k + 200
     rounds = 0
     while len(order) < max_sel and rounds < rounds_cap:
-        state, did, any_feasible, j_star = optpes_round(
-            problem, state, budget, k=k)
+        round_state, did, any_feasible, j_star = optpes_round(
+            problem, round_state, budget, k=k)
         rounds += 1
-        n_exact += 2 * k
+        trace.add_evals(2 * k)
         if not bool(any_feasible):
             break
         if bool(did):
             order.append(int(j_star))
-            fh.append(float(state[8]))
-            gh.append(float(state[3]))
-            th.append(time.perf_counter() - t0)
-            if time_limit is not None and th[-1] > time_limit:
+            trace.on_select(float(round_state[8]), float(round_state[3]))
+            if trace.should_stop():
                 break
 
-    covered_q, covered_d = state[0], state[1]
-    return SolverResult(
-        name=f"optpes-k{k}",
-        selected=np.asarray(state[2]),
-        order=order,
-        f_final=float(problem.f_value(covered_q)),
-        g_final=float(state[3]),
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th), n_exact_evals=n_exact,
-    )
+    final = SolverState(
+        covered_q=round_state[0], covered_d=round_state[1],
+        selected=round_state[2], g_used=round_state[3],
+        step=state.step + len(order))
+    return trace.result(f"optpes-k{k}", problem, final, order)
+
+
+def optpes_greedy(problem: SCSKProblem, budget: float, *, k: int = 256,
+                  max_steps: int | None = None,
+                  time_limit: float | None = None) -> SolverResult:
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return solve_optpes(problem, SolveConfig(
+        budget=budget, solver="optpes", max_steps=max_steps,
+        time_limit=time_limit, options={"k": k}))

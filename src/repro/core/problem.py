@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
+from repro.core.state import SolverState
 from repro.kernels import ops
 
 
@@ -71,6 +72,30 @@ class SCSKProblem:
     def empty_state(self):
         return (jnp.zeros(self.wq, jnp.uint32), jnp.zeros(self.wd, jnp.uint32))
 
+    # -- solver state ---------------------------------------------------------
+    def init_state(self) -> SolverState:
+        """Fresh (cold-start) solver state: nothing selected, nothing covered."""
+        covered_q, covered_d = self.empty_state()
+        return SolverState(
+            covered_q=covered_q,
+            covered_d=covered_d,
+            selected=jnp.zeros(self.n_clauses, bool),
+            g_used=jnp.float32(0.0),
+            step=jnp.int32(0),
+        )
+
+    def apply(self, state: SolverState, j: jax.Array) -> SolverState:
+        """Select clause j: fold its coverage into the state. jit-safe."""
+        covered_q, covered_d = self.add_clause(state.covered_q,
+                                               state.covered_d, j)
+        return SolverState(
+            covered_q=covered_q,
+            covered_d=covered_d,
+            selected=state.selected.at[j].set(True),
+            g_used=self.g_value(covered_d),
+            step=state.step + 1,
+        )
+
     # -- oracles --------------------------------------------------------------
     def f_gains(self, covered_q: jax.Array, *, rows: jax.Array | None = None,
                 weights: jax.Array | None = None) -> jax.Array:
@@ -102,13 +127,15 @@ class SolverResult:
     """Common result record for every solver (drives Figs. 2/3/5)."""
     name: str
     selected: np.ndarray            # bool [C]
-    order: list[int]                # selection order (greedy family)
+    order: list[int]                # selections made BY THIS CALL, in order
     f_final: float
     g_final: float
     f_history: np.ndarray
     g_history: np.ndarray
     time_history: np.ndarray        # cumulative wall seconds per recorded point
     n_exact_evals: int = 0          # marginal-gain evaluations (laziness metric)
+    state: SolverState | None = None  # final state; resume via solve(..., state=)
+    extra: dict = dataclasses.field(default_factory=dict)  # solver-specific
 
     def summary(self) -> str:
         return (f"{self.name}: f={self.f_final:.4f} g={self.g_final:.0f} "

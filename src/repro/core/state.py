@@ -1,0 +1,43 @@
+"""SolverState: the explicit, checkpointable state shared by every solver.
+
+A registered-dataclass pytree, so it passes through `jax.jit` boundaries,
+`jax.lax.cond` branches, and `jax.tree_util.tree_map` unchanged. Holding the
+full solve state in one value is what makes every solver warm-startable:
+`solve(problem, cfg_B1)` returns a `SolverResult` carrying its final state,
+and `solve(problem, cfg_B2, state=result.state)` resumes it — the budget-sweep
+API (Figs. 2/3) is built on exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["covered_q", "covered_d", "selected", "g_used", "step"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class SolverState:
+    """Solve progress over an `SCSKProblem`.
+
+    covered_q : uint32 [Wq]  packed bitset of covered queries, ∪_{c∈X} {q : c⊆q}
+    covered_d : uint32 [Wd]  packed bitset of Tier-1 docs, ∪_{c∈X} m(c)
+    selected  : bool   [C]   clause membership of X
+    g_used    : f32 scalar   g(X) = |covered_d| (the knapsack fill)
+    step      : i32 scalar   number of selections so far
+    """
+    covered_q: jax.Array
+    covered_d: jax.Array
+    selected: jax.Array
+    g_used: jax.Array
+    step: jax.Array
+
+    def n_selected(self) -> int:
+        return int(self.selected.sum())
+
+    def replace(self, **kw) -> "SolverState":
+        return dataclasses.replace(self, **kw)

@@ -10,16 +10,71 @@ constraint must never be violated). The final objective is reported exactly.
 The estimator is unbiased: E[f̂(j|X)] = f(j|X); with minibatch size m the
 selection matches exact greedy w.h.p. for gaps >> 1/sqrt(m) — the tests
 check end-objective parity within a few percent at small m.
+
+Registered as "stochastic" (`repro.api`); minibatch size via
+`options={"batch_queries": m}`, RNG via `config.seed`.
 """
 from __future__ import annotations
 
-import time
-
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import SolveConfig
 from repro.core.greedy import ratio_of
 from repro.core.problem import SCSKProblem, SolverResult
+from repro.core.registry import register_solver
+from repro.core.state import SolverState
+from repro.core.trace import Trace
+
+
+@jax.jit
+def _stochastic_step(problem: SCSKProblem, state: SolverState, budget, w_mb):
+    fg = problem.f_gains(state.covered_q, weights=w_mb)  # minibatch estimate
+    gg = problem.g_gains(state.covered_d)                # exact cost
+    feasible = (~state.selected) & (state.g_used + gg <= budget) & (fg > 0.0)
+    score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
+    j = jnp.argmax(score)
+    stop = ~feasible[j]
+    applied = problem.apply(state, j)
+    state = jax.tree_util.tree_map(
+        lambda cur, new: jnp.where(stop, cur, new), state, applied)
+    return state, j, stop
+
+
+@register_solver("stochastic", supports_state=True,
+                 description="minibatch-f greedy (§3.2, Karimi-style)")
+def solve_stochastic(problem: SCSKProblem, config: SolveConfig,
+                     state: SolverState | None = None) -> SolverResult:
+    batch_queries = int(config.opt("batch_queries", 2048))
+    rng = np.random.default_rng(config.seed)
+    w_full = np.asarray(problem.query_weights, np.float64)
+    probs = w_full / w_full.sum()
+    n = len(probs)
+
+    state = problem.init_state() if state is None else state
+    budget = jnp.float32(config.budget)
+    trace = Trace(config, f0=float(problem.f_value(state.covered_q)),
+                  g0=float(state.g_used))
+    order: list[int] = []
+
+    for _ in range(config.max_steps or problem.n_clauses):
+        idx = rng.choice(n, size=batch_queries, p=probs)
+        counts = np.bincount(idx, minlength=n).astype(np.float32)
+        w_mb = jnp.asarray(counts / batch_queries)
+        state, j, stop = _stochastic_step(problem, state, budget, w_mb)
+        if bool(stop):
+            break
+        order.append(int(j))
+        # exact reporting (minibatch only drives selection)
+        trace.on_select(float(problem.f_value(state.covered_q)),
+                        float(state.g_used))
+        if trace.should_stop():
+            break
+
+    trace.add_evals(2 * problem.n_clauses * max(1, len(order)))
+    return trace.result(f"stochastic-greedy-m{batch_queries}",
+                        problem, state, order)
 
 
 def stochastic_greedy(
@@ -31,56 +86,8 @@ def stochastic_greedy(
     max_steps: int | None = None,
     time_limit: float | None = None,
 ) -> SolverResult:
-    import jax
-
-    rng = np.random.default_rng(seed)
-    w_full = np.asarray(problem.query_weights, np.float64)
-    probs = w_full / w_full.sum()
-    n = len(probs)
-
-    @jax.jit
-    def step(covered_q, covered_d, selected, g_used, w_mb):
-        fg = problem.f_gains(covered_q, weights=w_mb)     # minibatch estimate
-        gg = problem.g_gains(covered_d)                   # exact cost
-        feasible = (~selected) & (g_used + gg <= budget) & (fg > 0.0)
-        score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
-        j = jnp.argmax(score)
-        stop = ~feasible[j]
-        cq, cd = problem.add_clause(covered_q, covered_d, j)
-        covered_q = jnp.where(stop, covered_q, cq)
-        covered_d = jnp.where(stop, covered_d, cd)
-        selected = selected.at[j].set(jnp.where(stop, selected[j], True))
-        return covered_q, covered_d, selected, problem.g_value(covered_d), \
-            j, stop
-
-    covered_q, covered_d = problem.empty_state()
-    selected = jnp.zeros(problem.n_clauses, bool)
-    g_used = jnp.float32(0.0)
-    order: list[int] = []
-    fh, gh, th = [0.0], [0.0], [0.0]
-    t0 = time.perf_counter()
-
-    for _ in range(max_steps or problem.n_clauses):
-        idx = rng.choice(n, size=batch_queries, p=probs)
-        counts = np.bincount(idx, minlength=n).astype(np.float32)
-        w_mb = jnp.asarray(counts / batch_queries)
-        covered_q, covered_d, selected, g_used, j, stop = step(
-            covered_q, covered_d, selected, g_used, w_mb)
-        if bool(stop):
-            break
-        order.append(int(j))
-        fh.append(float(problem.f_value(covered_q)))   # exact reporting
-        gh.append(float(g_used))
-        th.append(time.perf_counter() - t0)
-        if time_limit is not None and th[-1] > time_limit:
-            break
-
-    return SolverResult(
-        name=f"stochastic-greedy-m{batch_queries}",
-        selected=np.asarray(selected), order=order,
-        f_final=float(problem.f_value(covered_q)),
-        g_final=float(g_used),
-        f_history=np.asarray(fh), g_history=np.asarray(gh),
-        time_history=np.asarray(th),
-        n_exact_evals=2 * problem.n_clauses * max(1, len(order)),
-    )
+    """Legacy keyword entrypoint; prefer `repro.api.solve`."""
+    return solve_stochastic(problem, SolveConfig(
+        budget=budget, solver="stochastic", max_steps=max_steps,
+        time_limit=time_limit, seed=seed,
+        options={"batch_queries": batch_queries}))

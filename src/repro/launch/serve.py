@@ -20,25 +20,20 @@ def main() -> None:
     ap.add_argument("--min-support", type=float, default=1e-3)
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--solver", default="optpes")
     args = ap.parse_args()
 
-    from repro.core import SCSKProblem, optpes_greedy
-    from repro.core.tiering import ClauseTiering
-    from repro.data import incidence, synthetic
-    from repro.serve.engine import TieredEngine
+    from repro import api
 
     t0 = time.time()
-    corpus, log = synthetic.make_tiering_dataset(0, args.scale)
-    data = incidence.build_tiering_data(corpus, log,
-                                        min_support=args.min_support)
-    problem = SCSKProblem.from_data(data)
-    budget = int(corpus.n_docs * args.budget_frac)
-    result = optpes_greedy(problem, budget)
-    tiering = ClauseTiering.from_selection(data, result.selected)
-    print(f"[serve] offline solve: {result.summary()}  "
+    pipe = (api.TieringPipeline.from_synthetic(seed=0, scale=args.scale)
+            .mine(min_support=args.min_support)
+            .solve(args.solver, budget_frac=args.budget_frac))
+    log = pipe.log
+    print(f"[serve] offline solve: {pipe.result.summary()}  "
           f"({time.time() - t0:.1f}s)")
 
-    engine = TieredEngine(data.postings, tiering, data.n_docs)
+    engine = pipe.deploy()
     rng = np.random.default_rng(1)
     # request stream drawn from the *test* distribution (future traffic)
     probs = log.test_weights / log.test_weights.sum()

@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SCSKProblem, bitset, optpes_greedy
+from repro.core import bitset
 from repro.core.tiering import ClauseTiering
-from repro.data import incidence, synthetic
+from repro.data import incidence
 
 
 @dataclasses.dataclass
@@ -37,18 +37,18 @@ class TieredIndex:
 
 def build_tiered_index(seed: int = 0, scale: str = "tiny",
                        budget_frac: float = 0.5,
-                       min_support: float = 1e-3) -> TieredIndex:
+                       min_support: float = 1e-3,
+                       solver: str = "optpes") -> TieredIndex:
     """Items = 'documents' over an attribute vocabulary; queries = predicate
     sets from the same distribution machinery as the paper pipeline."""
-    corpus, log = synthetic.make_tiering_dataset(seed, scale)
-    data = incidence.build_tiering_data(corpus, log, min_support=min_support)
-    problem = SCSKProblem.from_data(data)
-    budget = int(corpus.n_docs * budget_frac)
-    result = optpes_greedy(problem, budget)
-    tiering = ClauseTiering.from_selection(data, result.selected)
+    from repro.api import TieringPipeline
+    pipe = (TieringPipeline.from_synthetic(seed=seed, scale=scale)
+            .mine(min_support=min_support)
+            .solve(solver, budget_frac=budget_frac))
+    tiering = pipe.tiering()
     return TieredIndex(tiering=tiering,
                        tier1_ids=np.nonzero(tiering.tier1_docs)[0],
-                       data=data)
+                       data=pipe.data)
 
 
 def tiered_retrieval_scores(

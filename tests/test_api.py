@@ -1,0 +1,255 @@
+"""The unified solver API: registry, SolverState warm starts, SolveConfig,
+Trace, and the TieringPipeline facade."""
+import numpy as np
+import pytest
+
+from repro import api
+
+
+BUDGET_FRAC = 0.5
+
+
+def _budget(data):
+    return data.n_docs * BUDGET_FRAC
+
+
+# -- registry round-trip ------------------------------------------------------
+
+def test_registry_lists_all_solver_families():
+    names = api.list_solvers()
+    for required in ("greedy", "lazy", "optpes", "isk1", "isk2", "agnostic",
+                     "stochastic", "flow-popularity", "flow-max", "flow-sgd"):
+        assert required in names
+
+
+@pytest.mark.parametrize("name", ["greedy", "lazy", "optpes", "isk1", "isk2",
+                                  "agnostic", "stochastic"])
+def test_registry_roundtrip_core(tiny_data, tiny_problem, name):
+    """Every registered SCSK solver returns a valid SolverResult through the
+    ONE uniform signature."""
+    budget = _budget(tiny_data)
+    r = api.solve(tiny_problem, api.SolveConfig(
+        budget=budget, solver=name,
+        options={"batch_queries": 512} if name == "stochastic" else {}))
+    assert isinstance(r, api.SolverResult)
+    assert r.g_final <= budget + 1e-6
+    assert r.f_final > 0
+    assert r.selected.shape == (tiny_problem.n_clauses,)
+    assert len(r.f_history) == len(r.g_history) == len(r.time_history)
+    assert r.state is not None
+    assert int(r.state.selected.sum()) == int(r.selected.sum())
+
+
+@pytest.mark.parametrize("name", ["flow-popularity", "flow-max", "flow-sgd"])
+def test_registry_roundtrip_flow(tiny_data, name):
+    """The flow baselines ride the same registry via their data adapters."""
+    budget = tiny_data.n_docs // 2
+    opts = {"steps": 60} if name == "flow-sgd" else {}
+    r = api.solve(tiny_data, api.SolveConfig(budget=budget, solver=name,
+                                             options=opts))
+    assert isinstance(r, api.SolverResult)
+    assert r.g_final <= budget          # tier-1 doc count
+    assert 0.0 <= r.f_final <= 1.0      # train coverage
+    assert "flow" in r.extra
+    # passing an SCSKProblem without data must fail loudly
+    with pytest.raises(ValueError):
+        api.solve(object(), api.SolveConfig(budget=budget, solver=name))
+
+
+def test_unknown_solver_raises():
+    with pytest.raises(KeyError):
+        api.get_solver("nope")
+    with pytest.raises(ValueError):
+        api.SolveConfig(budget=1.0, stop_policy="bogus")
+
+
+def test_legacy_wrappers_match_registry(tiny_data, tiny_problem):
+    """The pre-registry keyword entrypoints are thin shims: same sequence."""
+    from repro.core import SOLVERS
+    budget = _budget(tiny_data)
+    old = SOLVERS["greedy"](tiny_problem, budget)
+    new = api.solve(tiny_problem, api.SolveConfig(budget=budget,
+                                                  solver="greedy"))
+    assert old.order == new.order
+    assert old.f_final == new.f_final
+
+
+def test_solver_equivalence_fixed_seed(tiny_data, tiny_problem):
+    """Acceptance: redesigned greedy/lazy/optpes select the same clause
+    sequence on a fixed seed (up to exact ties, cf. Thm 4.2)."""
+    budget = _budget(tiny_data)
+    greedy = api.solve(tiny_problem, api.SolveConfig(budget=budget,
+                                                     solver="greedy"))
+    lazy = api.solve(tiny_problem, api.SolveConfig(budget=budget,
+                                                   solver="lazy"))
+    optpes = api.solve(tiny_problem, api.SolveConfig(budget=budget,
+                                                     solver="optpes"))
+    assert lazy.order == greedy.order
+    assert optpes.f_final >= greedy.f_final * 0.999
+
+
+# -- SolverState + warm starts ------------------------------------------------
+
+def test_solver_state_pytree(tiny_problem):
+    import jax
+    state = tiny_problem.init_state()
+    leaves = jax.tree_util.tree_leaves(state)
+    assert len(leaves) == 5
+    state2 = jax.jit(lambda s: s)(state)      # passes jit boundary intact
+    assert int(state2.step) == 0
+    applied = jax.jit(tiny_problem.apply)(state, 0)
+    assert int(applied.step) == 1
+    assert bool(applied.selected[0])
+
+
+def test_warm_start_equals_cold_solve(tiny_data, tiny_problem):
+    """Acceptance: budget-sweep warm start. Under the truncate stop policy
+    the greedy path is budget-independent, so resuming the B1 state to B2
+    selects EXACTLY what a cold B2 solve selects."""
+    b2 = _budget(tiny_data)
+    b1 = b2 / 2
+    cold = api.solve(tiny_problem, api.SolveConfig(
+        budget=b2, solver="greedy", stop_policy="truncate"))
+    part = api.solve(tiny_problem, api.SolveConfig(
+        budget=b1, solver="greedy", stop_policy="truncate"))
+    resumed = api.solve(tiny_problem, api.SolveConfig(
+        budget=b2, solver="greedy", stop_policy="truncate"),
+        state=part.state)
+    assert part.order == cold.order[:len(part.order)]
+    assert part.order + resumed.order == cold.order
+    np.testing.assert_array_equal(resumed.selected, cold.selected)
+    assert abs(resumed.f_final - cold.f_final) < 1e-6
+
+
+def test_solve_sweep_matches_cold_solves(tiny_data, tiny_problem):
+    b = _budget(tiny_data)
+    budgets = [b / 4, b / 2, b]
+    sweep = api.solve_sweep(tiny_problem, budgets, api.SolveConfig(
+        budget=b, solver="greedy"))
+    assert len(sweep) == 3
+    for budget, r in zip(budgets, sweep):
+        cold = api.solve(tiny_problem, api.SolveConfig(
+            budget=budget, solver="greedy", stop_policy="truncate"))
+        assert r.order == cold.order
+        assert r.g_final <= budget + 1e-6
+    # monotone in budget
+    assert sweep[0].f_final <= sweep[1].f_final <= sweep[2].f_final
+
+
+def test_warm_start_lazy_continues_feasibly(tiny_data, tiny_problem):
+    """Lazy greedy resumes from a greedy-built state and stays feasible."""
+    b2 = _budget(tiny_data)
+    part = api.solve(tiny_problem, api.SolveConfig(
+        budget=b2 / 2, solver="greedy", stop_policy="truncate"))
+    resumed = api.solve(tiny_problem, api.SolveConfig(
+        budget=b2, solver="lazy"), state=part.state)
+    assert resumed.g_final <= b2 + 1e-6
+    assert resumed.f_final >= part.f_final - 1e-9
+    assert int(resumed.state.step) == len(part.order) + len(resumed.order)
+
+
+def test_warm_start_rejected_without_support(tiny_problem):
+    state = tiny_problem.init_state()
+    with pytest.raises(ValueError):
+        api.solve(tiny_problem, api.SolveConfig(budget=10.0, solver="isk1"),
+                  state=state)
+
+
+# -- Trace --------------------------------------------------------------------
+
+def test_time_limit_enforced_with_sparse_recording(tiny_problem, tiny_data):
+    """Regression for the th[-1] bug: the wall-clock limit must bind every
+    step even when record_every would only refresh the history rarely."""
+    r = api.solve(tiny_problem, api.SolveConfig(
+        budget=_budget(tiny_data), solver="greedy",
+        record_every=10_000, time_limit=0.0))
+    # limit of 0s -> at most one selection can slip through
+    assert len(r.order) <= 1
+
+
+def test_trace_hooks_fire(tiny_problem, tiny_data):
+    steps, records = [], []
+    r = api.solve(tiny_problem, api.SolveConfig(
+        budget=_budget(tiny_data), solver="greedy", max_steps=7,
+        record_every=3,
+        on_step=lambda t: steps.append(t.n_selections),
+        on_record=lambda t: records.append(t.last_f)))
+    assert len(steps) == len(r.order)
+    # one record per 3 selections (+ the forced first one)
+    assert len(records) == (len(r.order) + 2) // 3
+
+
+def test_record_every_thins_history(tiny_problem, tiny_data):
+    dense = api.solve(tiny_problem, api.SolveConfig(
+        budget=_budget(tiny_data), solver="greedy", max_steps=8))
+    sparse = api.solve(tiny_problem, api.SolveConfig(
+        budget=_budget(tiny_data), solver="greedy", max_steps=8,
+        record_every=4))
+    assert len(dense.f_history) == 9          # seed point + 8 selections
+    # seed + records at selections 1 and 5 + final flush of selection 8
+    assert len(sparse.f_history) == 4
+    assert sparse.f_history[-1] == dense.f_history[-1]   # tail is flushed
+    assert dense.order == sparse.order        # recording never alters path
+
+
+# -- TieringPipeline ----------------------------------------------------------
+
+def test_pipeline_end_to_end_smoke():
+    pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+            .mine(min_support=1e-3)
+            .solve("optpes", budget_frac=BUDGET_FRAC))
+    assert pipe.result is not None
+    cov = pipe.coverage()
+    assert 0.0 < cov["train"] <= 1.0
+    assert pipe.verify()                      # Theorem 3.1, exhaustively
+    engine = pipe.deploy()
+    queries = pipe.log.queries[:64]
+    out = engine.serve(list(queries))
+    ref = engine.serve_reference(list(queries))
+    assert all(np.array_equal(a, b) for a, b in zip(out, ref))
+
+
+def test_pipeline_from_data_and_flow(tiny_data):
+    pipe = api.TieringPipeline.from_data(tiny_data)
+    pipe.solve("flow-popularity", budget=tiny_data.n_docs // 2)
+    assert pipe.result.extra["flow"].tier1_docs.sum() <= tiny_data.n_docs // 2
+    # flow picks docs, not clauses: no clause tiering to deploy -> loud error
+    with pytest.raises(RuntimeError, match="flow"):
+        pipe.tiering()
+    with pytest.raises(RuntimeError, match="flow"):
+        pipe.deploy()
+
+
+def test_pipeline_rejects_config_plus_args(tiny_data):
+    pipe = api.TieringPipeline.from_data(tiny_data)
+    cfg = api.SolveConfig(budget=tiny_data.n_docs // 2, solver="greedy")
+    with pytest.raises(ValueError):
+        pipe.solve("greedy", budget=10, config=cfg)
+    with pytest.raises(ValueError):
+        pipe.solve("greedy", config=cfg, max_steps=3)
+    pipe.solve(config=cfg)                    # config alone is fine
+    assert pipe.result.name == "greedy"
+
+
+def test_multitier_forwards_config_kwargs(tiny_data):
+    """Registry path must route time_limit/max_steps to SolveConfig fields."""
+    from repro.core.multitier import build_multitier
+    mt = build_multitier(tiny_data, [tiny_data.n_docs // 2],
+                         solver="greedy", max_steps=5)
+    # max_steps=5 must actually bound the solve (5 clauses -> small tier)
+    assert len(mt.tiers[0].clauses) <= 5
+
+
+def test_pipeline_requires_mine_before_solve():
+    pipe = api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+    with pytest.raises(RuntimeError):
+        pipe.solve("greedy")
+
+
+def test_pipeline_sweep(tiny_data):
+    pipe = api.TieringPipeline.from_data(tiny_data)
+    budgets = [tiny_data.n_docs // 4, tiny_data.n_docs // 2]
+    results = pipe.sweep(budgets, "greedy")
+    assert len(results) == 2
+    assert pipe.result is results[-1]
+    assert pipe.verify()

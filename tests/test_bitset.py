@@ -1,10 +1,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import bitset
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import bitset  # noqa: E402
 
 
 @given(st.integers(0, 2**32 - 1), st.integers(1, 200))

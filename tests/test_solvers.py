@@ -116,20 +116,18 @@ def test_sparse_step_matches_dense_greedy(tiny_data, tiny_problem):
     ids = incidence.padded_id_lists(tiny_data.clause_doc_bits,
                                     tiny_data.n_docs)
     problem = tiny_problem
-    covered_q, covered_d = problem.empty_state()
-    selected = jnp.zeros(problem.n_clauses, bool)
-    g_used = jnp.float32(0.0)
+    state = problem.init_state()
     budget = jnp.float32(tiny_data.n_docs // 2)
     ids_j = jnp.asarray(ids)
-    sq, sd, ssel, sg = covered_q, covered_d, selected, g_used
+    sq, sd = problem.empty_state()
+    ssel = jnp.zeros(problem.n_clauses, bool)
+    sg = jnp.float32(0.0)
     for _ in range(5):
-        covered_q, covered_d, selected, g_used, f_val, j_d, stop_d = \
-            greedy_step(problem, covered_q, covered_d, selected, g_used,
-                        budget)
+        state, f_val, j_d, stop_d = greedy_step(problem, state, budget)
         sq, sd, ssel, sg, j_s, stop_s = sparse_greedy_step(
             ids_j, problem.clause_query_bits, problem.query_weights,
             sq, sd, ssel, sg, budget)
         assert int(j_d) == int(j_s)
         assert bool(stop_d) == bool(stop_s)
     import numpy as np
-    np.testing.assert_array_equal(np.asarray(covered_d), np.asarray(sd))
+    np.testing.assert_array_equal(np.asarray(state.covered_d), np.asarray(sd))

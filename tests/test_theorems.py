@@ -1,8 +1,7 @@
 """Hypothesis property tests for the paper's theorems (3.1, 3.3, 3.4, 4.1, 4.2)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import SCSKProblem, bitset
 from repro.data import incidence, synthetic
