@@ -1,13 +1,22 @@
-"""Shared benchmark fixtures: one cached medium-scale tiering dataset."""
+"""Shared benchmark fixtures: one cached medium-scale tiering dataset,
+plus the row recorder behind the CSV/JSON dual emission (`emit` prints the
+CSV line AND records it under the current section so `run.py` can write
+`artifacts/bench/BENCH_<section>.json` machine-readable artifacts)."""
 from __future__ import annotations
 
 import functools
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 BENCH_SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+ROWS: list[dict] = []
+_SECTION = "misc"
+_SECTION_SCALE: dict[str, str] = {}
 
 
 @functools.lru_cache(maxsize=2)
@@ -25,5 +34,33 @@ def bench_problem(scale: str = BENCH_SCALE):
     return SCSKProblem.from_data(bench_data(scale))
 
 
+def begin_section(name: str, scale: str = BENCH_SCALE) -> None:
+    """Route subsequent `emit` rows to BENCH_<name>.json. Pass `scale` when
+    a section measures at a different dataset scale than BENCH_SCALE."""
+    global _SECTION
+    _SECTION = name
+    _SECTION_SCALE[name] = scale
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    ROWS.append({"section": _SECTION, "name": name,
+                 "us_per_call": us_per_call, "derived": derived})
+
+
+def write_json(out_dir: str = "artifacts/bench") -> list[str]:
+    """One BENCH_<section>.json per section seen so far; returns the paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    sections: dict[str, list[dict]] = {}
+    for row in ROWS:
+        sections.setdefault(row["section"], []).append(
+            {k: row[k] for k in ("name", "us_per_call", "derived")})
+    paths = []
+    for section, rows in sections.items():
+        path = os.path.join(out_dir, f"BENCH_{section}.json")
+        with open(path, "w") as f:
+            json.dump({"section": section, "generated": time.time(),
+                       "scale": _SECTION_SCALE.get(section, BENCH_SCALE),
+                       "rows": rows}, f, indent=1)
+        paths.append(path)
+    return paths

@@ -1,5 +1,7 @@
 """Benchmark entrypoint: one section per paper table/figure + kernel micro
-+ roofline summary. Prints ``name,us_per_call,derived`` CSV lines."""
++ streaming re-tiering + roofline summary. Prints ``name,us_per_call,derived``
+CSV lines and writes machine-readable ``artifacts/bench/BENCH_<section>.json``
+artifacts (one per section) so the perf trajectory is recorded across PRs."""
 from __future__ import annotations
 
 import os
@@ -10,19 +12,34 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
 def main() -> None:
+    from benchmarks import common
+
     print("name,us_per_call,derived")
     from benchmarks import generalization, kernels_micro, parallel_scaling, \
-        roofline, solvers
-    kernels_micro.run()
-    solvers.run()
-    parallel_scaling.run()
-    generalization.run()
-    # roofline summary (only if dry-run artifacts exist)
+        roofline, solvers, streaming
     try:
-        rows = roofline.run()
-        print(f"roofline_rows,{len(rows)},see artifacts/bench/roofline.json")
-    except Exception as e:  # noqa: BLE001
-        print(f"roofline_rows,0,unavailable: {e}")
+        common.begin_section("kernels")
+        kernels_micro.run()
+        common.begin_section("solvers")
+        solvers.run()
+        common.begin_section("parallel")
+        parallel_scaling.run()
+        common.begin_section("generalization")
+        generalization.run()
+        common.begin_section("stream", scale=streaming.STREAM_SCALE)
+        streaming.run()
+        # roofline summary (only if dry-run artifacts exist)
+        common.begin_section("roofline")
+        try:
+            rows = roofline.run()
+            common.emit("roofline_rows", len(rows),
+                        "see artifacts/bench/roofline.json")
+        except Exception as e:  # noqa: BLE001
+            common.emit("roofline_rows", 0, f"unavailable: {e}")
+    finally:
+        # a failing section must not lose the sections already recorded
+        for path in common.write_json():
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,114 @@
+"""Streaming re-tiering section: static vs re-tiered serving under drift,
+and warm vs cold re-solve latency.
+
+Two question families, per drift scenario (seeded, tiny scale by default so
+the section stays CI-sized; REPRO_BENCH_STREAM_SCALE overrides):
+
+  * does the drift-aware controller beat a frozen tiering on identical
+    traffic? (mean windowed Tier-1 coverage + cumulative word-traffic
+    saving, static vs re-tiered)
+  * what does a re-solve cost? warm (prune + resume the previous
+    SolverState) vs cold (from scratch) wall time and selection steps on
+    the same reweighted problem.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+
+STREAM_SCALE = os.environ.get("REPRO_BENCH_STREAM_SCALE", "tiny")
+SCENARIOS = ("rotate", "burst", "churn", "seasonal")
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_STREAM_WINDOWS", "12"))
+
+
+def _fresh_pipe(data):
+    from repro import api
+    return api.TieringPipeline.from_data(data).solve("greedy",
+                                                     budget_frac=0.5)
+
+
+def run() -> dict:
+    from repro import stream
+    from repro.data import incidence, synthetic
+    from repro.stream.window import prune_state
+
+    corpus, log = synthetic.make_tiering_dataset(0, STREAM_SCALE)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+
+    results: dict[str, dict] = {}
+    for scenario in SCENARIOS:
+        kw = dict(scenario=scenario, n_windows=N_WINDOWS,
+                  queries_per_window=512, seed=0)
+        # identical windows for both arms: the simulator is seed-deterministic
+        # both arms timed WITHOUT the parity test harness (verify_swaps
+        # serves extra oracle batches); parity is probed untimed below
+        t0 = time.perf_counter()
+        static = stream.run_stream(_fresh_pipe(data), enable_refit=False, **kw)
+        t_static = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        retiered = stream.run_stream(_fresh_pipe(data), **kw)
+        t_retiered = time.perf_counter() - t0
+        results[scenario] = {
+            "static_cov": static.mean_coverage,
+            "retiered_cov": retiered.mean_coverage,
+            "static_saving": static.cumulative.cost_saving,
+            "retiered_saving": retiered.cumulative.cost_saving,
+            "n_refits": retiered.n_refits, "n_warm": retiered.n_warm,
+        }
+        emit(f"stream_{scenario}_static",
+             1e6 * t_static / N_WINDOWS,
+             f"cov={static.mean_coverage:.4f};"
+             f"saving={static.cumulative.cost_saving:.4f}")
+        emit(f"stream_{scenario}_retiered",
+             1e6 * t_retiered / N_WINDOWS,
+             f"cov={retiered.mean_coverage:.4f};"
+             f"saving={retiered.cumulative.cost_saving:.4f};"
+             f"refits={retiered.n_refits};warm={retiered.n_warm}")
+
+    # Theorem-3.1 parity probe, outside any timed region
+    probe = stream.run_stream(_fresh_pipe(data), scenario="rotate",
+                              n_windows=min(6, N_WINDOWS),
+                              queries_per_window=512, seed=0,
+                              verify_swaps=True)
+    emit("stream_parity", 0.0,
+         f"checks={probe.n_parity_checks};ok={probe.parity_all_ok()}")
+    results["parity"] = {"checks": probe.n_parity_checks,
+                         "ok": probe.parity_all_ok()}
+
+    # warm vs cold re-solve on one drifted distribution (rotation, window 3)
+    sim = stream.TrafficSimulator(log, "rotate", seed=0, n_windows=N_WINDOWS)
+    drifted = sim.window_probs(3)
+    pipe_warm, pipe_cold = _fresh_pipe(data), _fresh_pipe(data)
+    prev_state = pipe_warm.result.state
+    t0 = time.perf_counter()
+    pruned, _, dropped = prune_state(pipe_warm.problem, prev_state,
+                                     weights=drifted, min_unique_mass=2e-3)
+    warm = pipe_warm.refit(drifted, state=pruned).result
+    t_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cold = pipe_cold.refit(drifted, state=None).result
+    t_cold = time.perf_counter() - t0
+    emit("stream_refit_warm", 1e6 * t_warm,
+         f"steps={len(warm.order)};pruned={len(dropped)};"
+         f"f={warm.f_final:.4f}")
+    emit("stream_refit_cold", 1e6 * t_cold,
+         f"steps={len(cold.order)};f={cold.f_final:.4f}")
+    emit("stream_refit_speedup", 0.0,
+         f"warm_over_cold_time={t_warm / max(t_cold, 1e-9):.3f};"
+         f"warm_steps_frac={len(warm.order) / max(1, len(cold.order)):.3f}")
+    results["refit"] = {"warm_s": t_warm, "cold_s": t_cold,
+                        "warm_steps": len(warm.order),
+                        "cold_steps": len(cold.order)}
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    from benchmarks import common
+    common.begin_section("stream", scale=STREAM_SCALE)
+    run()
+    for path in common.write_json():
+        print(f"# wrote {path}", file=sys.stderr)

@@ -16,7 +16,10 @@ One import gives the whole redesigned API:
   * `Trace`            — shared per-solve recorder (history, timing,
                          `on_step`/`on_record` callbacks, time limits).
   * `TieringPipeline`  — fluent facade for the full paper pipeline:
-                         data -> mine -> solve -> tiering -> deploy.
+                         data -> mine -> solve -> tiering -> deploy, plus
+                         `refit(weights, state=...)` for warm-started
+                         re-solves against drifted traffic (the
+                         `repro.stream` online re-tiering loop rides it).
 
 Quickstart:
 

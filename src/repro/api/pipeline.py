@@ -118,6 +118,56 @@ class TieringPipeline:
         self._tiering = None
         return results
 
+    def refit(self, weights, *, state: SolverState | None = None,
+              budget: float | None = None, budget_frac: float | None = None,
+              solver: str | None = None, **options) -> "TieringPipeline":
+        """Re-solve against a NEW empirical query distribution (re-tiering).
+
+        `weights` is the updated distribution over the pipeline's unique-query
+        universe (length `n_queries`, e.g. from `repro.stream.LogAccumulator`).
+        The problem is reweighted via `SCSKProblem.with_weights` — the packed
+        incidence bitsets are reused, not rebuilt — and solved with the prior
+        config (budget/solver/options default to the previous solve's).
+
+        Pass `state=` to warm-start from a prior `SolverState` (typically the
+        previous solve's state, optionally pruned by
+        `repro.stream.prune_state`); omit it for a cold re-solve. The mined
+        clause universe is fixed at `mine()` time, so the resulting tiering
+        stays Theorem-3.1-exact regardless of the weights.
+        """
+        if self.problem is None:
+            raise RuntimeError("call mine() (or from_data) before refit()")
+        base = self.config if self.config is not None else \
+            SolveConfig(budget=float(int(self.corpus.n_docs * 0.5)))
+        if budget is not None and budget_frac is not None:
+            raise ValueError("pass either budget= or budget_frac=, not both")
+        kw = {}
+        if budget_frac is not None:
+            budget = float(int(self.corpus.n_docs * budget_frac))
+        if budget is not None:
+            kw["budget"] = float(budget)
+        if solver is not None:
+            kw["solver"] = solver
+        cfg_kw = {k: options.pop(k) for k in _CONFIG_KEYS if k in options}
+        if options:
+            kw["options"] = {**dict(base.options), **options}
+        config = base.replace(**kw, **cfg_kw)
+        spec = registry.get_solver(config.solver)
+        if spec.needs_data:
+            raise ValueError(
+                f"refit() requires an SCSK solver (got {config.solver!r}): "
+                "flow baselines consume the full TieringData whose weights "
+                "are frozen at mine() time")
+        if state is not None and not spec.supports_state:
+            raise ValueError(
+                f"solver {config.solver!r} does not support warm starts; "
+                "pass state=None for a cold refit")
+        self.problem = self.problem.with_weights(weights)
+        self.config = config
+        self.result = registry.solve(self.problem, config, state=state)
+        self._tiering = None
+        return self
+
     # -- artifacts -----------------------------------------------------------
     def tiering(self) -> ClauseTiering:
         """The deployable ψ/φ artifact for the current solve."""

@@ -56,6 +56,37 @@ class SCSKProblem:
             n_docs=data.n_docs,
         )
 
+    def with_weights(self, train_weights, test_weights=None) -> "SCSKProblem":
+        """Reweighted copy for the SAME query universe (online re-tiering).
+
+        Swaps only the empirical distribution; the packed clause/query/doc
+        bitsets are shared with `self` (no incidence rebuild, no host->device
+        transfer of the big operands). Solving the result must match solving a
+        problem freshly built with the same weights — reuse is a pure
+        optimization, asserted by tests/test_stream.py.
+
+        Weights may be length `n_queries` (zero-padded here, like
+        `from_data`) or already padded to `wq * 32`.
+        """
+        def pad(w) -> jax.Array:
+            w = np.asarray(w, np.float32)
+            if w.shape != (self.n_queries,) and w.shape != (self.wq * 32,):
+                raise ValueError(
+                    f"weights must have shape ({self.n_queries},) or "
+                    f"({self.wq * 32},), got {w.shape}")
+            if w.shape[0] != self.wq * 32:
+                padded = np.zeros(self.wq * 32, np.float32)
+                padded[:w.shape[0]] = w
+                w = padded
+            return jnp.asarray(w)
+
+        return dataclasses.replace(
+            self,
+            query_weights=pad(train_weights),
+            test_weights=self.test_weights if test_weights is None
+            else pad(test_weights),
+        )
+
     # -- shapes ---------------------------------------------------------------
     @property
     def n_clauses(self) -> int:

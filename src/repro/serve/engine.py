@@ -29,14 +29,13 @@ from repro.serve import matching
 class ServeStats:
     n_queries: int = 0
     n_tier1: int = 0
-    tier1_words: int = 0      # postings words scanned in tier 1
+    tier1_words: int = 0            # postings words scanned in tier 1
     tier2_words: int = 0
+    full_words_per_query: int = 0   # untiered per-query traffic (denominator)
 
     @property
     def tier1_fraction(self) -> float:
         return self.n_tier1 / max(1, self.n_queries)
-
-    full_words_per_query: int = 0
 
     @property
     def cost_saving(self) -> float:
@@ -46,31 +45,115 @@ class ServeStats:
             return 0.0
         return 1.0 - (self.tier1_words + self.tier2_words) / base
 
+    def reset(self) -> None:
+        """Zero the traffic counters (window boundary); the engine-constant
+        `full_words_per_query` survives so ratios keep meaning."""
+        self.n_queries = self.n_tier1 = 0
+        self.tier1_words = self.tier2_words = 0
+
+    def merge(self, other: "ServeStats") -> "ServeStats":
+        """Fold another window's counters into this one, in place."""
+        if self.full_words_per_query == 0:
+            self.full_words_per_query = other.full_words_per_query
+        elif other.full_words_per_query not in (0, self.full_words_per_query):
+            raise ValueError(
+                "merging stats from engines with different postings widths "
+                f"({self.full_words_per_query} vs {other.full_words_per_query})")
+        self.n_queries += other.n_queries
+        self.n_tier1 += other.n_tier1
+        self.tier1_words += other.tier1_words
+        self.tier2_words += other.tier2_words
+        return self
+
+    def snapshot(self) -> "ServeStats":
+        """Detached copy (per-window reporting while counters keep running)."""
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieringBuffer:
+    """An off-path-built Tier-1 generation, ready to swap in."""
+    tiering: ClauseTiering
+    postings_t1: jnp.ndarray
+    tier1_words_per_query: int
+    generation: int = 0
+
 
 class TieredEngine:
     def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
                  n_docs: int):
         self.n_docs = n_docs
-        self.tiering = tiering
+        self._postings_host = np.asarray(postings)   # for re-tiering builds
         self.postings_t2 = jnp.asarray(postings)
-        # tier-1 sub-index: only D₁ columns survive
-        self.postings_t1 = jnp.asarray(
-            matching.tier_postings(postings, tiering.tier1_docs))
-        # a production Tier-1 re-indexes with a compacted |D1| doc space:
-        # its per-query word traffic is ceil(|D1|/32), not the full W.
-        self.tier1_words_per_query = bitset.n_words(int(tiering.tier1_docs.sum()))
+        self._live = self.prepare_tiering(tiering)   # generation 0
         self.stats = ServeStats(
             full_words_per_query=postings.shape[1])
 
-    def classify(self, queries: list[tuple[int, ...]]) -> np.ndarray:
-        qbits = np.zeros((len(queries), self.tiering.vocab_size), bool)
+    # the live generation is ONE reference: readers grab self._live once per
+    # batch, so (ψ, Tier-1 index) always come from the same clause selection
+    @property
+    def tiering(self) -> ClauseTiering:
+        return self._live.tiering
+
+    @property
+    def postings_t1(self) -> jnp.ndarray:
+        return self._live.postings_t1
+
+    @property
+    def tier1_words_per_query(self) -> int:
+        return self._live.tier1_words_per_query
+
+    @property
+    def generation(self) -> int:
+        return self._live.generation
+
+    # -- zero-downtime re-tiering ---------------------------------------------
+    def prepare_tiering(self, tiering: ClauseTiering) -> TieringBuffer:
+        """Build the next Tier-1 generation OFF the request path.
+
+        All the expensive work — masking the postings matrix to the new D₁
+        and shipping it to device — happens here, against local buffers; the
+        live generation keeps serving untouched.
+        """
+        postings_t1 = jnp.asarray(
+            matching.tier_postings(self._postings_host, tiering.tier1_docs))
+        # a production Tier-1 re-indexes with a compacted |D1| doc space:
+        # its per-query word traffic is ceil(|D1|/32), not the full W.
+        words = bitset.n_words(int(tiering.tier1_docs.sum()))
+        return TieringBuffer(tiering=tiering, postings_t1=postings_t1,
+                             tier1_words_per_query=words)
+
+    def swap_tiering(self, tiering: ClauseTiering | TieringBuffer) -> int:
+        """Atomically route traffic to a new tiering; returns the generation.
+
+        Accepts either a raw `ClauseTiering` (built off-path here) or a
+        `TieringBuffer` from `prepare_tiering`. The commit is a SINGLE
+        reference store of the whole generation, and `serve` reads that
+        reference exactly once per batch — a batch sees either the old
+        (ψ, Tier-1 index) pair or the new one, never a mix, so Theorem 3.1
+        completeness holds on both sides of the swap.
+        """
+        buf = tiering if isinstance(tiering, TieringBuffer) \
+            else self.prepare_tiering(tiering)
+        self._live = dataclasses.replace(
+            buf, generation=self._live.generation + 1)
+        return self._live.generation
+
+    @staticmethod
+    def _classify(tiering: ClauseTiering,
+                  queries: list[tuple[int, ...]]) -> np.ndarray:
+        qbits = np.zeros((len(queries), tiering.vocab_size), bool)
         for i, q in enumerate(queries):
             qbits[i, list(q)] = True
-        return self.tiering.classify_queries(bitset.np_pack(qbits))
+        return tiering.classify_queries(bitset.np_pack(qbits))
+
+    def classify(self, queries: list[tuple[int, ...]]) -> np.ndarray:
+        return self._classify(self._live.tiering, queries)
 
     def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
         """Returns the match set (sorted doc ids) per query."""
-        elig = self.classify(queries)
+        live = self._live                    # one read: a consistent generation
+        elig = self._classify(live.tiering, queries)
         toks = matching.pad_token_batch(queries)
         out: list[np.ndarray | None] = [None] * len(queries)
         w = self.postings_t2.shape[1]
@@ -78,13 +161,13 @@ class TieredEngine:
             idx = np.nonzero(sel)[0]
             if len(idx) == 0:
                 continue
-            postings = self.postings_t1 if tier == 1 else self.postings_t2
+            postings = live.postings_t1 if tier == 1 else self.postings_t2
             m = np.asarray(matching.match_batch(postings, jnp.asarray(toks[idx])))
             for row, qi in enumerate(idx):
                 out[qi] = bitset.np_to_indices(m[row], self.n_docs)
             if tier == 1:
                 self.stats.n_tier1 += len(idx)
-                self.stats.tier1_words += len(idx) * self.tier1_words_per_query
+                self.stats.tier1_words += len(idx) * live.tier1_words_per_query
             else:
                 self.stats.tier2_words += len(idx) * w
         self.stats.n_queries += len(queries)

@@ -1,0 +1,242 @@
+"""The re-tiering control loop: serve → accumulate → detect → refit → swap.
+
+One `RetieringController.step(window)` call per traffic window:
+
+  1. serve the window's queries through the live `TieredEngine`
+     (per-window stats via `ServeStats.reset/snapshot`, cumulative via
+     `merge` — the engine's counters are window-scoped under this loop);
+  2. fold the window into the `LogAccumulator`'s decayed weights;
+  3. feed windowed stats + weights to the `DriftDetector`;
+  4. on a trigger, re-solve via `TieringPipeline.refit`: prune stale clauses
+     from the previous `SolverState` (`prune_state`) and warm-start from the
+     rest — falling back to a cold solve if the warm tiering would cover
+     less of the current traffic than the deployed one — then
+  5. `TieredEngine.swap_tiering` the new generation in atomically.
+
+Theorem 3.1 exactness is preserved on every window: ψ and D₁ always come
+from one clause selection, whatever the weights that chose it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.serve.engine import ServeStats, TieredEngine
+from repro.stream.detector import DriftDetector
+from repro.stream.drift import TrafficSimulator, TrafficWindow
+from repro.stream.window import LogAccumulator, prune_state
+
+
+@dataclasses.dataclass
+class WindowReport:
+    """Everything the loop observed and did during one window."""
+    index: int
+    stats: ServeStats            # this window's serve counters (detached)
+    coverage: float              # windowed Tier-1 eligible fraction
+    cost_saving: float           # windowed word-traffic saving
+    tv_distance: float           # drift signal vs last refit
+    refit: str = ""              # "" | "warm" | "cold"
+    refit_steps: int = 0         # selections made by the refit solve
+    refit_seconds: float = 0.0   # wall time: prune + solve + build + swap
+    pruned: int = 0              # clauses dropped before the warm start
+    generation: int = 0          # engine generation serving this window's END
+    parity_ok: bool | None = None  # Theorem-3.1 spot check (verify_swaps)
+
+    def line(self) -> str:
+        refit = f"refit={self.refit}({self.refit_steps} steps, " \
+                f"{self.refit_seconds:.2f}s, -{self.pruned})" if self.refit \
+                else "refit=-"
+        parity = "" if self.parity_ok is None else \
+            f"  parity={'ok' if self.parity_ok else 'FAIL'}"
+        return (f"window {self.index:3d}  cov={self.coverage:.3f}  "
+                f"saving={self.cost_saving:.3f}  tv={self.tv_distance:.3f}  "
+                f"{refit}  gen={self.generation}{parity}")
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """A whole run: per-window reports + cumulative serve stats."""
+    scenario: str
+    windows: list[WindowReport]
+    cumulative: ServeStats
+
+    @property
+    def mean_coverage(self) -> float:
+        return float(np.mean([w.coverage for w in self.windows])) \
+            if self.windows else 0.0
+
+    @property
+    def n_refits(self) -> int:
+        return sum(1 for w in self.windows if w.refit)
+
+    @property
+    def n_warm(self) -> int:
+        return sum(1 for w in self.windows if w.refit == "warm")
+
+    @property
+    def n_parity_checks(self) -> int:
+        return sum(1 for w in self.windows if w.parity_ok is not None)
+
+    def parity_all_ok(self) -> bool:
+        """True iff no performed check failed — vacuously true when nothing
+        was checked; gate on `n_parity_checks` for a non-vacuous claim."""
+        return all(w.parity_ok for w in self.windows
+                   if w.parity_ok is not None)
+
+    def summary(self) -> str:
+        return (f"[{self.scenario}] {len(self.windows)} windows  "
+                f"mean_cov={self.mean_coverage:.3f}  "
+                f"cum_saving={self.cumulative.cost_saving:.3f}  "
+                f"refits={self.n_refits} ({self.n_warm} warm)")
+
+
+class RetieringController:
+    """Drift-aware online re-tiering over a solved `TieringPipeline`.
+
+    The controller owns the serving engine, the decayed-log accumulator and
+    the drift detector; the pipeline it wraps is mutated on refit (its
+    problem is reweighted in place of the traffic, its result/tiering
+    replaced). `enable_refit=False` turns the loop into the static-tiering
+    baseline — same serving, same accounting, never re-solves — so A/B runs
+    compare on identical traffic.
+    """
+
+    def __init__(self, pipe, *, engine: TieredEngine | None = None,
+                 accumulator: LogAccumulator | None = None,
+                 detector: DriftDetector | None = None,
+                 warm: bool = True, enable_refit: bool = True,
+                 prune_below: float = 2e-3, cold_fallback: bool = True,
+                 blend_prior: float = 0.35, verify_swaps: bool = False):
+        self.pipe = pipe
+        self.engine = engine if engine is not None else pipe.deploy()
+        self.queries = pipe.log.queries
+        nq = pipe.log.n_queries
+        self.accumulator = accumulator if accumulator is not None else \
+            LogAccumulator(nq, halflife=1.0,
+                           prior=np.asarray(pipe.log.train_weights),
+                           prior_strength=32.0)
+        self.detector = detector if detector is not None else DriftDetector()
+        self.warm = warm
+        self.enable_refit = enable_refit
+        self.prune_below = prune_below
+        self.cold_fallback = cold_fallback
+        # refits hedge: solve against (1-λ)·decayed + λ·long-term prior, so
+        # the tiering tilts toward the hot traffic without abandoning the
+        # baseline head (over-specializing loses the epoch-boundary windows)
+        self.blend_prior = blend_prior
+        self._prior = np.asarray(pipe.log.train_weights, np.float64)
+        self._prior = self._prior / max(self._prior.sum(), 1e-30)
+        self.verify_swaps = verify_swaps
+        # the offline tiering is the refit quality bar: a warm candidate
+        # predicting below it (or below the deployed tiering) triggers the
+        # cold-solve fallback instead of shipping a regression
+        self._baseline_tiering = self.engine.tiering
+        self._elig_cache: list = []    # (tiering, eligibility mask) pairs
+        self.cumulative = ServeStats()
+        self.detector.rebase(self.accumulator.weights(),
+                             self.predicted_coverage(self.accumulator.weights()))
+
+    # -- observability --------------------------------------------------------
+    def _eligible(self, tiering) -> np.ndarray:
+        """ψ eligibility over the query universe, cached per tiering object."""
+        for t, elig in self._elig_cache:
+            if t is tiering:
+                return elig
+        elig = tiering.classify_queries(self.pipe.log.query_bits)
+        self._elig_cache = [(tiering, elig)] + self._elig_cache[:3]
+        return elig
+
+    def coverage_of(self, tiering, weights: np.ndarray) -> float:
+        """Tier-1 eligible mass of `weights` under a given tiering."""
+        return float(
+            np.asarray(weights, np.float64)[self._eligible(tiering)].sum())
+
+    def predicted_coverage(self, weights: np.ndarray) -> float:
+        """Tier-1 eligible mass of `weights` under the DEPLOYED tiering."""
+        return self.coverage_of(self.engine.tiering, weights)
+
+    # -- the loop -------------------------------------------------------------
+    def step(self, window: TrafficWindow) -> WindowReport:
+        self.engine.stats.reset()
+        queries = [self.queries[i] for i in window.query_ids]
+        self.engine.serve(queries)
+        wstats = self.engine.stats.snapshot()
+        self.cumulative.merge(wstats)
+
+        self.accumulator.observe(window.query_ids)
+        weights = self.accumulator.weights()
+        signal = self.detector.update(wstats, weights,
+                                      n_samples=self.accumulator.total())
+
+        report = WindowReport(
+            index=window.index, stats=wstats,
+            coverage=wstats.tier1_fraction, cost_saving=wstats.cost_saving,
+            tv_distance=signal.tv_distance, generation=self.engine.generation)
+        if signal.triggered and self.enable_refit:
+            lam = self.blend_prior
+            solve_w = (1.0 - lam) * weights + lam * self._prior
+            self._refit(solve_w, weights, report)
+            if self.verify_swaps:
+                report.parity_ok = self._check_parity(queries)
+        return report
+
+    def run(self, simulator: TrafficSimulator) -> StreamReport:
+        reports = [self.step(w) for w in simulator.windows()]
+        return StreamReport(scenario=simulator.scenario, windows=reports,
+                            cumulative=self.cumulative)
+
+    # -- refit ----------------------------------------------------------------
+    def _refit(self, solve_w: np.ndarray, raw_w: np.ndarray,
+               report: WindowReport) -> None:
+        t0 = time.perf_counter()
+        prev = self.pipe.result
+        deployed_cov = self.predicted_coverage(solve_w)
+        kind = "cold"
+        if self.warm and prev is not None and prev.state is not None:
+            # prune under the NEW weights, then resume from what survives
+            state, _, dropped = prune_state(
+                self.pipe.problem, prev.state, weights=solve_w,
+                min_unique_mass=self.prune_below)
+            report.pruned = len(dropped)
+            self.pipe.refit(solve_w, state=state)
+            kind = "warm"
+            baseline_cov = self.coverage_of(self._baseline_tiering, solve_w)
+            if self.cold_fallback and \
+                    self.coverage_of(self.pipe.tiering(), solve_w) + 1e-9 \
+                    < max(deployed_cov, baseline_cov):
+                # warm path couldn't un-specialize enough: pay for cold
+                self.pipe.refit(solve_w, state=None)
+                kind = "cold"
+                report.pruned = 0          # cold solves don't prune
+        else:
+            self.pipe.refit(solve_w, state=None)
+        buf = self.engine.prepare_tiering(self.pipe.tiering())  # off-path
+        report.generation = self.engine.swap_tiering(buf)       # atomic
+        self.detector.rebase(raw_w, self.predicted_coverage(raw_w))
+        report.refit = kind
+        report.refit_steps = len(self.pipe.result.order)
+        report.refit_seconds = time.perf_counter() - t0
+
+    # -- Theorem 3.1 spot check -----------------------------------------------
+    def _check_parity(self, queries: list[tuple[int, ...]]) -> bool:
+        """Served match sets == single-tier oracle on a query sample."""
+        sample = queries[:64]
+        got = self.engine.serve(sample)
+        want = self.engine.serve_reference(sample)
+        return all(np.array_equal(a, b) for a, b in zip(got, want))
+
+
+def run_stream(pipe, *, scenario: str = "rotate", n_windows: int = 8,
+               queries_per_window: int = 512, seed: int = 0,
+               strength: float = 1.0, warm: bool = True,
+               enable_refit: bool = True, verify_swaps: bool = False,
+               **controller_kw) -> StreamReport:
+    """Replay a drift scenario end to end through a RetieringController."""
+    sim = TrafficSimulator(pipe.log, scenario, seed=seed, n_windows=n_windows,
+                           queries_per_window=queries_per_window,
+                           strength=strength)
+    ctrl = RetieringController(pipe, warm=warm, enable_refit=enable_refit,
+                               verify_swaps=verify_swaps, **controller_kw)
+    return ctrl.run(sim)

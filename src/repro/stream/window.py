@@ -1,0 +1,139 @@
+"""Sliding-window log accumulation + warm-start state hygiene.
+
+`LogAccumulator` maintains exponentially-decayed empirical query weights over
+the unique-query universe — the online analogue of the offline QueryLog's
+`train_weights`. Its `weights()` feed `SCSKProblem.with_weights` (bitset
+reuse) and `TieringPipeline.refit`.
+
+`prune_state` is the other half of a cheap re-solve: before warm-starting
+from the previous `SolverState`, drop selected clauses whose *unique*
+weighted query coverage under the CURRENT distribution has decayed to
+nothing. That frees knapsack budget (g) for clauses matching the new traffic
+while keeping every still-hot clause — so the warm solve only pays for the
+drift delta, not a from-scratch path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.problem import SCSKProblem
+from repro.core.state import SolverState
+
+
+class LogAccumulator:
+    """Exponentially-decayed query counts over the unique-query universe.
+
+    `halflife` is measured in windows: after observing h windows of purely
+    new traffic, the old traffic contributes half the mass it did. A prior
+    (e.g. the offline log's train_weights, scaled by `prior_strength`
+    pseudo-observations) keeps early windows from being all sampling noise.
+    """
+
+    def __init__(self, n_queries: int, *, halflife: float = 2.0,
+                 prior: np.ndarray | None = None,
+                 prior_strength: float = 0.0):
+        if halflife <= 0:
+            raise ValueError("halflife must be positive (windows)")
+        self.n_queries = n_queries
+        self.decay = 0.5 ** (1.0 / halflife)
+        self.counts = np.zeros(n_queries, np.float64)
+        if prior is not None and prior_strength > 0:
+            p = np.asarray(prior, np.float64)
+            if p.shape != (n_queries,):
+                raise ValueError(
+                    f"prior must have shape ({n_queries},), got {p.shape}")
+            self.counts += prior_strength * p / max(p.sum(), 1e-30)
+        self.n_windows = 0
+
+    def observe(self, query_ids: np.ndarray) -> None:
+        """Fold one window's sampled query ids into the decayed counts."""
+        self.counts *= self.decay
+        np.add.at(self.counts, np.asarray(query_ids, np.int64), 1.0)
+        self.n_windows += 1
+
+    def weights(self) -> np.ndarray:
+        """Normalized decayed empirical distribution, f64 [n_queries]."""
+        s = self.counts.sum()
+        if s <= 0:
+            return np.full(self.n_queries, 1.0 / max(1, self.n_queries))
+        return self.counts / s
+
+    def total(self) -> float:
+        return float(self.counts.sum())
+
+
+def prune_state(problem: SCSKProblem, state: SolverState, *,
+                min_unique_mass: float = 0.0,
+                weights: np.ndarray | None = None,
+                ) -> tuple[SolverState, np.ndarray, np.ndarray]:
+    """Drop stale clauses from a SolverState; returns (state, kept, dropped).
+
+    A selected clause is stale when the traffic mass it UNIQUELY covers
+    (queries no other selected clause matches) under `weights` (default:
+    `problem.query_weights`) is below `min_unique_mass`. Passing `weights`
+    directly (length `n_queries`) avoids materializing a reweighted problem
+    just for the pruning pass. Unique — not standalone — coverage is the
+    right criterion: dropping a clause only loses the queries nothing else
+    covers. The pruned state is rebuilt exactly (covered bitsets re-OR'd,
+    `g_used` recomputed), so a solver can resume from it as if the kept
+    clauses were its own selection prefix.
+
+    Everything stays in the packed-bitset domain: the exactly-once query
+    mask is two OR/AND accumulator sweeps over the K selected rows, and the
+    per-clause unique mass is one fused `f_gains` (bit-matvec) call with
+    that mask folded into the weights — no dense [K, n_queries] incidence
+    is ever materialized.
+    """
+    selected = np.asarray(state.selected)
+    idx = np.nonzero(selected)[0]
+    empty = np.empty(0, np.int64)
+    if len(idx) == 0 or min_unique_mass <= 0:
+        return state, idx.astype(np.int64), empty
+
+    nq = problem.n_queries
+    qrows = np.asarray(problem.clause_query_bits)[idx]            # [K, Wq]
+    if weights is None:
+        wpad = np.asarray(problem.query_weights, np.float32)
+    else:
+        weights = np.asarray(weights, np.float32)
+        if weights.shape != (nq,):
+            raise ValueError(
+                f"weights must have shape ({nq},), got {weights.shape}")
+        wpad = np.zeros(problem.wq * 32, np.float32)
+        wpad[:nq] = weights
+    seen_once = np.zeros(problem.wq, np.uint32)
+    seen_multi = np.zeros(problem.wq, np.uint32)
+    for r in qrows:
+        seen_multi |= seen_once & r
+        seen_once |= r
+    once = seen_once & ~seen_multi            # queries covered exactly once
+    # f_gains with covered_q = ~once zeroes every weight outside the mask,
+    # so row j of the bit-matvec is exactly clause j's unique weighted mass
+    unique_mass = np.asarray(problem.f_gains(
+        jnp.asarray(~once), rows=jnp.asarray(qrows), weights=jnp.asarray(wpad)))
+    drop = unique_mass < min_unique_mass
+    if not drop.any():
+        return state, idx.astype(np.int64), empty
+
+    kept = idx[~drop].astype(np.int64)
+    new_selected = np.zeros(problem.n_clauses, bool)
+    new_selected[kept] = True
+    if len(kept):
+        covered_q = np.bitwise_or.reduce(
+            np.asarray(problem.clause_query_bits)[kept], axis=0)
+        covered_d = np.bitwise_or.reduce(
+            np.asarray(problem.clause_doc_bits)[kept], axis=0)
+    else:
+        covered_q = np.zeros(problem.wq, np.uint32)
+        covered_d = np.zeros(problem.wd, np.uint32)
+    new_state = SolverState(
+        covered_q=jnp.asarray(covered_q),
+        covered_d=jnp.asarray(covered_d),
+        selected=jnp.asarray(new_selected),
+        g_used=jnp.float32(int(bitset.np_popcount(covered_d).sum())),
+        step=jnp.int32(len(kept)),
+    )
+    return new_state, kept, idx[drop].astype(np.int64)

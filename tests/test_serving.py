@@ -1,9 +1,12 @@
-"""Two-tier serving engine: end-to-end correctness vs single-tier oracle."""
+"""Two-tier serving engine: end-to-end correctness vs single-tier oracle,
+plus the zero-downtime re-tiering surface (swap_tiering, ServeStats
+reset/merge) the streaming control loop rides on."""
 import numpy as np
+import pytest
 
 from repro.core import SOLVERS
 from repro.core.tiering import ClauseTiering
-from repro.serve.engine import TieredEngine
+from repro.serve.engine import ServeStats, TieredEngine
 
 
 def _engine(tiny_data, tiny_problem):
@@ -31,6 +34,74 @@ def test_engine_routes_and_saves_cost(tiny_data, tiny_problem):
     assert s.n_queries == 200
     assert 0 < s.n_tier1 < 200          # both tiers exercised
     assert s.cost_saving > 0.0          # tiering actually saves traffic
+
+
+def test_swap_tiering_parity_every_generation(tiny_data, tiny_problem):
+    """Theorem 3.1 must hold before AND after a hot swap: every eligible
+    query's Tier-1 result set equals single-tier matching."""
+    engine = _engine(tiny_data, tiny_problem)
+    queries = [tiny_data.log.queries[i] for i in range(128)]
+
+    def assert_parity():
+        got = engine.serve(queries)
+        want = engine.serve_reference(queries)
+        for q, a, b in zip(queries, got, want):
+            np.testing.assert_array_equal(a, b, err_msg=str(q))
+
+    assert engine.generation == 0
+    assert_parity()
+    # re-tier to a different (smaller-budget) clause selection and swap
+    r2 = SOLVERS["optpes"](tiny_problem, tiny_data.n_docs // 4)
+    t2 = ClauseTiering.from_selection(tiny_data, r2.selected)
+    buf = engine.prepare_tiering(t2)          # built off the request path
+    assert engine.tiering is not t2           # still serving the old gen
+    assert engine.swap_tiering(buf) == 1
+    assert engine.tiering is t2
+    assert_parity()
+    # raw-ClauseTiering swap path (prepare happens inside)
+    r3 = SOLVERS["greedy"](tiny_problem, tiny_data.n_docs // 2)
+    assert engine.swap_tiering(
+        ClauseTiering.from_selection(tiny_data, r3.selected)) == 2
+    assert_parity()
+
+
+def test_swap_changes_routing_but_stats_merge(tiny_data, tiny_problem):
+    """Per-window stats around a swap must merge into the cumulative total."""
+    engine = _engine(tiny_data, tiny_problem)
+    queries = [tiny_data.log.queries[i] for i in range(150)]
+
+    engine.stats.reset()
+    engine.serve(queries)
+    before = engine.stats.snapshot()
+
+    r2 = SOLVERS["optpes"](tiny_problem, tiny_data.n_docs // 4)
+    engine.swap_tiering(ClauseTiering.from_selection(tiny_data, r2.selected))
+    engine.stats.reset()
+    engine.serve(queries)
+    after = engine.stats.snapshot()
+
+    # the quarter-budget tiering routes fewer queries to Tier 1
+    assert after.n_tier1 < before.n_tier1
+
+    total = ServeStats()
+    total.merge(before).merge(after)
+    assert total.n_queries == 300
+    assert total.n_tier1 == before.n_tier1 + after.n_tier1
+    assert total.tier1_words == before.tier1_words + after.tier1_words
+    assert total.tier2_words == before.tier2_words + after.tier2_words
+    assert total.full_words_per_query == before.full_words_per_query
+    assert 0.0 < total.cost_saving < 1.0
+
+
+def test_stats_reset_and_merge_guard():
+    s = ServeStats(n_queries=5, n_tier1=3, tier1_words=10, tier2_words=20,
+                   full_words_per_query=7)
+    s.reset()
+    assert (s.n_queries, s.n_tier1, s.tier1_words, s.tier2_words) == \
+        (0, 0, 0, 0)
+    assert s.full_words_per_query == 7      # engine constant survives reset
+    with pytest.raises(ValueError, match="postings widths"):
+        s.merge(ServeStats(full_words_per_query=9))
 
 
 def test_unseen_query_with_known_clause_is_eligible(tiny_data, tiny_problem):

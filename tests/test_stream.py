@@ -1,0 +1,285 @@
+"""repro.stream: drift simulator, accumulator, reweighting, re-tiering loop.
+
+The acceptance spine: on the seeded topic-rotation scenario at tiny scale,
+the drift-aware controller must (a) beat the static-tiering baseline on mean
+windowed Tier-1 coverage, (b) actually reuse the prior SolverState (warm
+refit step counts < a cold solve's), and (c) keep Theorem-3.1 parity across
+every hot swap.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api, stream
+
+
+@pytest.fixture(scope="module")
+def pipe_factory(tiny_data):
+    def fresh():
+        return (api.TieringPipeline.from_data(tiny_data)
+                .solve("greedy", budget_frac=0.5))
+    return fresh
+
+
+# -- SCSKProblem.with_weights -------------------------------------------------
+
+def _drifted_weights(log, seed=7):
+    rng = np.random.default_rng(seed)
+    w = np.asarray(log.train_weights) * rng.uniform(0.1, 4.0, log.n_queries)
+    return w / w.sum()
+
+
+def test_with_weights_matches_fresh_problem(tiny_data, tiny_problem):
+    """Bitset reuse is a pure optimization: solving a reweighted problem must
+    equal solving a problem freshly built with the same weights."""
+    from repro.core.problem import SCSKProblem
+    w = _drifted_weights(tiny_data.log)
+    fresh_data = dataclasses.replace(
+        tiny_data, log=dataclasses.replace(tiny_data.log, train_weights=w))
+    fresh = SCSKProblem.from_data(fresh_data)
+    rewt = tiny_problem.with_weights(w)
+
+    np.testing.assert_array_equal(np.asarray(rewt.query_weights),
+                                  np.asarray(fresh.query_weights))
+    cfg = api.SolveConfig(budget=float(tiny_data.n_docs // 2))
+    ra, rb = api.solve(rewt, cfg), api.solve(fresh, cfg)
+    assert ra.order == rb.order
+    np.testing.assert_array_equal(ra.selected, rb.selected)
+    assert ra.f_final == pytest.approx(rb.f_final)
+
+
+def test_with_weights_shares_bitsets_and_leaves_original(tiny_problem):
+    before = np.asarray(tiny_problem.query_weights).copy()
+    w = np.zeros(tiny_problem.n_queries, np.float32)
+    w[0] = 1.0
+    rewt = tiny_problem.with_weights(w)
+    assert rewt.clause_query_bits is tiny_problem.clause_query_bits
+    assert rewt.clause_doc_bits is tiny_problem.clause_doc_bits
+    assert rewt.test_weights is tiny_problem.test_weights
+    assert float(np.asarray(rewt.query_weights).sum()) == pytest.approx(1.0)
+    # the original problem is untouched (frozen dataclass copy)
+    np.testing.assert_array_equal(np.asarray(tiny_problem.query_weights),
+                                  before)
+
+
+def test_with_weights_rejects_bad_shape(tiny_problem):
+    with pytest.raises(ValueError, match="shape"):
+        tiny_problem.with_weights(np.ones(tiny_problem.n_queries + 3))
+
+
+# -- traffic simulator --------------------------------------------------------
+
+def test_simulator_is_deterministic(tiny_data):
+    log = tiny_data.log
+    mk = lambda s: list(stream.TrafficSimulator(
+        log, "rotate", seed=s, n_windows=4, queries_per_window=64).windows())
+    a, b, c = mk(0), mk(0), mk(1)
+    for wa, wb in zip(a, b):
+        np.testing.assert_array_equal(wa.query_ids, wb.query_ids)
+        np.testing.assert_array_equal(wa.probs, wb.probs)
+    assert any(not np.array_equal(wa.query_ids, wc.query_ids)
+               for wa, wc in zip(a, c))
+
+
+@pytest.mark.parametrize("scenario", stream.list_scenarios())
+def test_scenarios_yield_valid_drifting_distributions(tiny_data, scenario):
+    log = tiny_data.log
+    sim = stream.TrafficSimulator(log, scenario, seed=0, n_windows=6,
+                                  queries_per_window=32)
+    p0 = sim.window_probs(0)
+    drifted = False
+    for w in sim.windows():
+        assert w.probs.shape == (log.n_queries,)
+        assert (w.probs >= 0).all()
+        assert w.probs.sum() == pytest.approx(1.0)
+        assert w.query_ids.shape == (32,)
+        drifted |= not np.allclose(w.probs, p0)
+    assert drifted == (scenario != "static")
+
+
+def test_churn_moves_mass_to_novel_queries(tiny_data):
+    log = tiny_data.log
+    sim = stream.TrafficSimulator(log, "churn", seed=0, n_windows=6)
+    novel = np.asarray(log.train_weights) == 0
+    first = sim.window_probs(0)[novel].sum()
+    last = sim.window_probs(5)[novel].sum()
+    assert last > first + 0.1
+
+
+def test_unknown_scenario_raises(tiny_data):
+    with pytest.raises(KeyError, match="unknown scenario"):
+        stream.TrafficSimulator(tiny_data.log, "nope")
+
+
+# -- log accumulator ----------------------------------------------------------
+
+def test_accumulator_tracks_and_decays():
+    acc = stream.LogAccumulator(4, halflife=1.0)
+    acc.observe(np.array([0, 0, 0, 1]))
+    assert acc.weights()[0] == pytest.approx(0.75)
+    for _ in range(5):
+        acc.observe(np.array([2, 2, 2, 2]))
+    w = acc.weights()
+    assert w[2] > 0.9                      # new traffic dominates
+    assert w[0] < 0.05                     # old traffic decayed away
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_accumulator_prior_fades():
+    prior = np.array([1.0, 0.0, 0.0])
+    acc = stream.LogAccumulator(3, halflife=1.0, prior=prior,
+                                prior_strength=4.0)
+    assert acc.weights()[0] == pytest.approx(1.0)   # prior only
+    for _ in range(6):
+        acc.observe(np.array([1] * 8))
+    assert acc.weights()[1] > 0.9
+
+
+# -- prune_state --------------------------------------------------------------
+
+def test_prune_state_noop_and_full(tiny_problem):
+    cfg = api.SolveConfig(budget=float(tiny_problem.n_docs // 2))
+    r = api.solve(tiny_problem, cfg)
+    same, kept, dropped = stream.prune_state(tiny_problem, r.state,
+                                             min_unique_mass=0.0)
+    assert same is r.state and len(dropped) == 0
+    empty, kept2, dropped2 = stream.prune_state(tiny_problem, r.state,
+                                                min_unique_mass=2.0)
+    assert len(kept2) == 0 and len(dropped2) == len(kept)
+    assert int(empty.selected.sum()) == 0
+    assert float(empty.g_used) == 0.0
+
+
+def test_prune_state_rebuilds_consistent_state(tiny_problem, tiny_data):
+    from repro.core import bitset
+    cfg = api.SolveConfig(budget=float(tiny_problem.n_docs // 2))
+    r = api.solve(tiny_problem, cfg)
+    rewt = tiny_problem.with_weights(_drifted_weights(tiny_data.log))
+    state, kept, dropped = stream.prune_state(rewt, r.state,
+                                              min_unique_mass=5e-3)
+    assert len(kept) + len(dropped) == len(r.order)
+    assert int(state.selected.sum()) == len(kept) == int(state.step)
+    # g_used must equal the popcount of the rebuilt doc bitset
+    assert float(state.g_used) == float(
+        bitset.np_popcount(np.asarray(state.covered_d)).sum())
+    # resuming a solver from the pruned state must stay within budget
+    r2 = api.solve(rewt, cfg, state=state)
+    assert r2.g_final <= cfg.budget
+
+
+# -- refit + warm starts ------------------------------------------------------
+
+def test_refit_warm_start_does_fewer_steps(pipe_factory, tiny_data):
+    drifted = stream.TrafficSimulator(
+        tiny_data.log, "rotate", seed=0, n_windows=12).window_probs(3)
+
+    cold_pipe = pipe_factory().refit(drifted, state=None)
+    cold_steps = len(cold_pipe.result.order)
+
+    warm_pipe = pipe_factory()
+    prev = warm_pipe.result
+    state, kept, _ = stream.prune_state(warm_pipe.problem, prev.state,
+                                        weights=drifted,
+                                        min_unique_mass=2e-3)
+    # weights= kwarg ≡ pruning a reweighted problem (no rebuild needed)
+    via_problem, _, _ = stream.prune_state(
+        warm_pipe.problem.with_weights(drifted), prev.state,
+        min_unique_mass=2e-3)
+    np.testing.assert_array_equal(np.asarray(state.selected),
+                                  np.asarray(via_problem.selected))
+    warm_pipe.refit(drifted, state=state)
+    warm_steps = len(warm_pipe.result.order)
+
+    assert 0 < warm_steps < cold_steps      # the prior state was reused
+    # warm keeps every surviving clause of the previous solve
+    assert np.all(np.asarray(warm_pipe.result.selected)[kept])
+    assert warm_pipe.verify()               # Theorem 3.1 on the refit tiering
+
+
+def test_refit_budget_frac(pipe_factory, tiny_data):
+    w = np.asarray(tiny_data.log.train_weights)
+    pipe = pipe_factory().refit(w, budget_frac=0.25)
+    assert pipe.config.budget == float(tiny_data.n_docs // 4)
+    assert pipe.result.g_final <= tiny_data.n_docs // 4
+    with pytest.raises(ValueError, match="not both"):
+        pipe.refit(w, budget=10.0, budget_frac=0.1)
+
+
+def test_refit_rejects_flow_solvers_and_bad_warm(pipe_factory, tiny_data):
+    w = np.asarray(tiny_data.log.train_weights)
+    with pytest.raises(ValueError, match="SCSK solver"):
+        pipe_factory().refit(w, solver="flow-popularity")
+    pipe = pipe_factory()
+    with pytest.raises(ValueError, match="warm start"):
+        pipe.refit(w, solver="isk1", state=pipe.result.state)
+
+
+# -- the acceptance spine -----------------------------------------------------
+
+def test_rotation_retiering_beats_static_with_parity(pipe_factory):
+    kw = dict(scenario="rotate", n_windows=12, queries_per_window=512, seed=0)
+    static = stream.run_stream(pipe_factory(), enable_refit=False, **kw)
+    retiered = stream.run_stream(pipe_factory(), verify_swaps=True, **kw)
+
+    assert static.n_refits == 0
+    assert retiered.n_refits > 0
+    assert retiered.n_warm > 0              # warm-started re-solves happened
+    assert retiered.mean_coverage > static.mean_coverage
+    # Theorem 3.1 parity held after every hot swap
+    checked = [w for w in retiered.windows if w.parity_ok is not None]
+    assert checked and all(w.parity_ok for w in checked)
+    # the engine swapped generations without dropping a window
+    assert retiered.cumulative.n_queries == static.cumulative.n_queries
+
+
+def test_stream_cumulative_equals_window_sum(pipe_factory):
+    report = stream.run_stream(pipe_factory(), scenario="burst", n_windows=4,
+                               queries_per_window=128, seed=0)
+    assert report.cumulative.n_queries == 4 * 128
+    assert report.cumulative.n_tier1 == \
+        sum(w.stats.n_tier1 for w in report.windows)
+    assert report.cumulative.tier1_words == \
+        sum(w.stats.tier1_words for w in report.windows)
+    assert report.cumulative.tier2_words == \
+        sum(w.stats.tier2_words for w in report.windows)
+
+
+def test_detector_noise_floor_suppresses_sampling_jitter():
+    """With n_samples given, TV below the sampling-noise floor must not
+    trigger — a perfectly static workload refits zero times — while real
+    drift far above the floor still does."""
+    from repro.serve.engine import ServeStats
+    det = stream.DriftDetector(tv_threshold=0.05, coverage_drop=1.0,
+                               warmup_windows=0, min_windows_between=0)
+    rng = np.random.default_rng(0)
+    p = rng.dirichlet(np.ones(500))
+    det.rebase(p, 0.7)
+    stats = ServeStats(n_queries=10, n_tier1=7)
+    # empirical re-draws of p itself: TV is pure sampling noise
+    n = 400
+    for _ in range(5):
+        emp = np.bincount(rng.choice(500, size=n, p=p), minlength=500) / n
+        sig = det.update(stats, emp, n_samples=n)
+        assert sig.tv_noise_floor > 0
+        assert not sig.triggered, sig.reasons
+    # genuine drift: half the mass moves to one query
+    drifted = 0.5 * p + 0.5 * np.eye(500)[0]
+    assert det.update(stats, drifted, n_samples=n).triggered
+
+
+def test_detector_triggers_on_tv_and_hysteresis():
+    det = stream.DriftDetector(tv_threshold=0.1, coverage_drop=0.5,
+                               min_windows_between=2, warmup_windows=1)
+    from repro.serve.engine import ServeStats
+    stats = ServeStats(n_queries=10, n_tier1=7)
+    p = np.array([0.5, 0.5, 0.0])
+    q = np.array([0.0, 0.5, 0.5])
+    det.rebase(p, 0.7)
+    s1 = det.update(stats, q)
+    assert s1.tv_distance == pytest.approx(0.5)
+    assert not s1.triggered                 # hysteresis: 1 < min_windows=2
+    s2 = det.update(stats, q)
+    assert s2.triggered and "tv" in s2.reasons[0]
+    det.rebase(q, 0.7)
+    assert not det.update(stats, q).triggered   # anchored: no drift now
