@@ -1,0 +1,137 @@
+"""Cluster serving section: strong scaling over shard count, the
+latency-vs-budget frontier, and a retiered-vs-static A/B under drift.
+
+Three question families (seeded, tiny scale by default so the section stays
+CI-sized; REPRO_BENCH_CLUSTER_SCALE overrides):
+
+  * strong scaling: with the doc space split over {1,2,4} Tier-2 shards,
+    does per-shard words-scanned (the per-machine roofline term) drop with
+    shard count, and what do simulated p50/p95/p99 and throughput do?
+  * frontier: sweeping the Tier-1 budget trades fleet word traffic against
+    simulated tail latency — the paper's cost argument as a curve.
+  * drift A/B: on identical windows, a re-tiering cluster (rolling swaps)
+    vs the same fleet frozen — coverage, traffic saving, and loadgen
+    latency on each arm's final tiering.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+
+CLUSTER_SCALE = os.environ.get("REPRO_BENCH_CLUSTER_SCALE", "tiny")
+SHARD_SWEEP = (1, 2, 4)
+AB_SCENARIOS = ("rotate", "churn")
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_CLUSTER_WINDOWS", "8"))
+
+
+def _fresh_pipe(data):
+    from repro import api
+    return api.TieringPipeline.from_data(data).solve("greedy",
+                                                     budget_frac=0.5)
+
+
+def _loadgen(fleet, queries, **kw):
+    from repro import cluster
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    return cluster.run_loadgen(plan, fleet.classify(queries),
+                               n_queries=4000, seed=0, **kw)
+
+
+def run() -> dict:
+    from repro import stream
+    from repro.data import incidence, synthetic
+
+    corpus, log = synthetic.make_tiering_dataset(0, CLUSTER_SCALE)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+    sample = log.queries[:min(2048, log.n_queries)]
+    results: dict[str, dict] = {}
+
+    # -- strong scaling over shard count --------------------------------------
+    pipe = _fresh_pipe(data)
+    scaling = {}
+    for n_shards in SHARD_SWEEP:
+        fleet = pipe.deploy_cluster(n_shards=n_shards, t1_replicas=2)
+        batch = sample[:512]
+        t0 = time.perf_counter()
+        fleet.serve(batch)
+        dt = time.perf_counter() - t0
+        per_shard_words = max(
+            s.n_words for s in fleet.shards)           # t2 words/query/shard
+        rep = _loadgen(fleet, sample)
+        scaling[n_shards] = {
+            "per_shard_t2_words_per_query": per_shard_words,
+            "p50_ms": rep.p50_ms, "p95_ms": rep.p95_ms, "p99_ms": rep.p99_ms,
+            "throughput_qps": rep.throughput_qps,
+            "fleet_words": rep.fleet_words,
+        }
+        emit(f"cluster_shards{n_shards}", 1e6 * dt / len(batch),
+             f"per_shard_t2_words={per_shard_words};p50={rep.p50_ms:.4f};"
+             f"p95={rep.p95_ms:.4f};p99={rep.p99_ms:.4f};"
+             f"qps={rep.throughput_qps:.0f};fleet_words={rep.fleet_words}")
+    results["strong_scaling"] = scaling
+
+    # -- latency-vs-budget frontier -------------------------------------------
+    frontier = {}
+    for frac in (0.25, 0.5, 0.75):
+        from repro import api
+        fp = api.TieringPipeline.from_data(data).solve("greedy",
+                                                       budget_frac=frac)
+        fleet = fp.deploy_cluster(n_shards=2, t1_replicas=2)
+        rep = _loadgen(fleet, sample)
+        frontier[frac] = {"p95_ms": rep.p95_ms,
+                          "fleet_words": rep.fleet_words,
+                          "tier1_fraction": rep.tier1_fraction}
+        emit(f"cluster_budget{int(100 * frac)}", 0.0,
+             f"p95={rep.p95_ms:.4f};fleet_words={rep.fleet_words};"
+             f"t1_frac={rep.tier1_fraction:.4f}")
+    results["frontier"] = frontier
+
+    # -- retiered vs static A/B under drift -----------------------------------
+    ab = {}
+    for scenario in AB_SCENARIOS:
+        kw = dict(scenario=scenario, n_windows=N_WINDOWS,
+                  queries_per_window=256, seed=0)
+        sp = _fresh_pipe(data)
+        static_fleet = sp.deploy_cluster(n_shards=2, t1_replicas=2)
+        static = stream.run_stream(sp, engine=static_fleet,
+                                   enable_refit=False, **kw)
+        rp = _fresh_pipe(data)
+        retiered_fleet = rp.deploy_cluster(n_shards=2, t1_replicas=2)
+        retiered = stream.run_stream(rp, engine=retiered_fleet, **kw)
+        # a late-window refit can leave the rolling swap mid-flight; finish
+        # it so the latency probe measures the FINAL tiering's topology
+        retiered_fleet.drain_rollout()
+        lat_s = _loadgen(static_fleet, sample)
+        lat_r = _loadgen(retiered_fleet, sample)
+        ab[scenario] = {
+            "static_cov": static.mean_coverage,
+            "retiered_cov": retiered.mean_coverage,
+            "static_saving": static.cumulative.cost_saving,
+            "retiered_saving": retiered.cumulative.cost_saving,
+            "static_p95_ms": lat_s.p95_ms, "retiered_p95_ms": lat_r.p95_ms,
+            "n_refits": retiered.n_refits,
+            "pair_consistent": retiered_fleet.consistency_ok(),
+        }
+        emit(f"cluster_ab_{scenario}_static", 0.0,
+             f"cov={static.mean_coverage:.4f};"
+             f"saving={static.cumulative.cost_saving:.4f};"
+             f"p95={lat_s.p95_ms:.4f}")
+        emit(f"cluster_ab_{scenario}_retiered", 0.0,
+             f"cov={retiered.mean_coverage:.4f};"
+             f"saving={retiered.cumulative.cost_saving:.4f};"
+             f"p95={lat_r.p95_ms:.4f};refits={retiered.n_refits};"
+             f"consistent={retiered_fleet.consistency_ok()}")
+    results["ab"] = ab
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    from benchmarks import common
+    common.begin_section("cluster", scale=CLUSTER_SCALE)
+    run()
+    for path in common.write_json():
+        print(f"# wrote {path}", file=sys.stderr)

@@ -198,6 +198,16 @@ class TieringPipeline:
         return TieredEngine(self.data.postings, self.tiering(),
                             self.data.n_docs)
 
+    def deploy_cluster(self, *, n_shards: int = 2, t1_replicas: int = 2,
+                       t2_replicas: int = 1):
+        """-> cluster.TieredCluster: the same tiering served by a sharded,
+        replicated fleet (scatter-gather + rolling swaps), still exact."""
+        from repro.cluster import TieredCluster
+        return TieredCluster(self.data.postings, self.tiering(),
+                             self.data.n_docs, n_shards=n_shards,
+                             t1_replicas=t1_replicas,
+                             t2_replicas=t2_replicas)
+
     def summary(self) -> str:
         parts = [f"{self.corpus.n_docs} docs", f"{self.log.n_queries} queries"]
         if self.data is not None:

@@ -1,0 +1,53 @@
+"""repro.cluster — sharded, replicated two-tier serving (paper §2.2, Fig. 1).
+
+The paper's economics are fleet economics: a small Tier 1 matters because a
+FLEET of small replicas absorbs eligible traffic that would otherwise need
+full-index machines. This package models that fleet end to end:
+
+  * `shard_postings` / `DocShard` — word-aligned doc-sharding of the packed
+    postings; per-shard Tier-1 sub-indexes via `shard_tier_postings`;
+  * `ShardReplica` / `ClusterRouter` — replica groups per (tier, shard) and
+    the batch router: one batched ψ^clause kernel call
+    (`kernels.ops.clause_match`), scatter to Tier-1/Tier-2 replicas,
+    OR-merge of packed per-shard match bitsets — bit-identical to
+    single-tier matching (Theorem 3.1 per shard);
+  * `RollingSwap` / `ClusterTieringBuffer` — zero-downtime re-tiering:
+    replicas drain and swap one at a time, and no batch ever observes a
+    mixed (ψ, Tier-1) generation pair (`BatchTrace` proves it);
+  * `ClusterPlan` / `run_loadgen` — deterministic discrete-event load
+    generator: open-loop Poisson arrivals, words-scanned service model,
+    straggler tail, per-replica FIFO queueing; reports throughput,
+    p50/p95/p99 latency and fleet word traffic;
+  * `TieredCluster` — engine-compatible facade, so
+    `stream.RetieringController` re-tiers a whole cluster through rolling
+    swaps exactly as it hot-swaps one engine.
+
+Quickstart:
+
+    from repro import api, cluster
+
+    pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+            .mine(min_support=1e-3).solve("greedy", budget_frac=0.5))
+    fleet = pipe.deploy_cluster(n_shards=4, t1_replicas=2)
+    results = fleet.serve(pipe.log.queries[:64])      # exact match sets
+    rep = cluster.run_loadgen(cluster.ClusterPlan.of_cluster(fleet),
+                              fleet.classify(pipe.log.queries[:512]))
+    print(rep.line())
+
+CLI: `python -m repro.launch.cluster --shards 2 --replicas 2 --windows 2`
+"""
+from repro.cluster.loadgen import (                    # noqa: F401
+    ClusterPlan, LoadgenReport, run_loadgen)
+from repro.cluster.rollout import (                    # noqa: F401
+    ClusterTieringBuffer, RollingSwap)
+from repro.cluster.router import (                     # noqa: F401
+    BatchTrace, ClusterRouter, ShardReplica, TieredCluster)
+from repro.cluster.shard import (                      # noqa: F401
+    DocShard, plan_shards, shard_postings, shard_tier_postings)
+
+__all__ = [
+    "BatchTrace", "ClusterPlan", "ClusterRouter", "ClusterTieringBuffer",
+    "DocShard", "LoadgenReport", "RollingSwap", "ShardReplica",
+    "TieredCluster", "plan_shards", "run_loadgen", "shard_postings",
+    "shard_tier_postings",
+]

@@ -1,0 +1,179 @@
+"""Deterministic discrete-event load generator for the serving cluster.
+
+Open-loop seeded Poisson arrivals hit the fleet topology (per-shard,
+per-replica words-per-query from a `ClusterPlan` snapshot); each query
+scatters one subquery to the least-loaded replica of every shard it must
+touch (Tier-1 shards with local D₁ when eligible, every Tier-2 shard
+otherwise), each replica is a single-server FIFO queue, and the query
+completes when its slowest subquery gathers — so tail latency captures both
+queueing and the straggler amplification of wide scatter fan-outs.
+
+Service-time model (per subquery):
+    service = t_fixed_us + words_per_query * t_word_us    [microseconds]
+with a seeded heavy-tail straggler: with probability `straggler_p` the
+subquery is stretched by `straggler_x`. Everything is derived from one
+`numpy` Generator, so two runs with equal arguments are bit-identical.
+
+Optionally, a rolling Tier-1 swap can be injected mid-run (`rollout_at_s`):
+replicas go unavailable one at a time for `swap_ms` each, in the same
+replica-major order the live `RollingSwap` uses; eligible queries fall back
+to the Tier-2 scatter when no Tier-1 cover remains, exactly like the router.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    """Static topology snapshot the simulator runs against.
+
+    t1_words[s][r] / t2_words[s][r]: words-per-query of replica r of shard s
+    (Tier-1 entries of 0 mean D₁ misses the shard — never contacted).
+    """
+    t1_words: tuple[tuple[int, ...], ...]
+    t2_words: tuple[tuple[int, ...], ...]
+
+    @classmethod
+    def of_cluster(cls, cluster) -> "ClusterPlan":
+        return cls(
+            t1_words=tuple(tuple(r.words_per_query for r in g)
+                           for g in cluster.router.t1),
+            t2_words=tuple(tuple(r.words_per_query for r in g)
+                           for g in cluster.router.t2))
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.t2_words)
+
+
+@dataclasses.dataclass
+class LoadgenReport:
+    n_queries: int
+    offered_qps: float
+    throughput_qps: float       # completed / makespan
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    max_ms: float
+    tier1_fraction: float
+    fleet_words: int            # total postings words scanned fleet-wide
+    per_shard_t2_words: tuple[int, ...]   # strong-scaling signal
+    t2_fallback_queries: int    # eligible queries served by Tier 2 (rollout)
+
+    def line(self) -> str:
+        return (f"qps={self.throughput_qps:,.0f} (offered {self.offered_qps:,.0f})"
+                f"  p50={self.p50_ms:.3f}ms p95={self.p95_ms:.3f}ms "
+                f"p99={self.p99_ms:.3f}ms  t1={self.tier1_fraction:.3f}  "
+                f"fleet_words={self.fleet_words:,}")
+
+
+def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
+                rate_qps: float = 20000.0, n_queries: int = 4000,
+                seed: int = 0, t_fixed_us: float = 20.0,
+                t_word_us: float = 4.0, straggler_p: float = 0.01,
+                straggler_x: float = 8.0, rollout_at_s: float | None = None,
+                swap_ms: float = 5.0) -> LoadgenReport:
+    """Simulate `n_queries` open-loop arrivals; queries cycle through the
+    `eligible` flags (a classified sample of real traffic)."""
+    rng = np.random.default_rng(seed)
+    eligible = np.asarray(eligible, bool)
+    if eligible.size == 0:
+        eligible = np.zeros(1, bool)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_queries))
+    straggle = rng.random((n_queries, plan.n_shards)) < straggler_p
+
+    # per-replica next-free times, flat-indexed [tier][shard][replica]
+    free_t1 = [np.zeros(len(g)) for g in plan.t1_words]
+    free_t2 = [np.zeros(len(g)) for g in plan.t2_words]
+
+    # replica-major rollout outage windows: (start, end) per t1 replica
+    outages: dict[tuple[int, int], tuple[float, float]] = {}
+    if rollout_at_s is not None:
+        t = rollout_at_s
+        n_reps = max((len(g) for g in plan.t1_words), default=0)
+        for r in range(n_reps):
+            for s in range(len(plan.t1_words)):
+                if r < len(plan.t1_words[s]):
+                    outages[(s, r)] = (t, t + swap_ms * 1e-3)
+                    t += swap_ms * 1e-3
+
+    def available(s: int, r: int, now: float) -> bool:
+        lo_hi = outages.get((s, r))
+        return lo_hi is None or not (lo_hi[0] <= now < lo_hi[1])
+
+    latencies = np.empty(n_queries)
+    fleet_words = 0
+    n_t1 = 0
+    fallbacks = 0
+    per_shard_t2 = np.zeros(plan.n_shards, np.int64)
+
+    for i in range(n_queries):
+        t = arrivals[i]
+        elig = bool(eligible[i % eligible.size])
+        use_t1 = False
+        if elig:
+            # every shard with local D₁ needs an available replica
+            picks = []
+            for s, group in enumerate(plan.t1_words):
+                words = [w for w in group]
+                avail = [r for r in range(len(group))
+                         if available(s, r, t) and words[r] > 0]
+                if any(w > 0 for w in words) and not avail:
+                    picks = None            # no Tier-1 cover: fall back
+                    break
+                if avail:
+                    picks.append((s, min(avail, key=lambda r: free_t1[s][r])))
+            if picks is not None:
+                use_t1 = True
+            else:
+                fallbacks += 1
+        if use_t1:
+            n_t1 += 1
+            done = t
+            for s, r in picks:
+                words = plan.t1_words[s][r]
+                service = (t_fixed_us + words * t_word_us) * 1e-6
+                if straggle[i, s]:
+                    service *= straggler_x
+                start = max(t, free_t1[s][r])
+                free_t1[s][r] = start + service
+                done = max(done, free_t1[s][r])
+                fleet_words += words
+        else:
+            done = t
+            for s, group in enumerate(plan.t2_words):
+                r = int(np.argmin(free_t2[s]))
+                words = group[r]
+                service = (t_fixed_us + words * t_word_us) * 1e-6
+                if straggle[i, s]:
+                    service *= straggler_x
+                start = max(t, free_t2[s][r])
+                free_t2[s][r] = start + service
+                done = max(done, free_t2[s][r])
+                fleet_words += words
+                per_shard_t2[s] += words
+        latencies[i] = done - t
+
+    makespan = max(
+        float(arrivals[-1] + latencies[-1]),
+        max((float(f.max()) for f in free_t1 + free_t2 if f.size), default=0.0)
+    ) - float(arrivals[0])
+    lat_ms = latencies * 1e3
+    return LoadgenReport(
+        n_queries=n_queries,
+        offered_qps=rate_qps,
+        throughput_qps=n_queries / max(makespan, 1e-12),
+        p50_ms=float(np.percentile(lat_ms, 50)),
+        p95_ms=float(np.percentile(lat_ms, 95)),
+        p99_ms=float(np.percentile(lat_ms, 99)),
+        mean_ms=float(lat_ms.mean()),
+        max_ms=float(lat_ms.max()),
+        tier1_fraction=n_t1 / n_queries,
+        fleet_words=int(fleet_words),
+        per_shard_t2_words=tuple(int(x) for x in per_shard_t2),
+        t2_fallback_queries=fallbacks,
+    )

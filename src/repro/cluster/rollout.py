@@ -1,0 +1,77 @@
+"""Rolling Tier-1 swaps: drain → swap → undrain, one replica at a time.
+
+A re-tiering changes BOTH halves of the serving contract — the ψ^clause
+classifier at the router and the Tier-1 sub-indexes on the replicas — and
+Theorem 3.1 only holds when a query classified by generation g's ψ is served
+by generation g's Tier-1. The cluster therefore never hot-swaps the fleet at
+once: a `RollingSwap` walks the Tier-1 replicas in REPLICA-MAJOR order
+(replica r of every shard, then r+1, ...), so with ≥ 2 replicas per shard
+some complete generation exists at every instant and the router always
+classifies with the ψ of the generation it routes to. With a single replica
+per shard there is a mid-rollout gap where no generation covers every shard;
+the router then routes eligible traffic to Tier 2, which is exact for any
+query — correctness never depends on rollout timing.
+
+Each replica swap is two-phase: `step()` first marks the replica draining
+(the router stops sending it batches; in-flight work finishes), the next
+`step()` commits the new (sub-index, words, generation) and undrains.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.tiering import ClauseTiering
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTieringBuffer:
+    """An off-path-built per-shard Tier-1 generation, ready to roll out."""
+    tiering: ClauseTiering
+    shard_postings: list[jnp.ndarray]   # per-shard Tier-1 sub-indexes
+    shard_words: list[int]              # compacted words/query per shard
+    generation: int = 0
+
+    def shard_nonempty(self, s: int) -> bool:
+        return self.shard_words[s] > 0
+
+
+class RollingSwap:
+    """Walks `t1_groups` (list per shard of replica lists) toward `buffer`."""
+
+    def __init__(self, buffer: ClusterTieringBuffer, t1_groups):
+        self.buffer = buffer
+        # replica-major: [:, 0] then [:, 1] ... so one full cover swaps first
+        n_replicas = max((len(g) for g in t1_groups), default=0)
+        self._pending = [g[r] for r in range(n_replicas)
+                         for g in t1_groups if r < len(g)]
+        self._draining = None
+        self.n_swapped = 0
+
+    @property
+    def done(self) -> bool:
+        return self._draining is None and not self._pending
+
+    def step(self):
+        """Advance one phase; returns the replica acted on (or None if done)."""
+        if self._draining is not None:
+            rep = self._draining
+            rep.commit(self.buffer.shard_postings[rep.shard.index],
+                       self.buffer.shard_words[rep.shard.index],
+                       self.buffer.generation)
+            self._draining = None
+            self.n_swapped += 1
+            return rep
+        if not self._pending:
+            return None
+        rep = self._pending.pop(0)
+        rep.draining = True
+        self._draining = rep
+        return rep
+
+    def run_to_completion(self) -> int:
+        """Swap every remaining replica (no traffic between steps)."""
+        while not self.done:
+            self.step()
+        return self.n_swapped

@@ -1,0 +1,317 @@
+"""Scatter-gather routing over a sharded, replicated two-tier fleet.
+
+Per batch, the `ClusterRouter`:
+
+  1. picks the newest COMPLETE Tier-1 generation (every shard with a
+     non-empty local D₁ has a live, non-draining replica at that generation);
+  2. runs ψ^clause ONCE for the whole batch through the packed
+     clause-subset-test kernel (`kernels.ops.clause_match`) with that
+     generation's clause set;
+  3. scatters eligible queries to one Tier-1 replica per (non-empty) shard
+     and the rest to one Tier-2 replica per shard, round-robin within each
+     replica group;
+  4. gathers by OR-merging the per-shard packed match bitsets — shards own
+     disjoint word ranges, so the merge is a word-slice placement and the
+     result is bit-identical to single-tier matching.
+
+The (ψ, Tier-1) pairing invariant: classification and Tier-1 serving always
+use the SAME generation, per batch, by construction — `BatchTrace` records
+both so tests can assert no window ever observed a mixed pair. If a rolling
+swap leaves no complete generation (single-replica groups mid-swap), the
+whole batch is served from Tier 2, which is exact for any query.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import shard as shard_mod
+from repro.cluster.rollout import ClusterTieringBuffer, RollingSwap
+from repro.core import bitset
+from repro.core.tiering import ClauseTiering
+from repro.serve import matching
+from repro.serve.engine import ServeStats
+
+
+class ShardReplica:
+    """One serving unit: a (tier, shard) sub-index plus its own counters."""
+
+    def __init__(self, tier: int, shard: shard_mod.DocShard,
+                 postings, words_per_query: int, generation: int = 0):
+        self.tier = tier
+        self.shard = shard
+        self.postings = jnp.asarray(postings)
+        self.words_per_query = words_per_query
+        self.generation = generation
+        self.draining = False
+        self.n_batches = 0
+        self.n_queries = 0
+        self.words_scanned = 0
+
+    def commit(self, postings, words_per_query: int, generation: int) -> None:
+        """Install a new generation and rejoin the rotation (rollout phase 2)."""
+        self.postings = jnp.asarray(postings)
+        self.words_per_query = words_per_query
+        self.generation = generation
+        self.draining = False
+
+    def match(self, tokens: jnp.ndarray) -> np.ndarray:
+        """AND-match a padded token batch against the local sub-index."""
+        self.n_batches += 1
+        self.n_queries += int(tokens.shape[0])
+        self.words_scanned += int(tokens.shape[0]) * self.words_per_query
+        return np.asarray(matching.match_batch(self.postings, tokens))
+
+    def __repr__(self) -> str:  # debugging/observability
+        return (f"ShardReplica(t{self.tier} s{self.shard.index} "
+                f"gen={self.generation}{' draining' if self.draining else ''})")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchTrace:
+    """What one batch observed: the ψ generation it was classified with and
+    the generations of every Tier-1 replica that served it."""
+    psi_generation: int          # -1 = Tier-2 fallback (no ψ consulted)
+    t1_generations: tuple[int, ...]
+    n_tier1: int
+    n_tier2: int
+
+    @property
+    def consistent(self) -> bool:
+        """No mixed (ψ, Tier-1) pair: every Tier-1 server matched the ψ."""
+        return all(g == self.psi_generation for g in self.t1_generations)
+
+
+class ClusterRouter:
+    def __init__(self, shards: list[shard_mod.DocShard],
+                 t1_groups: list[list[ShardReplica]],
+                 t2_groups: list[list[ShardReplica]],
+                 buffer0: ClusterTieringBuffer, n_docs: int):
+        self.shards = shards
+        self.t1 = t1_groups
+        self.t2 = t2_groups
+        self.n_docs = n_docs
+        self._buffers: dict[int, ClusterTieringBuffer] = {
+            buffer0.generation: buffer0}
+        self.rollout: RollingSwap | None = None
+        self._rr: dict[tuple[int, int], int] = {}
+        self.trace: list[BatchTrace] = []
+        self.stats = ServeStats(
+            full_words_per_query=sum(s.n_words for s in shards))
+
+    # -- generations ----------------------------------------------------------
+    @property
+    def target_generation(self) -> int:
+        return max(self._buffers)
+
+    @property
+    def target_tiering(self) -> ClauseTiering:
+        return self._buffers[self.target_generation].tiering
+
+    def live_generations(self) -> set[int]:
+        return {r.generation for group in self.t1 for r in group}
+
+    def complete_generations(self) -> list[int]:
+        """Generations with a routable Tier-1 replica on every shard whose
+        local D₁ is non-empty under that generation, oldest first."""
+        out = []
+        for g, buf in sorted(self._buffers.items()):
+            if all(not buf.shard_nonempty(s.index)
+                   or any(r.generation == g and not r.draining
+                          for r in self.t1[s.index])
+                   for s in self.shards):
+                out.append(g)
+        return out
+
+    # -- rolling swaps --------------------------------------------------------
+    def begin_rollout(self, buffer: ClusterTieringBuffer) -> None:
+        if self.rollout is not None:        # supersede: finish the old roll
+            self.rollout.run_to_completion()
+        self._buffers[buffer.generation] = buffer
+        self.rollout = RollingSwap(buffer, self.t1)
+
+    def advance_rollout(self, steps: int = 1) -> None:
+        if self.rollout is None:
+            return
+        for _ in range(steps):
+            self.rollout.step()
+        if self.rollout.done:
+            self.rollout = None
+            self._prune_buffers()
+
+    def _prune_buffers(self) -> None:
+        keep = self.live_generations() | {self.target_generation}
+        self._buffers = {g: b for g, b in self._buffers.items() if g in keep}
+
+    # -- routing --------------------------------------------------------------
+    def _pick(self, group: list[ShardReplica], tier: int, shard_idx: int,
+              generation: int | None = None) -> ShardReplica:
+        ready = [r for r in group if not r.draining
+                 and (generation is None or r.generation == generation)]
+        key = (tier, shard_idx)
+        i = self._rr.get(key, 0)
+        self._rr[key] = i + 1
+        return ready[i % len(ready)]
+
+    def classify(self, queries: list[tuple[int, ...]],
+                 generation: int | None = None) -> np.ndarray:
+        buf = self._buffers[self.target_generation if generation is None
+                            else generation]
+        return matching.classify_batch(
+            buf.tiering.clause_vocab_bits, queries, buf.tiering.vocab_size)
+
+    def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
+        """Exact global match sets (sorted doc ids) per query."""
+        self.advance_rollout()              # one drain-or-swap phase per batch
+        b = len(queries)
+        if b == 0:
+            return []
+        out = np.zeros((b, self.stats.full_words_per_query), np.uint32)
+        complete = self.complete_generations()
+        if complete:
+            gen = complete[-1]              # newest fully-covered generation
+            buf = self._buffers[gen]
+            elig = self.classify(queries, generation=gen)
+        else:                               # mid-rollout gap: Tier 2 is exact
+            gen, buf = -1, None
+            elig = np.zeros(b, bool)
+        toks = matching.pad_token_batch(queries)
+        t1_gens: list[int] = []
+        idx1 = np.nonzero(elig)[0]
+        if len(idx1):
+            sub = jnp.asarray(toks[idx1])
+            for s in self.shards:
+                if not buf.shard_nonempty(s.index):
+                    continue                # D₁ misses this shard: no matches
+                rep = self._pick(self.t1[s.index], 1, s.index, generation=gen)
+                out[idx1, s.word_lo:s.word_hi] = rep.match(sub)
+                t1_gens.append(rep.generation)
+                self.stats.tier1_words += len(idx1) * rep.words_per_query
+            self.stats.n_tier1 += len(idx1)
+        idx2 = np.nonzero(~elig)[0]
+        if len(idx2):
+            sub = jnp.asarray(toks[idx2])
+            for s in self.shards:
+                rep = self._pick(self.t2[s.index], 2, s.index)
+                out[idx2, s.word_lo:s.word_hi] = rep.match(sub)
+                self.stats.tier2_words += len(idx2) * rep.words_per_query
+        self.stats.n_queries += b
+        self.trace.append(BatchTrace(
+            psi_generation=gen, t1_generations=tuple(t1_gens),
+            n_tier1=len(idx1), n_tier2=len(idx2)))
+        return [bitset.np_to_indices(row, self.n_docs) for row in out]
+
+
+class TieredCluster:
+    """Engine-compatible facade over the sharded, replicated fleet.
+
+    Duck-types the `serve.TieredEngine` surface (`serve`, `classify`,
+    `serve_reference`, `stats`, `tiering`, `generation`, `prepare_tiering`,
+    `swap_tiering`) so `stream.RetieringController` drives a whole cluster
+    exactly as it drives one engine — except `swap_tiering` here starts a
+    ROLLING swap that progresses one replica phase per served batch.
+    """
+
+    def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
+                 n_docs: int, *, n_shards: int = 2, t1_replicas: int = 2,
+                 t2_replicas: int = 1):
+        if t1_replicas < 1 or t2_replicas < 1:
+            raise ValueError("each replica group needs >= 1 replica")
+        self.n_docs = n_docs
+        self._postings_host = np.asarray(postings)
+        self.postings_t2 = jnp.asarray(postings)          # oracle index
+        self.shards, self._slices = shard_mod.shard_postings(
+            self._postings_host, n_docs, n_shards)
+        buf0 = self._build_buffer(tiering, generation=0)
+        t1 = [[ShardReplica(1, s, buf0.shard_postings[s.index],
+                            buf0.shard_words[s.index])
+               for _ in range(t1_replicas)] for s in self.shards]
+        t2 = [[ShardReplica(2, s, self._slices[s.index], s.n_words)
+               for _ in range(t2_replicas)] for s in self.shards]
+        self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs)
+
+    def _build_buffer(self, tiering: ClauseTiering,
+                      generation: int) -> ClusterTieringBuffer:
+        posts, words = [], []
+        for s in self.shards:
+            p, w = shard_mod.shard_tier_postings(
+                self._slices[s.index], s, tiering.tier1_docs)
+            posts.append(jnp.asarray(p))
+            words.append(w)
+        return ClusterTieringBuffer(tiering=tiering, shard_postings=posts,
+                                    shard_words=words, generation=generation)
+
+    # -- engine-compatible surface -------------------------------------------
+    @property
+    def stats(self) -> ServeStats:
+        return self.router.stats
+
+    @property
+    def tiering(self) -> ClauseTiering:
+        return self.router.target_tiering
+
+    @property
+    def generation(self) -> int:
+        return self.router.target_generation
+
+    @property
+    def tier1_words_per_query(self) -> int:
+        buf = self.router._buffers[self.generation]
+        return sum(buf.shard_words)
+
+    def classify(self, queries: list[tuple[int, ...]]) -> np.ndarray:
+        return self.router.classify(queries)
+
+    def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
+        return self.router.serve(queries)
+
+    def serve_reference(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
+        """Single-tier, single-shard oracle for correctness tests."""
+        toks = matching.pad_token_batch(queries)
+        m = np.asarray(matching.match_batch(self.postings_t2,
+                                            jnp.asarray(toks)))
+        return [bitset.np_to_indices(r, self.n_docs) for r in m]
+
+    def prepare_tiering(self, tiering: ClauseTiering) -> ClusterTieringBuffer:
+        """Build every shard's next Tier-1 sub-index OFF the request path."""
+        return self._build_buffer(tiering, generation=0)
+
+    def swap_tiering(self, tiering: ClauseTiering | ClusterTieringBuffer,
+                     *, immediate: bool = False) -> int:
+        """Start a rolling swap to a new tiering; returns its generation.
+
+        The rollout advances one drain/swap phase per served batch; pass
+        `immediate=True` (or call `drain_rollout`) to complete it with no
+        traffic in between. Serving stays exact throughout either way.
+        """
+        buf = tiering if isinstance(tiering, ClusterTieringBuffer) \
+            else self.prepare_tiering(tiering)
+        buf = dataclasses.replace(
+            buf, generation=self.router.target_generation + 1)
+        self.router.begin_rollout(buf)
+        if immediate:
+            self.drain_rollout()
+        return buf.generation
+
+    def drain_rollout(self) -> None:
+        """Finish any in-progress rollout without serving traffic."""
+        while self.router.rollout is not None:
+            self.router.advance_rollout()
+
+    # -- observability --------------------------------------------------------
+    @property
+    def trace(self) -> list[BatchTrace]:
+        return self.router.trace
+
+    def consistency_ok(self) -> bool:
+        """True iff no served batch ever saw a mixed (ψ, Tier-1) pair."""
+        return all(t.consistent for t in self.router.trace)
+
+    def describe(self) -> str:
+        t1n = sum(len(g) for g in self.router.t1)
+        t2n = sum(len(g) for g in self.router.t2)
+        return (f"{len(self.shards)} shards x ({t1n} t1 + {t2n} t2 replicas)"
+                f"  gen={self.generation}"
+                f"  live={sorted(self.router.live_generations())}")

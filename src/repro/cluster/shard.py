@@ -1,0 +1,84 @@
+"""Doc-space sharding of the packed postings index.
+
+A cluster partitions the document universe into contiguous, WORD-ALIGNED
+ranges so every shard's sub-index is a pure column slice of the packed
+postings matrix — no unpack/repack, and a shard's local match bitset drops
+into the global result at `[word_lo:word_hi]`. Shards partition the doc
+space, so the scatter-gather OR-merge of per-shard match bitsets is exactly
+the single-tier match set (Theorem 3.1 then holds shard-locally: a global
+Tier-1 doc set restricted to a shard contains every eligible query's matches
+that live in that shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitset
+
+
+@dataclasses.dataclass(frozen=True)
+class DocShard:
+    """One contiguous word-aligned slice of the document universe."""
+    index: int
+    word_lo: int     # first postings word owned (inclusive)
+    word_hi: int     # last postings word owned (exclusive)
+    doc_lo: int      # global id of local doc 0 (== word_lo * 32)
+    n_docs: int      # valid documents in this shard
+
+    @property
+    def n_words(self) -> int:
+        return self.word_hi - self.word_lo
+
+
+def plan_shards(n_docs: int, n_shards: int) -> list[DocShard]:
+    """Partition `n_docs` documents into ≤ `n_shards` word-aligned ranges.
+
+    Words are spread as evenly as possible; the effective shard count is
+    clamped to the number of postings words (a shard must own ≥ 1 word).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    words = bitset.n_words(n_docs)
+    n = min(n_shards, words)
+    base, rem = divmod(words, n)
+    shards, lo = [], 0
+    for i in range(n):
+        hi = lo + base + (1 if i < rem else 0)
+        doc_lo = lo * bitset.WORD
+        shards.append(DocShard(
+            index=i, word_lo=lo, word_hi=hi, doc_lo=doc_lo,
+            n_docs=min(n_docs, hi * bitset.WORD) - doc_lo))
+        lo = hi
+    return shards
+
+
+def shard_postings(postings: np.ndarray, n_docs: int,
+                   n_shards: int) -> tuple[list[DocShard], list[np.ndarray]]:
+    """Split packed postings [V, Wd] into per-shard column slices.
+
+    Returns `(shards, slices)` where `slices[i]` is the [V, shards[i].n_words]
+    Tier-2 sub-index of shard i.
+    """
+    shards = plan_shards(n_docs, n_shards)
+    return shards, [postings[:, s.word_lo:s.word_hi] for s in shards]
+
+
+def shard_tier_postings(shard_slice: np.ndarray, shard: DocShard,
+                        tier1_docs: np.ndarray) -> tuple[np.ndarray, int]:
+    """Shard-local Tier-1 sub-index: the shard's Tier-2 slice masked to the
+    shard's portion of D₁, plus the compacted words-per-query a re-indexed
+    production Tier-1 of that size would scan (0 when D₁ misses the shard,
+    in which case the router need not contact the shard at all).
+    """
+    local = np.asarray(tier1_docs[shard.doc_lo:shard.doc_lo + shard.n_docs],
+                       bool)
+    t1_bits = bitset.np_pack(local) if shard.n_docs else \
+        np.zeros(shard.n_words, np.uint32)
+    if t1_bits.shape[0] != shard.n_words:   # last shard: pad to slice width
+        t1_bits = np.concatenate(
+            [t1_bits, np.zeros(shard.n_words - t1_bits.shape[0], np.uint32)])
+    n_local = int(local.sum())
+    words = bitset.n_words(n_local) if n_local else 0
+    return shard_slice & t1_bits[None, :], words

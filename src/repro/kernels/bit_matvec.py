@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import block_dim
+
 WORD = 32
 
 
@@ -52,15 +54,13 @@ def bit_matvec(
     c, w = a_bits.shape
     wb, r = x.shape
     assert wb == w * WORD, (a_bits.shape, x.shape)
-    bc = min(block_c, c)
-    bw = min(block_w, w)
     # pad to tile multiples; zero words / zero x rows contribute nothing.
-    cp = -c % bc
-    wp = -w % bw
+    bc, cp, nc = block_dim(c, block_c)
+    bw, wp, nw = block_dim(w, block_w)
     if cp or wp:
         a_bits = jnp.pad(a_bits, ((0, cp), (0, wp)))
         x = jnp.pad(x, ((0, wp * WORD), (0, 0)))
-    grid = ((c + cp) // bc, (w + wp) // bw)
+    grid = (nc, nw)
     out = pl.pallas_call(
         _kernel,
         grid=grid,

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: batched packed clause-subset test (ψ^clause, eq. 8).
+
+eligible[b] = ∃k . clause_k ⊆ query_b, over uint32-packed vocab bitsets.
+One call classifies a whole serving batch — this replaces the engine's old
+per-query host loop on the request path and is what the cluster router runs
+once per batch before scatter-gathering to the tiers.
+
+The subset test c ⊆ q is `(c & ~q) == 0` word-wise; a pure VPU op. Tiling:
+  grid = (B/BB, K/BK); K is the minor (sequential) axis so the [BB, 1]
+  eligibility accumulator stays resident and ORs across clause blocks.
+  The [BB, BK, Wv] mismatch intermediate lives in VMEM: with the default
+  BB=BK=64 and Wv ≤ 64 (2048-term vocab) that is ≤ 1 MB << 16 MB VMEM.
+Zero-padded clause rows are the empty clause (⊆ everything), so padded K
+rows are masked by their global index before the OR-reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiles import block_dim
+
+
+def _kernel(q_ref, c_ref, o_ref, *, n_clauses: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]                                   # [BB, Wv] uint32
+    c = c_ref[...]                                   # [BK, Wv] uint32
+    miss = c[None, :, :] & ~q[:, None, :]            # [BB, BK, Wv]
+    sub = jnp.all(miss == 0, axis=-1)                # [BB, BK] bool
+    # mask zero-padded clause rows (empty clause matches everything)
+    k_global = jax.lax.broadcasted_iota(jnp.int32, sub.shape, 1) \
+        + j * c.shape[0]
+    sub = jnp.logical_and(sub, k_global < n_clauses)
+    o_ref[...] |= jnp.any(sub, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k", "interpret"))
+def clause_match(
+    query_bits: jnp.ndarray,   # uint32 [B, Wv]
+    clause_bits: jnp.ndarray,  # uint32 [K, Wv]
+    *,
+    block_b: int = 64,
+    block_k: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:              # bool [B]
+    b, wv = query_bits.shape
+    k, wk = clause_bits.shape
+    assert wv == wk, (query_bits.shape, clause_bits.shape)
+    bb, bp, nb = block_dim(b, block_b)
+    bk, kp, nk = block_dim(k, block_k)
+    if bp:
+        query_bits = jnp.pad(query_bits, ((0, bp), (0, 0)))
+    if kp:
+        clause_bits = jnp.pad(clause_bits, ((0, kp), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_clauses=k),
+        grid=(nb, nk),
+        in_specs=[
+            pl.BlockSpec((bb, wv), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, wv), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + bp, 1), jnp.int32),
+        interpret=interpret,
+    )(query_bits, clause_bits)
+    return out[:b, 0].astype(bool)

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import block_dim
+
 
 def _kernel(a_ref, m_ref, o_ref):
     j = pl.program_id(1)
@@ -37,14 +39,12 @@ def coverage_gain(
     interpret: bool = False,
 ) -> jnp.ndarray:             # int32 [C]
     c, w = a_bits.shape
-    bc = min(block_c, c)
-    bw = min(block_w, w)
-    cp = -c % bc
-    wp = -w % bw
+    bc, cp, nc = block_dim(c, block_c)
+    bw, wp, nw = block_dim(w, block_w)
     if cp or wp:
         a_bits = jnp.pad(a_bits, ((0, cp), (0, wp)))
         mask = jnp.pad(mask, (0, wp))
-    grid = ((c + cp) // bc, (w + wp) // bw)
+    grid = (nc, nw)
     out = pl.pallas_call(
         _kernel,
         grid=grid,

@@ -19,9 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bit_matvec as _bm
+from repro.kernels import clause_match as _cm
 from repro.kernels import coverage_gain as _cg
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_gain as _sg
+from repro.kernels.tiles import block_dim  # noqa: F401  (public re-export)
 
 WORD = 32
 
@@ -77,6 +79,42 @@ def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None
     if b == "interpret":
         return _cg.coverage_gain(a_bits, mask, interpret=True)
     return _ref.coverage_gain(a_bits, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_b",))
+def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
+                      chunk_b: int = 1024) -> jnp.ndarray:
+    """Chunked over queries so the [b, K, Wv] subset-test intermediate stays
+    bounded regardless of batch size."""
+    b = query_bits.shape[0]
+    cb = min(chunk_b, max(1, b))
+    pad = -b % cb
+    if pad:
+        query_bits = jnp.pad(query_bits, ((0, pad), (0, 0)))
+    chunks = query_bits.reshape(-1, cb, query_bits.shape[1])
+
+    def body(_, q):
+        return None, _ref.clause_match(q, clause_bits)
+
+    _, out = jax.lax.scan(body, None, chunks)
+    return out.reshape(-1)[:b]
+
+
+def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
+                 backend: str | None = None) -> jnp.ndarray:
+    """eligible [B] bool = any clause row is a bitwise subset of the query.
+
+    This is the batched ψ^clause classifier (paper eq. 8): one call per
+    serving batch replaces the engine's per-query host loop.
+    """
+    if clause_bits.shape[0] == 0 or query_bits.shape[0] == 0:
+        return jnp.zeros((query_bits.shape[0],), bool)
+    b = resolve_backend(backend)
+    if b == "pallas":
+        return _cm.clause_match(query_bits, clause_bits)
+    if b == "interpret":
+        return _cm.clause_match(query_bits, clause_bits, interpret=True)
+    return _clause_match_xla(query_bits, clause_bits)
 
 
 def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:

@@ -40,6 +40,18 @@ def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jax.lax.population_count(fresh).astype(jnp.int32), axis=-1)
 
 
+def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray) -> jnp.ndarray:
+    """Batched ψ^clause subset test (paper eq. 8).
+
+    query_bits:  uint32 [B, Wv] packed query term sets
+    clause_bits: uint32 [K, Wv] packed selected clauses
+    returns bool [B]: eligible[b] = ∃k . clause k ⊆ query b
+    """
+    miss = clause_bits[None, :, :] & ~query_bits[:, None, :]     # [B, K, Wv]
+    sub = jnp.all(miss == 0, axis=-1)                            # [B, K]
+    return jnp.any(sub, axis=-1)
+
+
 def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Gather-based marginal gains over padded id lists (production scale).
 

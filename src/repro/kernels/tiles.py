@@ -1,0 +1,21 @@
+"""Leaf module for tiling arithmetic shared by every kernel wrapper.
+
+Lives below both `ops.py` (the dispatch layer) and the kernel modules so
+neither import direction creates a cycle; `ops.block_dim` re-exports it as
+the public name.
+"""
+from __future__ import annotations
+
+WORD = 32
+
+
+def block_dim(n: int, block: int) -> tuple[int, int, int]:
+    """Shared pad-to-block/grid setup for every kernel in this package.
+
+    Clamps the requested block size to the actual extent and returns
+    ``(block, pad, n_blocks)`` so callers pad `n` up to ``n + pad`` (a
+    multiple of ``block``) and launch ``n_blocks`` grid steps along the axis.
+    """
+    b = max(1, min(block, n))
+    pad = -n % b
+    return b, pad, (n + pad) // b

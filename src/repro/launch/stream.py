@@ -45,11 +45,20 @@ def main() -> None:
                 .mine(min_support=args.min_support)
                 .solve(args.solver, budget_frac=args.budget_frac))
 
+    # every knob that shapes the traffic and the solve, in one header line,
+    # so an A/B run is reproducible from the log alone
+    print(f"[stream] scenario={args.scenario} windows={args.windows} "
+          f"qpw={args.queries_per_window} scale={args.scale} "
+          f"seed={args.seed} strength={args.strength} "
+          f"solver={args.solver} budget_frac={args.budget_frac} "
+          f"min_support={args.min_support} warm={not args.cold}")
     t0 = time.time()
     pipe = offline_pipe()
     print(f"[stream] offline solve: {pipe.result.summary()}  "
           f"({time.time() - t0:.1f}s)")
 
+    # the simulator consumes the SAME --seed (window sampling) as the
+    # offline dataset build above, so one flag pins the whole replay
     run_kw = dict(scenario=args.scenario, n_windows=args.windows,
                   queries_per_window=args.queries_per_window, seed=args.seed,
                   strength=args.strength)

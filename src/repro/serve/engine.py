@@ -142,10 +142,11 @@ class TieredEngine:
     @staticmethod
     def _classify(tiering: ClauseTiering,
                   queries: list[tuple[int, ...]]) -> np.ndarray:
-        qbits = np.zeros((len(queries), tiering.vocab_size), bool)
-        for i, q in enumerate(queries):
-            qbits[i, list(q)] = True
-        return tiering.classify_queries(bitset.np_pack(qbits))
+        # batched ψ^clause via the clause-subset-test kernel — one call per
+        # batch (the old per-query host path lives on as the test reference
+        # in ClauseTiering.classify_queries)
+        return matching.classify_batch(
+            tiering.clause_vocab_bits, queries, tiering.vocab_size)
 
     def classify(self, queries: list[tuple[int, ...]]) -> np.ndarray:
         return self._classify(self._live.tiering, queries)

@@ -45,3 +45,27 @@ def pad_token_batch(queries: list[tuple[int, ...]], pad_len: int | None = None) 
     for i, q in enumerate(queries):
         out[i, :len(q)] = list(q)[:l]
     return out
+
+
+def pack_query_bits(queries: list[tuple[int, ...]], vocab_size: int) -> np.ndarray:
+    """Token tuples -> packed vocab bitsets [B, Wv] (ψ^clause operand)."""
+    qbits = np.zeros((len(queries), vocab_size), bool)
+    for i, q in enumerate(queries):
+        qbits[i, list(q)] = True
+    return bitset.np_pack(qbits)
+
+
+def classify_batch(clause_vocab_bits: np.ndarray,
+                   queries: list[tuple[int, ...]], vocab_size: int,
+                   *, backend: str | None = None) -> np.ndarray:
+    """Batched ψ^clause (eq. 8) through the clause-subset-test kernel.
+
+    One kernel call per serving batch; semantically identical to
+    `ClauseTiering.classify_queries` (the per-query host reference).
+    """
+    from repro.kernels import ops
+    if len(queries) == 0 or clause_vocab_bits.shape[0] == 0:
+        return np.zeros(len(queries), bool)
+    qbits = pack_query_bits(queries, vocab_size)
+    return np.asarray(ops.clause_match(
+        jnp.asarray(qbits), jnp.asarray(clause_vocab_bits), backend=backend))

@@ -232,11 +232,19 @@ def run_stream(pipe, *, scenario: str = "rotate", n_windows: int = 8,
                queries_per_window: int = 512, seed: int = 0,
                strength: float = 1.0, warm: bool = True,
                enable_refit: bool = True, verify_swaps: bool = False,
+               engine: TieredEngine | None = None,
                **controller_kw) -> StreamReport:
-    """Replay a drift scenario end to end through a RetieringController."""
+    """Replay a drift scenario end to end through a RetieringController.
+
+    `engine` accepts anything with the TieredEngine serving surface — in
+    particular a `cluster.TieredCluster`, whose `swap_tiering` rolls the
+    re-tiering out replica-by-replica instead of one atomic store (the
+    controller neither knows nor cares; exactness holds either way).
+    """
     sim = TrafficSimulator(pipe.log, scenario, seed=seed, n_windows=n_windows,
                            queries_per_window=queries_per_window,
                            strength=strength)
-    ctrl = RetieringController(pipe, warm=warm, enable_refit=enable_refit,
+    ctrl = RetieringController(pipe, engine=engine, warm=warm,
+                               enable_refit=enable_refit,
                                verify_swaps=verify_swaps, **controller_kw)
     return ctrl.run(sim)

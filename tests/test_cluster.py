@@ -1,0 +1,282 @@
+"""repro.cluster: sharded scatter-gather serving must be EXACT (equal to
+single-tier matching for every query, at every shard/replica count, across
+rolling swaps), the batched clause classifier must equal the per-query ψ,
+and the load generator must be deterministic."""
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import SOLVERS, bitset
+from repro.core.tiering import ClauseTiering
+from repro.serve import matching
+
+from tests.hypothesis_compat import given, settings, st
+
+
+def _pipe_parts(tiny_data, tiny_problem, budget_frac=0.5, solver="optpes"):
+    r = SOLVERS[solver](tiny_problem, int(tiny_data.n_docs * budget_frac))
+    tiering = ClauseTiering.from_selection(tiny_data, r.selected)
+    return tiering
+
+
+def _fleet(tiny_data, tiering, **kw):
+    return cluster.TieredCluster(tiny_data.postings, tiering,
+                                 tiny_data.n_docs, **kw)
+
+
+# -- shard planning -----------------------------------------------------------
+
+@pytest.mark.parametrize("n_docs,n_shards", [(200, 1), (200, 2), (200, 4),
+                                             (33, 4), (31, 3), (1, 2)])
+def test_plan_shards_partitions_word_aligned(n_docs, n_shards):
+    shards = cluster.plan_shards(n_docs, n_shards)
+    words = bitset.n_words(n_docs)
+    assert len(shards) == min(n_shards, words)
+    assert shards[0].word_lo == 0
+    assert shards[-1].word_hi == words
+    for a, b in zip(shards, shards[1:]):
+        assert a.word_hi == b.word_lo          # contiguous, no overlap
+    assert sum(s.n_docs for s in shards) == n_docs
+    for s in shards:
+        assert s.doc_lo == s.word_lo * 32
+        assert s.n_words >= 1
+
+
+def test_shard_postings_slices_recompose(tiny_data):
+    shards, slices = cluster.shard_postings(tiny_data.postings,
+                                            tiny_data.n_docs, 4)
+    np.testing.assert_array_equal(np.concatenate(slices, axis=1),
+                                  tiny_data.postings)
+
+
+def test_shard_tier_postings_mask_matches_global(tiny_data, tiny_problem):
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    shards, slices = cluster.shard_postings(tiny_data.postings,
+                                            tiny_data.n_docs, 4)
+    global_t1 = matching.tier_postings(tiny_data.postings, tiering.tier1_docs)
+    parts = [cluster.shard_tier_postings(slices[s.index], s,
+                                         tiering.tier1_docs)[0]
+             for s in shards]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1), global_t1)
+
+
+# -- batched ψ^clause == per-query ψ^clause -----------------------------------
+
+def test_engine_batch_classifier_equals_per_query_psi(tiny_data, tiny_problem):
+    """The kernel-backed serving classifier must agree with the host
+    per-query ψ^clause reference on the full query log."""
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    want = tiering.classify_queries(tiny_data.log.query_bits)
+    got = matching.classify_batch(tiering.clause_vocab_bits,
+                                  tiny_data.log.queries,
+                                  tiering.vocab_size)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), vocab=st.integers(1, 150),
+       n_queries=st.integers(1, 80), n_clauses=st.integers(0, 40))
+def test_batched_classifier_property(seed, vocab, n_queries, n_clauses):
+    """Random logs: batched kernel classification == per-query subset test."""
+    rng = np.random.default_rng(seed)
+    qbits = rng.random((n_queries, vocab)) < 0.25
+    cbits = rng.random((n_clauses, vocab)) < 0.08
+    queries = [tuple(np.nonzero(row)[0]) for row in qbits]
+    clauses = [tuple(np.nonzero(row)[0]) for row in cbits]
+    tiering = ClauseTiering(clauses=clauses,
+                            clause_vocab_bits=bitset.np_pack(cbits),
+                            tier1_docs=np.zeros(1, bool), vocab_size=vocab)
+    want = tiering.classify_queries(bitset.np_pack(qbits))
+    got = matching.classify_batch(tiering.clause_vocab_bits, queries, vocab)
+    np.testing.assert_array_equal(got, want)
+    # brute force, independent of both implementations
+    brute = np.array([any(set(c) <= set(q) for c in clauses) if clauses
+                      else False for q in queries])
+    np.testing.assert_array_equal(got, brute)
+
+
+# -- exhaustive cluster-vs-oracle exactness -----------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("replicas", [1, 2, 4])
+def test_cluster_equals_single_tier_for_every_query(tiny_data, tiny_problem,
+                                                    n_shards, replicas):
+    """OR-merged sharded scatter-gather == single-tier matching, for EVERY
+    query in the log, at every shard/replica count."""
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    fleet = _fleet(tiny_data, tiering, n_shards=n_shards,
+                   t1_replicas=replicas, t2_replicas=replicas)
+    queries = tiny_data.log.queries
+    got = []
+    for s in range(0, len(queries), 128):
+        got.extend(fleet.serve(queries[s:s + 128]))
+    want = fleet.serve_reference(queries)
+    for q, a, b in zip(queries, got, want):
+        np.testing.assert_array_equal(a, b, err_msg=str(q))
+    assert fleet.consistency_ok()
+    s = fleet.stats
+    assert s.n_queries == len(queries)
+    if n_shards > 1:
+        # both tiers scanned; tier-2 traffic == untiered traffic per query
+        assert 0 < s.n_tier1 < s.n_queries
+        assert s.cost_saving > 0.0
+
+
+def test_cluster_stats_match_single_engine(tiny_data, tiny_problem):
+    """A 1-shard 1-replica cluster is cost-accounting-identical to the
+    single TieredEngine on the same traffic."""
+    from repro.serve.engine import TieredEngine
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    engine = TieredEngine(tiny_data.postings, tiering, tiny_data.n_docs)
+    fleet = _fleet(tiny_data, tiering, n_shards=1, t1_replicas=1)
+    queries = tiny_data.log.queries[:256]
+    engine.serve(queries)
+    fleet.serve(queries)
+    assert fleet.stats.n_tier1 == engine.stats.n_tier1
+    assert fleet.stats.tier1_words == engine.stats.tier1_words
+    assert fleet.stats.tier2_words == engine.stats.tier2_words
+    assert fleet.stats.full_words_per_query == \
+        engine.stats.full_words_per_query
+
+
+# -- rolling swaps ------------------------------------------------------------
+
+def test_rolling_swap_exact_and_unmixed_mid_run(tiny_data, tiny_problem):
+    """Serving stays oracle-equal on every batch across a rolling swap, the
+    fleet is genuinely mixed-generation mid-roll, and no batch ever pairs a
+    ψ with a different Tier-1 generation."""
+    t_old = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.5)
+    t_new = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.25)
+    fleet = _fleet(tiny_data, t_old, n_shards=2, t1_replicas=2)
+    queries = tiny_data.log.queries
+
+    def assert_batch(lo, hi):
+        batch = queries[lo:hi]
+        got = fleet.serve(batch)
+        want = fleet.serve_reference(batch)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+
+    assert_batch(0, 64)
+    gen = fleet.swap_tiering(t_new)
+    assert gen == 1
+    saw_mixed_fleet = False
+    batches = 0
+    while fleet.router.rollout is not None and batches < 64:
+        assert_batch(64 * (batches % 5), 64 * (batches % 5) + 64)
+        saw_mixed_fleet |= len(fleet.router.live_generations()) > 1
+        batches += 1
+    assert fleet.router.rollout is None, "rollout never completed"
+    assert saw_mixed_fleet, "swap was not rolling (no mixed-generation fleet)"
+    assert fleet.router.live_generations() == {1}
+    assert_batch(0, 64)
+    assert fleet.consistency_ok()
+    # ψ generation always matched every Tier-1 server's generation
+    for t in fleet.trace:
+        assert all(g == t.psi_generation for g in t.t1_generations)
+
+
+def test_single_replica_rollout_falls_back_to_tier2(tiny_data, tiny_problem):
+    """With 1 replica per shard there is a mid-roll gap with no complete
+    Tier-1 generation: eligible traffic must be served (exactly) by Tier 2,
+    never by a mixed pair."""
+    t_old = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.5)
+    t_new = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.25)
+    fleet = _fleet(tiny_data, t_old, n_shards=2, t1_replicas=1)
+    queries = tiny_data.log.queries
+    fleet.serve(queries[:64])
+    fleet.swap_tiering(t_new)
+    fallback_batches = 0
+    batches = 0
+    while fleet.router.rollout is not None and batches < 64:
+        got = fleet.serve(queries[:64])
+        want = fleet.serve_reference(queries[:64])
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+        fallback_batches += fleet.trace[-1].psi_generation == -1
+        batches += 1
+    assert fallback_batches > 0, "expected a Tier-2 fallback window"
+    assert fleet.consistency_ok()
+    # after the roll, Tier-1 serving resumes on the new generation
+    fleet.serve(queries[:64])
+    assert fleet.trace[-1].psi_generation == 1
+    assert fleet.trace[-1].n_tier1 > 0
+
+
+def test_controller_drives_cluster_with_rolling_swaps(tiny_data):
+    """stream.RetieringController re-tiers a whole cluster through the
+    engine-compatible surface; parity holds after every swap."""
+    from repro import api, stream
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2)
+    report = stream.run_stream(pipe, scenario="rotate", n_windows=5,
+                               queries_per_window=128, seed=0,
+                               engine=fleet, verify_swaps=True)
+    assert report.n_refits > 0, "scenario should trigger at least one refit"
+    assert report.n_parity_checks > 0 and report.parity_all_ok()
+    assert fleet.consistency_ok()
+    assert fleet.generation == report.windows[-1].generation
+
+
+# -- load generator -----------------------------------------------------------
+
+def test_loadgen_deterministic_and_sane(tiny_data, tiny_problem):
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    fleet = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=2)
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    elig = fleet.classify(tiny_data.log.queries[:256])
+    a = cluster.run_loadgen(plan, elig, n_queries=1500, seed=7)
+    b = cluster.run_loadgen(plan, elig, n_queries=1500, seed=7)
+    assert a == b                                  # bit-identical rerun
+    assert a.p50_ms <= a.p95_ms <= a.p99_ms <= a.max_ms
+    assert a.throughput_qps > 0 and a.fleet_words > 0
+    assert 0.0 < a.tier1_fraction < 1.0
+    c = cluster.run_loadgen(plan, elig, n_queries=1500, seed=8)
+    assert c != a                                  # seed actually threads
+
+
+def test_loadgen_strong_scaling_per_shard_words(tiny_data, tiny_problem):
+    """Per-shard Tier-2 words-scanned decreases with shard count."""
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    elig = None
+    per_shard = []
+    for n_shards in (1, 2, 4):
+        fleet = _fleet(tiny_data, tiering, n_shards=n_shards, t1_replicas=1)
+        if elig is None:
+            elig = fleet.classify(tiny_data.log.queries[:256])
+        plan = cluster.ClusterPlan.of_cluster(fleet)
+        rep = cluster.run_loadgen(plan, elig, n_queries=1000, seed=0)
+        per_shard.append(max(rep.per_shard_t2_words))
+    assert per_shard[0] > per_shard[1] > per_shard[2]
+
+
+def test_loadgen_rollout_outage_falls_back(tiny_data, tiny_problem):
+    """A simulated rolling swap on a 1-replica fleet pushes eligible traffic
+    to Tier 2 during the outage windows."""
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    fleet = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=1)
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    elig = np.ones(64, bool)                       # all-eligible traffic
+    quiet = cluster.run_loadgen(plan, elig, n_queries=2000, seed=0,
+                                rate_qps=50000.0)
+    rolled = cluster.run_loadgen(plan, elig, n_queries=2000, seed=0,
+                                 rate_qps=50000.0, rollout_at_s=0.01,
+                                 swap_ms=5.0)
+    assert quiet.t2_fallback_queries == 0
+    assert rolled.t2_fallback_queries > 0
+    assert rolled.fleet_words > quiet.fleet_words  # fallback scans more
+
+
+# -- facade -------------------------------------------------------------------
+
+def test_deploy_cluster_facade(tiny_data):
+    from repro import api
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5)
+    fleet = pipe.deploy_cluster(n_shards=4, t1_replicas=2, t2_replicas=2)
+    assert len(fleet.shards) == 4
+    got = fleet.serve(tiny_data.log.queries[:32])
+    want = fleet.serve_reference(tiny_data.log.queries[:32])
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)

@@ -10,6 +10,7 @@ import pytest
 from repro.core import bitset
 from repro.kernels import ops, ref
 from repro.kernels.bit_matvec import bit_matvec
+from repro.kernels.clause_match import clause_match
 from repro.kernels.coverage_gain import coverage_gain
 from repro.kernels.sparse_gain import sparse_gain
 
@@ -73,6 +74,46 @@ def test_sparse_gain_agrees_with_dense_path():
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sparse))
 
 
+@pytest.mark.parametrize("b,k,wv", [(1, 1, 1), (7, 3, 2), (65, 17, 3),
+                                    (130, 70, 5), (16, 1, 9)])
+def test_clause_match_interpret_vs_ref(b, k, wv):
+    rng = np.random.default_rng(b * 31 + k * 7 + wv)
+    # sparse clauses so subset hits actually occur
+    q = jnp.asarray(_rand_bits(rng, b, wv))
+    c = jnp.asarray(bitset.np_pack(rng.random((k, wv * 32)) < 0.05))
+    got = clause_match(q, c, block_b=16, block_k=8, interpret=True)
+    want = ref.clause_match(q, c)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_clause_match_padded_clause_rows_never_match():
+    """Zero-padded clause rows are the empty clause (⊆ everything); the
+    kernel must mask them or every query would classify eligible."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(_rand_bits(rng, 20, 2))
+    # one impossible clause: block_k=8 forces 7 padded rows in its block
+    c = jnp.asarray(bitset.np_pack(np.ones((1, 64), bool)))
+    got = clause_match(q, c, block_b=8, block_k=8, interpret=True)
+    assert not np.asarray(got).any()
+
+
+def test_clause_match_empty_inputs_dispatch():
+    q = jnp.zeros((5, 2), jnp.uint32)
+    c = jnp.zeros((0, 2), jnp.uint32)
+    assert not np.asarray(ops.clause_match(q, c)).any()
+    assert ops.clause_match(jnp.zeros((0, 2), jnp.uint32),
+                            jnp.ones((3, 2), jnp.uint32)).shape == (0,)
+
+
+def test_block_dim_helper():
+    """Shared pad-to-block/grid arithmetic used by every kernel wrapper."""
+    assert ops.block_dim(300, 128) == (128, 84, 3)
+    assert ops.block_dim(5, 128) == (5, 0, 1)       # clamped to extent
+    assert ops.block_dim(128, 128) == (128, 0, 1)
+    b, pad, n = ops.block_dim(17, 8)
+    assert (17 + pad) % b == 0 and n * b == 17 + pad
+
+
 def test_ops_dispatch_consistency():
     """xla / interpret backends agree through the ops layer."""
     rng = np.random.default_rng(1)
@@ -85,6 +126,12 @@ def test_ops_dispatch_consistency():
     np.testing.assert_array_equal(
         ops.coverage_gain(a, mask, backend="xla"),
         ops.coverage_gain(a, mask, backend="interpret"))
+    q = jnp.asarray(_rand_bits(rng, 40, 9))
+    c = jnp.asarray(bitset.np_pack(np.random.default_rng(2)
+                                   .random((13, 9 * 32)) < 0.05))
+    np.testing.assert_array_equal(
+        ops.clause_match(q, c, backend="xla"),
+        ops.clause_match(q, c, backend="interpret"))
 
 
 def test_bit_matvec_weighted_gain_semantics():
