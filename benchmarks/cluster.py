@@ -1,22 +1,36 @@
 """Cluster serving section: strong scaling over shard count, the
-latency-vs-budget frontier, and a retiered-vs-static A/B under drift.
+latency-vs-budget frontier (global AND traffic-split budgets), a
+retiered-vs-static A/B under drift, a global-vs-split budget A/B, and the
+loadgen service-model calibration.
 
-Three question families (seeded, tiny scale by default so the section stays
+Question families (seeded, tiny scale by default so the section stays
 CI-sized; REPRO_BENCH_CLUSTER_SCALE overrides):
 
   * strong scaling: with the doc space split over {1,2,4} Tier-2 shards,
     does per-shard words-scanned (the per-machine roofline term) drop with
     shard count, and what do simulated p50/p95/p99 and throughput do?
   * frontier: sweeping the Tier-1 budget trades fleet word traffic against
-    simulated tail latency — the paper's cost argument as a curve.
+    simulated tail latency — the paper's cost argument as a curve — at the
+    SAME totals once with a global knapsack and once with per-shard
+    traffic-split caps (the Fig.-1 machines-vs-coverage economics, measured:
+    fleet_words is the machines proxy, coverage the served fraction).
   * drift A/B: on identical windows, a re-tiering cluster (rolling swaps)
     vs the same fleet frozen — coverage, traffic saving, and loadgen
     latency on each arm's final tiering.
+  * budget-split A/B: on identical drift windows at EQUAL total budget, a
+    globally-budgeted fleet vs per-shard traffic-split caps (hot shards get
+    bigger local Tier-1s; refits re-allocate the split).
+  * calibration: fit `t_fixed + words * t_word` against measured
+    `match_batch` wall times across sub-index widths at tiny/small scale;
+    the coefficients + R² land in BENCH_cluster.json so `run_loadgen` can
+    be driven with measured, not assumed, service times.
 """
 from __future__ import annotations
 
 import os
 import time
+
+import numpy as np
 
 from benchmarks.common import emit
 
@@ -24,6 +38,8 @@ CLUSTER_SCALE = os.environ.get("REPRO_BENCH_CLUSTER_SCALE", "tiny")
 SHARD_SWEEP = (1, 2, 4)
 AB_SCENARIOS = ("rotate", "churn")
 N_WINDOWS = int(os.environ.get("REPRO_BENCH_CLUSTER_WINDOWS", "8"))
+CALIBRATION_SCALES = tuple(os.environ.get(
+    "REPRO_BENCH_CALIBRATION_SCALES", "tiny,small").split(","))
 
 
 def _fresh_pipe(data):
@@ -72,20 +88,32 @@ def run() -> dict:
              f"qps={rep.throughput_qps:.0f};fleet_words={rep.fleet_words}")
     results["strong_scaling"] = scaling
 
-    # -- latency-vs-budget frontier -------------------------------------------
+    # -- latency-vs-budget frontier: global vs traffic-split caps -------------
     frontier = {}
     for frac in (0.25, 0.5, 0.75):
         from repro import api
-        fp = api.TieringPipeline.from_data(data).solve("greedy",
-                                                       budget_frac=frac)
-        fleet = fp.deploy_cluster(n_shards=2, t1_replicas=2)
-        rep = _loadgen(fleet, sample)
-        frontier[frac] = {"p95_ms": rep.p95_ms,
+        point = {}
+        for arm in ("global", "split"):
+            fp = api.TieringPipeline.from_data(data)
+            if arm == "split":
+                fp.solve("greedy", budget_frac=frac,
+                         budget_split="traffic", n_shards=2)
+            else:
+                fp.solve("greedy", budget_frac=frac)
+            fleet = fp.deploy_cluster(n_shards=2, t1_replicas=2)
+            rep = _loadgen(fleet, sample)
+            cov = fp.coverage()
+            point[arm] = {"p95_ms": rep.p95_ms,
                           "fleet_words": rep.fleet_words,
-                          "tier1_fraction": rep.tier1_fraction}
-        emit(f"cluster_budget{int(100 * frac)}", 0.0,
-             f"p95={rep.p95_ms:.4f};fleet_words={rep.fleet_words};"
-             f"t1_frac={rep.tier1_fraction:.4f}")
+                          "tier1_fraction": rep.tier1_fraction,
+                          "test_coverage": cov["test"],
+                          "caps": list(fp.result.extra["caps"])
+                          if arm == "split" else None}
+            emit(f"cluster_budget{int(100 * frac)}_{arm}", 0.0,
+                 f"p95={rep.p95_ms:.4f};fleet_words={rep.fleet_words};"
+                 f"t1_frac={rep.tier1_fraction:.4f};"
+                 f"cov={cov['test']:.4f}")
+        frontier[frac] = point
     results["frontier"] = frontier
 
     # -- retiered vs static A/B under drift -----------------------------------
@@ -124,7 +152,94 @@ def run() -> dict:
              f"p95={lat_r.p95_ms:.4f};refits={retiered.n_refits};"
              f"consistent={retiered_fleet.consistency_ok()}")
     results["ab"] = ab
+
+    # -- global vs traffic-split budgets under drift (equal total budget) -----
+    from repro import api
+    split_ab = {}
+    for scenario in AB_SCENARIOS:
+        kw = dict(scenario=scenario, n_windows=N_WINDOWS,
+                  queries_per_window=256, seed=0)
+        arms = {}
+        for arm in ("global", "traffic"):
+            p = api.TieringPipeline.from_data(data)
+            if arm == "traffic":
+                p.solve("greedy", budget_frac=0.5, budget_split="traffic",
+                        n_shards=2)
+            else:
+                p.solve("greedy", budget_frac=0.5)
+            fleet = p.deploy_cluster(n_shards=2, t1_replicas=2)
+            rep = stream.run_stream(p, engine=fleet, **kw)
+            fleet.drain_rollout()
+            lat = _loadgen(fleet, sample)
+            caps = p.result.extra.get("caps")
+            arms[arm] = {
+                "cov": rep.mean_coverage,
+                "saving": rep.cumulative.cost_saving,
+                "p95_ms": lat.p95_ms,
+                "fleet_words": lat.fleet_words,
+                "refits": rep.n_refits,
+                "pair_consistent": fleet.consistency_ok(),
+                "caps": None if caps is None else list(caps),
+            }
+            emit(f"cluster_split_{scenario}_{arm}", 0.0,
+                 f"cov={rep.mean_coverage:.4f};"
+                 f"saving={rep.cumulative.cost_saving:.4f};"
+                 f"p95={lat.p95_ms:.4f};fleet_words={lat.fleet_words};"
+                 f"refits={rep.n_refits}")
+        split_ab[scenario] = arms
+    results["budget_split_ab"] = split_ab
+
+    # -- loadgen service-model calibration ------------------------------------
+    results["calibration"] = calibrate()
     return results
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args).block_until_ready()
+    return time.perf_counter() - t0
+
+
+def calibrate(scales: tuple[str, ...] = CALIBRATION_SCALES) -> dict:
+    """Fit the loadgen service model against MEASURED `match_batch` walls.
+
+    Sub-index width is the model's `words` variable, so slicing the packed
+    postings to several widths (and spanning dataset scales) sweeps it;
+    wall time per query at each width is one warm-started jitted call.
+    """
+    import jax.numpy as jnp
+
+    from repro import cluster as cluster_pkg
+    from repro.data import incidence, synthetic
+    from repro.serve import matching
+
+    words_l, us_l = [], []
+    for scale in scales:
+        corpus, log = synthetic.make_tiering_dataset(0, scale)
+        postings = incidence.build_postings(corpus)
+        toks = jnp.asarray(matching.pad_token_batch(
+            log.queries[:min(512, log.n_queries)]))
+        full_w = postings.shape[1]
+        for frac in (0.125, 0.25, 0.5, 0.75, 1.0):
+            w = max(1, int(full_w * frac))
+            sub = jnp.asarray(postings[:, :w])
+            matching.match_batch(sub, toks).block_until_ready()   # compile
+            # min-of-reps: scheduling noise only ever ADDS time, so the
+            # minimum is the cleanest estimate of the true service time
+            dt = min(_timed(matching.match_batch, sub, toks)
+                     for _ in range(10))
+            words_l.append(w)
+            us_l.append(1e6 * dt / int(toks.shape[0]))
+    fit = cluster_pkg.fit_service_model(np.asarray(words_l),
+                                        np.asarray(us_l))
+    fit["scales"] = list(scales)
+    fit["points"] = [{"words": int(w), "us_per_query": round(u, 3)}
+                     for w, u in zip(words_l, us_l)]
+    emit("cluster_calibration", fit["t_word_us"],
+         f"t_fixed_us={fit['t_fixed_us']:.3f};"
+         f"t_word_us={fit['t_word_us']:.4f};r2={fit['r2']:.4f};"
+         f"points={fit['n_points']}")
+    return fit
 
 
 if __name__ == "__main__":

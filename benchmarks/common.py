@@ -17,6 +17,8 @@ BENCH_SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
 ROWS: list[dict] = []
 _SECTION = "misc"
 _SECTION_SCALE: dict[str, str] = {}
+_SECTION_T0: dict[str, float] = {}
+_SECTION_SECONDS: dict[str, float] = {}
 
 
 @functools.lru_cache(maxsize=2)
@@ -36,10 +38,21 @@ def bench_problem(scale: str = BENCH_SCALE):
 
 def begin_section(name: str, scale: str = BENCH_SCALE) -> None:
     """Route subsequent `emit` rows to BENCH_<name>.json. Pass `scale` when
-    a section measures at a different dataset scale than BENCH_SCALE."""
+    a section measures at a different dataset scale than BENCH_SCALE.
+    Section wall-clock runs from here until the next section begins (or
+    `write_json` runs) and lands in the artifact as "seconds"."""
     global _SECTION
+    _close_section()
     _SECTION = name
     _SECTION_SCALE[name] = scale
+    _SECTION_T0[name] = time.time()
+
+
+def _close_section() -> None:
+    t0 = _SECTION_T0.pop(_SECTION, None)
+    if t0 is not None:
+        _SECTION_SECONDS[_SECTION] = \
+            _SECTION_SECONDS.get(_SECTION, 0.0) + (time.time() - t0)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -49,7 +62,10 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def write_json(out_dir: str = "artifacts/bench") -> list[str]:
-    """One BENCH_<section>.json per section seen so far; returns the paths."""
+    """One BENCH_<section>.json per section seen so far; returns the paths.
+    Each artifact records the section's wall-clock "seconds", so BENCH
+    trajectories capture runtime, not just us_per_call lines."""
+    _close_section()
     os.makedirs(out_dir, exist_ok=True)
     sections: dict[str, list[dict]] = {}
     for row in ROWS:
@@ -61,6 +77,7 @@ def write_json(out_dir: str = "artifacts/bench") -> list[str]:
         with open(path, "w") as f:
             json.dump({"section": section, "generated": time.time(),
                        "scale": _SECTION_SCALE.get(section, BENCH_SCALE),
+                       "seconds": round(_SECTION_SECONDS.get(section, 0.0), 3),
                        "rows": rows}, f, indent=1)
         paths.append(path)
     return paths

@@ -1,8 +1,9 @@
 """Benchmark entrypoint: one section per paper table/figure + kernel micro
 + streaming re-tiering + cluster serving + roofline summary. Prints
 ``name,us_per_call,derived`` CSV lines and writes machine-readable
-``artifacts/bench/BENCH_<section>.json`` artifacts (one per section) so the
-perf trajectory is recorded across PRs.
+``artifacts/bench/BENCH_<section>.json`` artifacts (one per section, each
+stamped with the section's wall-clock ``seconds``) so the perf trajectory —
+rows AND runtime — is recorded across PRs.
 
 ``--sections cluster,kernels`` runs a subset; ``--scale small`` overrides the
 shared dataset scale. With no arguments the behavior (all sections, default

@@ -20,6 +20,13 @@ One import gives the whole redesigned API:
                          `refit(weights, state=...)` for warm-started
                          re-solves against drifted traffic (the
                          `repro.stream` online re-tiering loop rides it).
+  * `GlobalBudget` / `PartitionedBudget`
+                       — the knapsack side as a pluggable constraint:
+                         one machine's budget, or per-shard caps B_k over
+                         word-aligned doc partitions. `budget_split=
+                         "traffic"` (solve/refit/sweep) sizes the caps from
+                         traffic shares via `shard_traffic_shares` +
+                         `partition_budgets`.
 
 Quickstart:
 
@@ -32,6 +39,9 @@ Quickstart:
     engine = pipe.deploy()                # serve.TieredEngine
 """
 from repro.core.config import SolveConfig                      # noqa: F401
+from repro.core.constraint import (                            # noqa: F401
+    GlobalBudget, KnapsackConstraint, PartitionedBudget, partition_bounds,
+    partition_capacities, trim_state)
 from repro.core.problem import SCSKProblem, SolverResult       # noqa: F401
 from repro.core.registry import (                              # noqa: F401
     SolverSpec, get_solver, list_solvers, register_solver, solve, solve_sweep)
@@ -41,10 +51,15 @@ from repro.core.trace import Trace                             # noqa: F401
 # importing these populates the registry
 import repro.core  # noqa: F401,E402  (SCSK solvers self-register)
 from repro.api import flow_adapter  # noqa: F401,E402  (flow baselines)
+from repro.api.partition import (  # noqa: F401,E402
+    partition_budgets, shard_traffic_shares)
 from repro.api.pipeline import TieringPipeline  # noqa: F401,E402
 
 __all__ = [
-    "SCSKProblem", "SolveConfig", "SolverResult", "SolverSpec", "SolverState",
+    "GlobalBudget", "KnapsackConstraint", "PartitionedBudget", "SCSKProblem",
+    "SolveConfig", "SolverResult", "SolverSpec", "SolverState",
     "TieringPipeline", "Trace", "get_solver", "list_solvers",
-    "register_solver", "solve", "solve_sweep",
+    "partition_bounds", "partition_budgets", "partition_capacities",
+    "register_solver", "shard_traffic_shares", "solve", "solve_sweep",
+    "trim_state",
 ]

@@ -23,8 +23,13 @@ results so budget sweeps ride the same facade (`.sweep(budgets)`).
 """
 from __future__ import annotations
 
+from typing import Mapping
+
+import numpy as np
+
 from repro.core import registry
 from repro.core.config import SolveConfig
+from repro.core.constraint import PartitionedBudget, partition_bounds
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.state import SolverState
 from repro.core.tiering import ClauseTiering
@@ -32,6 +37,8 @@ from repro.core.tiering import ClauseTiering
 # SolveConfig fields settable via TieringPipeline.solve(**options)
 _CONFIG_KEYS = ("max_steps", "record_every", "time_limit", "seed",
                 "stop_policy", "on_step", "on_record")
+
+_UNSET = object()   # "argument not passed" sentinel (None is meaningful)
 
 
 class TieringPipeline:
@@ -75,27 +82,105 @@ class TieringPipeline:
         self._tiering = None
         return self
 
+    # -- shard-aware budgets --------------------------------------------------
+    def partition_constraint(self, total: float, budget_split,
+                             n_shards: int | None = None,
+                             weights: np.ndarray | None = None,
+                             ) -> PartitionedBudget:
+        """Resolve a `budget_split` spec into a `PartitionedBudget`.
+
+        `budget_split="traffic"` sizes each shard's cap from its share of
+        the weighted match-set mass (`api.partition.shard_traffic_shares` of
+        `weights`, default: the problem's current solve weights) via the
+        `partition_budgets` allocator; a mapping/sequence is taken as the
+        caps directly. Partitions are the word-aligned
+        `core.constraint.partition_bounds` split — the SAME split
+        `cluster.plan_shards` serves, so solver budgets and fleet shards
+        line up by construction.
+        """
+        from repro.api.partition import partition_budgets, \
+            shard_traffic_shares
+        from repro.core.constraint import partition_capacities
+        n_docs = self.corpus.n_docs
+        if not isinstance(budget_split, str):
+            split = dict(budget_split) if isinstance(budget_split, Mapping) \
+                else list(budget_split)
+            if n_shards is not None and len(split) != n_shards:
+                raise ValueError(f"budget_split has {len(split)} caps but "
+                                 f"n_shards={n_shards}")
+            constraint = PartitionedBudget.from_split(n_docs, split)
+            # explicit caps ARE the budget; a conflicting explicit total is
+            # a mistake, not something to silently ignore
+            if total is not None and abs(constraint.total - float(total)) \
+                    > 1e-6:
+                raise ValueError(
+                    f"budget_split caps sum to {constraint.total:.0f} but "
+                    f"budget={float(total):.0f}; pass one or the other")
+            return constraint
+        if self.data is None:
+            raise RuntimeError("budget_split='traffic' needs mined data")
+        if total is None:
+            raise ValueError("budget_split='traffic' needs a total budget")
+        bounds = partition_bounds(n_docs, n_shards or 2)
+        if weights is None:
+            weights = np.asarray(self.problem.query_weights,
+                                 np.float64)[:self.log.n_queries]
+        shares = shard_traffic_shares(self.data.query_doc_bits, weights,
+                                      bounds)
+        caps = partition_budgets(partition_capacities(n_docs, bounds),
+                                 shares, total)
+        return PartitionedBudget.from_split(n_docs, caps)
+
+    @property
+    def n_partitions(self) -> int | None:
+        """Partition count of the current solve's constraint (None=global)."""
+        if self.config is None or not self.config.partitioned:
+            return None
+        if self.config.constraint is not None:
+            return self.config.constraint.n_parts
+        split = self.config.budget_split
+        return None if isinstance(split, str) else len(split)
+
     def solve(self, solver: str = "optpes", budget: float | None = None, *,
               budget_frac: float = 0.5, state: SolverState | None = None,
-              config: SolveConfig | None = None, **options) -> "TieringPipeline":
+              config: SolveConfig | None = None, budget_split=None,
+              n_shards: int | None = None, **options) -> "TieringPipeline":
         """SCSK solve via the registry. `**options` splits into SolveConfig
         fields (max_steps, time_limit, ...) and solver-specific options.
         An explicit `config=` carries everything itself (its `solver` wins)
-        and cannot be combined with budget/options arguments."""
+        and cannot be combined with budget/options arguments.
+
+        `budget_split` makes the knapsack shard-aware: a {shard: cap}
+        mapping / cap sequence (the caps define the total; an explicit
+        `budget=` must agree or this raises), or "traffic" to size
+        `n_shards` caps from each shard's share of the weighted match
+        traffic, splitting the `budget`/`budget_frac` total."""
         if self.data is None:
             raise RuntimeError("call mine() (or from_data) before solve()")
-        if config is not None and (budget is not None or options):
+        if config is not None and (budget is not None or options or
+                                   budget_split is not None):
             raise ValueError(
-                "pass either config= or budget/budget_frac/**options — an "
-                "explicit SolveConfig already carries those")
+                "pass either config= or budget/budget_frac/budget_split/"
+                "**options — an explicit SolveConfig already carries those")
         if config is None:
             # int truncation matches the pre-facade entrypoints
             # (budget = int(n_docs * frac)); an explicit budget is kept as-is
+            explicit = None if budget is None else float(budget)
             budget = float(int(self.corpus.n_docs * budget_frac)
                            if budget is None else budget)
             cfg_kw = {k: options.pop(k) for k in _CONFIG_KEYS if k in options}
-            config = SolveConfig(budget=budget, solver=solver,
-                                 options=options, **cfg_kw)
+            if budget_split is not None:
+                # explicit cap splits define their own total (validated
+                # against an explicit budget=); "traffic" splits the
+                # budget/budget_frac total by observed shares
+                constraint = self.partition_constraint(
+                    budget if isinstance(budget_split, str) else explicit,
+                    budget_split, n_shards)
+                cfg_kw.update(budget=constraint.total, constraint=constraint,
+                              budget_split=budget_split)
+            else:
+                cfg_kw["budget"] = budget
+            config = SolveConfig(solver=solver, options=options, **cfg_kw)
         spec = registry.get_solver(config.solver)
         target = self.data if spec.needs_data else self.problem
         self.config = config
@@ -103,13 +188,28 @@ class TieringPipeline:
         self._tiering = None
         return self
 
-    def sweep(self, budgets: list[float], solver: str = "greedy",
+    def sweep(self, budgets: list[float], solver: str = "greedy", *,
+              budget_split=None, n_shards: int | None = None,
               **options) -> list[SolverResult]:
         """Warm-started budget sweep (Fig. 2/3); leaves the largest-budget
-        result as the pipeline's current result."""
+        result as the pipeline's current result.
+
+        With `budget_split`, each total budget keeps the SAME split shares
+        (the largest-budget constraint rescaled per point) — the truncate
+        ranking ignores caps, so the warm path still equals cold solves.
+        Note truncate's usual under-fill applies (globally too): each point
+        stops at the first argmax overflowing any cap, so an exhaust-policy
+        `solve()` at the same caps may pack more."""
         if self.problem is None:
             raise RuntimeError("call mine() (or from_data) before sweep()")
         cfg_kw = {k: options.pop(k) for k in _CONFIG_KEYS if k in options}
+        if budget_split is not None:
+            constraint = self.partition_constraint(
+                float(budgets[-1]) if isinstance(budget_split, str)
+                else None, budget_split, n_shards)
+            # explicit caps act as SHARES over a sweep: rescaled per point
+            constraint = constraint.scaled(float(budgets[-1]))
+            cfg_kw.update(constraint=constraint, budget_split=budget_split)
         config = SolveConfig(budget=float(budgets[-1]), solver=solver,
                              options=options, **cfg_kw)
         results = registry.solve_sweep(self.problem, budgets, config)
@@ -120,7 +220,8 @@ class TieringPipeline:
 
     def refit(self, weights, *, state: SolverState | None = None,
               budget: float | None = None, budget_frac: float | None = None,
-              solver: str | None = None, **options) -> "TieringPipeline":
+              solver: str | None = None, budget_split=_UNSET,
+              n_shards: int | None = None, **options) -> "TieringPipeline":
         """Re-solve against a NEW empirical query distribution (re-tiering).
 
         `weights` is the updated distribution over the pipeline's unique-query
@@ -134,6 +235,11 @@ class TieringPipeline:
         `repro.stream.prune_state`); omit it for a cold re-solve. The mined
         clause universe is fixed at `mine()` time, so the resulting tiering
         stays Theorem-3.1-exact regardless of the weights.
+
+        `budget_split` defaults to the previous solve's: a "traffic" split
+        RE-ALLOCATES the per-shard caps from the NEW `weights` (hot shards
+        grow, cold shards shrink, total unchanged) on every refit. Pass
+        `budget_split=None` explicitly to drop back to a global budget.
         """
         if self.problem is None:
             raise RuntimeError("call mine() (or from_data) before refit()")
@@ -151,6 +257,24 @@ class TieringPipeline:
         cfg_kw = {k: options.pop(k) for k in _CONFIG_KEYS if k in options}
         if options:
             kw["options"] = {**dict(base.options), **options}
+        split = base.budget_split if budget_split is _UNSET else budget_split
+        if split is not None:
+            parts = n_shards or self.n_partitions
+            constraint = self.partition_constraint(
+                kw.get("budget", base.budget) if isinstance(split, str)
+                else kw.get("budget"),
+                split, parts,
+                weights=np.asarray(weights, np.float64)[:self.log.n_queries]
+                if isinstance(split, str) else None)
+            kw.update(budget=constraint.total, budget_split=split,
+                      constraint=constraint)
+        elif budget_split is not _UNSET:
+            kw.update(budget_split=None, constraint=None)  # explicit opt-out
+        elif base.constraint is not None:
+            # an explicit constraint object (no budget_split spec) carries
+            # through refits, rescaled to any new total
+            if "budget" in kw and hasattr(base.constraint, "scaled"):
+                kw["constraint"] = base.constraint.scaled(kw["budget"])
         config = base.replace(**kw, **cfg_kw)
         spec = registry.get_solver(config.solver)
         if spec.needs_data:
@@ -163,6 +287,13 @@ class TieringPipeline:
                 f"solver {config.solver!r} does not support warm starts; "
                 "pass state=None for a cold refit")
         self.problem = self.problem.with_weights(weights)
+        if state is not None and config.partitioned:
+            # re-allocation can shrink a cap below the warm prefix's frozen
+            # fill; solvers only mask NEW candidates, so shed the overflow
+            # (drop clauses touching over-cap shards) before resuming
+            from repro.core.constraint import resolve_constraint, trim_state
+            state, _ = trim_state(self.problem, state,
+                                  resolve_constraint(self.problem, config))
         self.config = config
         self.result = registry.solve(self.problem, config, state=state)
         self._tiering = None
@@ -198,11 +329,18 @@ class TieringPipeline:
         return TieredEngine(self.data.postings, self.tiering(),
                             self.data.n_docs)
 
-    def deploy_cluster(self, *, n_shards: int = 2, t1_replicas: int = 2,
-                       t2_replicas: int = 1):
+    def deploy_cluster(self, *, n_shards: int | None = None,
+                       t1_replicas: int = 2, t2_replicas: int = 1):
         """-> cluster.TieredCluster: the same tiering served by a sharded,
-        replicated fleet (scatter-gather + rolling swaps), still exact."""
+        replicated fleet (scatter-gather + rolling swaps), still exact.
+
+        `n_shards` defaults to the solve's partition count when the solve
+        used a shard-aware `budget_split` (the fleet's shards then coincide
+        with the budget partitions, so each B_k bounds exactly one shard's
+        local Tier-1 sub-index), else 2."""
         from repro.cluster import TieredCluster
+        if n_shards is None:
+            n_shards = self.n_partitions or 2
         return TieredCluster(self.data.postings, self.tiering(),
                              self.data.n_docs, n_shards=n_shards,
                              t1_replicas=t1_replicas,

@@ -11,13 +11,19 @@ full-index machines. This package models that fleet end to end:
     (`kernels.ops.clause_match`), scatter to Tier-1/Tier-2 replicas,
     OR-merge of packed per-shard match bitsets — bit-identical to
     single-tier matching (Theorem 3.1 per shard);
-  * `RollingSwap` / `ClusterTieringBuffer` — zero-downtime re-tiering:
-    replicas drain and swap one at a time, and no batch ever observes a
-    mixed (ψ, Tier-1) generation pair (`BatchTrace` proves it);
+  * `RollingSwap` / `ClusterTieringBuffer` — zero-downtime re-tiering with
+    PER-SHARD generations: each buffer carries per-shard CONTENT ids, so
+    shards a re-tiering didn't touch carry their replicas across
+    generations metadata-only (no drain, no install) while changed shards
+    drain and swap one replica at a time; no batch ever observes a mixed
+    (ψ, Tier-1) content pair per shard (`BatchTrace` proves it);
   * `ClusterPlan` / `run_loadgen` — deterministic discrete-event load
-    generator: open-loop Poisson arrivals, words-scanned service model,
-    straggler tail, per-replica FIFO queueing; reports throughput,
-    p50/p95/p99 latency and fleet word traffic;
+    generator: open-loop Poisson arrivals, words-scanned service model
+    (calibrate it with `fit_service_model` against measured `match_batch`
+    walls), straggler tail, per-replica FIFO queueing; reports throughput,
+    p50/p95/p99 latency, fleet word traffic and per-replica
+    utilization/backlog — which `suggest_replicas(plan, offered_load,
+    slo_p95)` closes into an autoscaling loop;
   * `TieredCluster` — engine-compatible facade, so
     `stream.RetieringController` re-tiers a whole cluster through rolling
     swaps exactly as it hot-swaps one engine.
@@ -37,7 +43,8 @@ Quickstart:
 CLI: `python -m repro.launch.cluster --shards 2 --replicas 2 --windows 2`
 """
 from repro.cluster.loadgen import (                    # noqa: F401
-    ClusterPlan, LoadgenReport, run_loadgen)
+    ClusterPlan, LoadgenReport, ReplicaSuggestion, fit_service_model,
+    run_loadgen, suggest_replicas)
 from repro.cluster.rollout import (                    # noqa: F401
     ClusterTieringBuffer, RollingSwap)
 from repro.cluster.router import (                     # noqa: F401
@@ -47,7 +54,8 @@ from repro.cluster.shard import (                      # noqa: F401
 
 __all__ = [
     "BatchTrace", "ClusterPlan", "ClusterRouter", "ClusterTieringBuffer",
-    "DocShard", "LoadgenReport", "RollingSwap", "ShardReplica",
-    "TieredCluster", "plan_shards", "run_loadgen", "shard_postings",
-    "shard_tier_postings",
+    "DocShard", "LoadgenReport", "ReplicaSuggestion", "RollingSwap",
+    "ShardReplica", "TieredCluster", "fit_service_model", "plan_shards",
+    "run_loadgen", "shard_postings", "shard_tier_postings",
+    "suggest_replicas",
 ]

@@ -48,6 +48,25 @@ class ClusterPlan:
     def n_shards(self) -> int:
         return len(self.t2_words)
 
+    @property
+    def t1_replicas(self) -> int:
+        return max((len(g) for g in self.t1_words), default=0)
+
+    @property
+    def t2_replicas(self) -> int:
+        return max((len(g) for g in self.t2_words), default=0)
+
+    def resized(self, t1_replicas: int, t2_replicas: int) -> "ClusterPlan":
+        """Same shard topology with each replica group resized (replicas in
+        a group are homogeneous: they serve the same sub-index)."""
+        if t1_replicas < 1 or t2_replicas < 1:
+            raise ValueError("each replica group needs >= 1 replica")
+        return ClusterPlan(
+            t1_words=tuple((g[0],) * t1_replicas if g else ()
+                           for g in self.t1_words),
+            t2_words=tuple((g[0],) * t2_replicas if g else ()
+                           for g in self.t2_words))
+
 
 @dataclasses.dataclass
 class LoadgenReport:
@@ -63,12 +82,19 @@ class LoadgenReport:
     fleet_words: int            # total postings words scanned fleet-wide
     per_shard_t2_words: tuple[int, ...]   # strong-scaling signal
     t2_fallback_queries: int    # eligible queries served by Tier 2 (rollout)
+    # queueing observability (autoscaling inputs): busiest replica's busy
+    # fraction of the makespan and worst queue backlog seen at dispatch, ms
+    max_t1_util: float = 0.0
+    max_t2_util: float = 0.0
+    max_t1_backlog_ms: float = 0.0
+    max_t2_backlog_ms: float = 0.0
 
     def line(self) -> str:
         return (f"qps={self.throughput_qps:,.0f} (offered {self.offered_qps:,.0f})"
                 f"  p50={self.p50_ms:.3f}ms p95={self.p95_ms:.3f}ms "
                 f"p99={self.p99_ms:.3f}ms  t1={self.tier1_fraction:.3f}  "
-                f"fleet_words={self.fleet_words:,}")
+                f"fleet_words={self.fleet_words:,}  "
+                f"util={max(self.max_t1_util, self.max_t2_util):.2f}")
 
 
 def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
@@ -89,6 +115,9 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
     # per-replica next-free times, flat-indexed [tier][shard][replica]
     free_t1 = [np.zeros(len(g)) for g in plan.t1_words]
     free_t2 = [np.zeros(len(g)) for g in plan.t2_words]
+    busy_t1 = [np.zeros(len(g)) for g in plan.t1_words]
+    busy_t2 = [np.zeros(len(g)) for g in plan.t2_words]
+    backlog = [0.0, 0.0]         # worst queue wait seen at dispatch, per tier
 
     # replica-major rollout outage windows: (start, end) per t1 replica
     outages: dict[tuple[int, int], tuple[float, float]] = {}
@@ -140,7 +169,9 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 if straggle[i, s]:
                     service *= straggler_x
                 start = max(t, free_t1[s][r])
+                backlog[0] = max(backlog[0], start - t)
                 free_t1[s][r] = start + service
+                busy_t1[s][r] += service
                 done = max(done, free_t1[s][r])
                 fleet_words += words
         else:
@@ -152,7 +183,9 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 if straggle[i, s]:
                     service *= straggler_x
                 start = max(t, free_t2[s][r])
+                backlog[1] = max(backlog[1], start - t)
                 free_t2[s][r] = start + service
+                busy_t2[s][r] += service
                 done = max(done, free_t2[s][r])
                 fleet_words += words
                 per_shard_t2[s] += words
@@ -176,4 +209,105 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         fleet_words=int(fleet_words),
         per_shard_t2_words=tuple(int(x) for x in per_shard_t2),
         t2_fallback_queries=fallbacks,
+        max_t1_util=float(max((b.max() for b in busy_t1 if b.size),
+                              default=0.0) / max(makespan, 1e-12)),
+        max_t2_util=float(max((b.max() for b in busy_t2 if b.size),
+                              default=0.0) / max(makespan, 1e-12)),
+        max_t1_backlog_ms=float(backlog[0] * 1e3),
+        max_t2_backlog_ms=float(backlog[1] * 1e3),
     )
+
+
+def fit_service_model(words: np.ndarray, us_per_query: np.ndarray) -> dict:
+    """Least-squares fit of the service model `t = t_fixed + words * t_word`.
+
+    `words`/`us_per_query` are paired measurements (e.g. `match_batch` wall
+    time per query against sub-indexes of different packed widths). Returns
+    {"t_fixed_us", "t_word_us", "r2", "n_points"} — the calibrated
+    coefficients `run_loadgen` should be driven with, instead of its assumed
+    defaults (ROADMAP "loadgen vs reality calibration").
+    """
+    w = np.asarray(words, np.float64)
+    y = np.asarray(us_per_query, np.float64)
+    if w.shape != y.shape or w.size < 2:
+        raise ValueError("need >= 2 paired (words, us) measurements")
+    a = np.stack([np.ones_like(w), w], axis=1)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    pred = a @ coef
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    return {
+        "t_fixed_us": float(coef[0]),
+        "t_word_us": float(coef[1]),
+        "r2": 1.0 - ss_res / max(ss_tot, 1e-30),
+        "n_points": int(w.size),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSuggestion:
+    """`suggest_replicas` output: the sizing plus the loadgen run proving it."""
+    t1_replicas: int
+    t2_replicas: int
+    report: LoadgenReport        # loadgen at the suggested sizing
+    iterations: int
+    meets_slo: bool
+
+    def line(self) -> str:
+        return (f"t1_replicas={self.t1_replicas} t2_replicas="
+                f"{self.t2_replicas}  p95={self.report.p95_ms:.3f}ms  "
+                f"{'meets' if self.meets_slo else 'MISSES'} SLO "
+                f"({self.iterations} loadgen runs)")
+
+
+def suggest_replicas(plan: ClusterPlan, offered_load: float, slo_p95: float,
+                     *, eligible: np.ndarray | None = None,
+                     tier1_fraction: float = 0.5, n_queries: int = 3000,
+                     seed: int = 0, max_replicas: int = 64,
+                     target_util: float = 0.7,
+                     **loadgen_kw) -> ReplicaSuggestion:
+    """Close the autoscaling loop: size `t1_replicas`/`t2_replicas` so the
+    fleet absorbs `offered_load` (qps) within the `slo_p95` (ms) tail.
+
+    Seeds each tier's count analytically from the busiest replica's
+    utilization at the current sizing (replicas needed ≈ current ×
+    util / target_util), then walks upward, always growing the tier with the
+    worse queue backlog, re-running the deterministic load generator until
+    the p95 SLO holds or `max_replicas` is hit. `eligible` fixes the
+    classified traffic mix (default: a `tier1_fraction` Bernoulli pattern).
+    """
+    if eligible is None:
+        rng = np.random.default_rng(seed + 1)
+        eligible = rng.random(256) < tier1_fraction
+    t1_n, t2_n = max(plan.t1_replicas, 1), max(plan.t2_replicas, 1)
+
+    def run(t1_n: int, t2_n: int) -> LoadgenReport:
+        return run_loadgen(plan.resized(t1_n, t2_n), eligible,
+                           rate_qps=offered_load, n_queries=n_queries,
+                           seed=seed, **loadgen_kw)
+
+    rep = run(t1_n, t2_n)
+    iterations = 1
+    # analytic jump from the utilization signal (no search below this point:
+    # a replica group saturates once its busiest member exceeds target_util)
+    t1_n = min(max_replicas,
+               max(t1_n, int(np.ceil(t1_n * rep.max_t1_util / target_util))))
+    t2_n = min(max_replicas,
+               max(t2_n, int(np.ceil(t2_n * rep.max_t2_util / target_util))))
+    rep = run(t1_n, t2_n)
+    iterations += 1
+    while rep.p95_ms > slo_p95 and max(t1_n, t2_n) < max_replicas:
+        # grow the tier whose queueing is worse (backlog, then utilization)
+        grow_t1 = (rep.max_t1_backlog_ms, rep.max_t1_util) >= \
+                  (rep.max_t2_backlog_ms, rep.max_t2_util)
+        if grow_t1 and t1_n < max_replicas:
+            t1_n += 1
+        elif t2_n < max_replicas:
+            t2_n += 1
+        else:
+            t1_n += 1
+        rep = run(t1_n, t2_n)
+        iterations += 1
+    return ReplicaSuggestion(t1_replicas=t1_n, t2_replicas=t2_n, report=rep,
+                             iterations=iterations,
+                             meets_slo=bool(rep.p95_ms <= slo_p95))

@@ -3,18 +3,31 @@
 A re-tiering changes BOTH halves of the serving contract — the ψ^clause
 classifier at the router and the Tier-1 sub-indexes on the replicas — and
 Theorem 3.1 only holds when a query classified by generation g's ψ is served
-by generation g's Tier-1. The cluster therefore never hot-swaps the fleet at
-once: a `RollingSwap` walks the Tier-1 replicas in REPLICA-MAJOR order
-(replica r of every shard, then r+1, ...), so with ≥ 2 replicas per shard
-some complete generation exists at every instant and the router always
-classifies with the ψ of the generation it routes to. With a single replica
-per shard there is a mid-rollout gap where no generation covers every shard;
-the router then routes eligible traffic to Tier 2, which is exact for any
-query — correctness never depends on rollout timing.
+by generation g's Tier-1 *content*. The cluster therefore never hot-swaps the
+fleet at once: a `RollingSwap` walks the Tier-1 replicas in REPLICA-MAJOR
+order (replica r of every shard, then r+1, ...), so with ≥ 2 replicas per
+shard some complete generation exists at every instant and the router always
+classifies with the ψ of the generation it routes to.
+
+Generations roll PER SHARD, independently: every buffer carries a per-shard
+CONTENT id (`shard_content`), and a replica already holding a shard's target
+content — a shard the re-tiering didn't touch, the common case for scoped
+shard-aware refits — commits instantly at swap start, metadata-only, without
+ever draining. Only the shards whose Tier-1 sub-index actually changed pay
+the drain→swap→undrain walk, so a one-shard re-tiering disturbs exactly that
+shard's replicas. Content, not the generation number, is what correctness
+needs: the router picks replicas by content and `BatchTrace` records
+served-vs-expected content per shard.
+
+With a single replica per (changed) shard there is a mid-rollout gap where no
+generation covers every shard; the router then routes eligible traffic to
+Tier 2, which is exact for any query — correctness never depends on rollout
+timing.
 
 Each replica swap is two-phase: `step()` first marks the replica draining
 (the router stops sending it batches; in-flight work finishes), the next
-`step()` commits the new (sub-index, words, generation) and undrains.
+`step()` commits the new (sub-index, words, generation, content) and
+undrains.
 """
 from __future__ import annotations
 
@@ -32,22 +45,43 @@ class ClusterTieringBuffer:
     shard_postings: list[jnp.ndarray]   # per-shard Tier-1 sub-indexes
     shard_words: list[int]              # compacted words/query per shard
     generation: int = 0
+    # content id per shard: equal ids <=> bit-identical sub-index, so buffers
+    # that share a shard's content are interchangeable on that shard
+    shard_content: tuple[int, ...] = ()
 
     def shard_nonempty(self, s: int) -> bool:
         return self.shard_words[s] > 0
 
 
 class RollingSwap:
-    """Walks `t1_groups` (list per shard of replica lists) toward `buffer`."""
+    """Walks `t1_groups` (list per shard of replica lists) toward `buffer`.
+
+    Replicas already holding their shard's target content commit instantly
+    (metadata-only, no drain) at construction; the rest swap one at a time in
+    replica-major order.
+    """
 
     def __init__(self, buffer: ClusterTieringBuffer, t1_groups):
         self.buffer = buffer
+        self.n_swapped = 0
+        self.n_carried = 0
+        pending = []
+        for g in t1_groups:
+            for rep in g:
+                if rep.content == buffer.shard_content[rep.shard.index]:
+                    rep.commit(buffer.shard_postings[rep.shard.index],
+                               buffer.shard_words[rep.shard.index],
+                               buffer.generation,
+                               buffer.shard_content[rep.shard.index])
+                    self.n_carried += 1
+                else:
+                    pending.append(rep)
         # replica-major: [:, 0] then [:, 1] ... so one full cover swaps first
         n_replicas = max((len(g) for g in t1_groups), default=0)
-        self._pending = [g[r] for r in range(n_replicas)
-                         for g in t1_groups if r < len(g)]
+        by_rep = {id(r): i for g in t1_groups for i, r in enumerate(g)}
+        self._pending = [r for i in range(n_replicas)
+                         for r in pending if by_rep[id(r)] == i]
         self._draining = None
-        self.n_swapped = 0
 
     @property
     def done(self) -> bool:
@@ -59,7 +93,8 @@ class RollingSwap:
             rep = self._draining
             rep.commit(self.buffer.shard_postings[rep.shard.index],
                        self.buffer.shard_words[rep.shard.index],
-                       self.buffer.generation)
+                       self.buffer.generation,
+                       self.buffer.shard_content[rep.shard.index])
             self._draining = None
             self.n_swapped += 1
             return rep

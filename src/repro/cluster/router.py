@@ -36,25 +36,44 @@ from repro.serve.engine import ServeStats
 
 
 class ShardReplica:
-    """One serving unit: a (tier, shard) sub-index plus its own counters."""
+    """One serving unit: a (tier, shard) sub-index plus its own counters.
+
+    `content` identifies the sub-index BITS the replica holds (see
+    `ClusterTieringBuffer.shard_content`); `generation` is the newest
+    generation it has acknowledged. The two differ exactly when a rollout
+    carried the replica's content forward (its shard didn't change), which
+    is what lets per-shard generations roll independently.
+    """
 
     def __init__(self, tier: int, shard: shard_mod.DocShard,
-                 postings, words_per_query: int, generation: int = 0):
+                 postings, words_per_query: int, generation: int = 0,
+                 content: int = 0):
         self.tier = tier
         self.shard = shard
         self.postings = jnp.asarray(postings)
         self.words_per_query = words_per_query
         self.generation = generation
+        self.content = content
         self.draining = False
         self.n_batches = 0
         self.n_queries = 0
         self.words_scanned = 0
+        self.n_installs = 0          # real sub-index installs (not carries)
 
-    def commit(self, postings, words_per_query: int, generation: int) -> None:
-        """Install a new generation and rejoin the rotation (rollout phase 2)."""
-        self.postings = jnp.asarray(postings)
+    def commit(self, postings, words_per_query: int, generation: int,
+               content: int | None = None) -> None:
+        """Install a new generation and rejoin the rotation (rollout phase 2).
+
+        When `content` matches what the replica already holds, the commit is
+        metadata-only: no device buffer moves (a carried shard costs nothing).
+        """
+        if content is None or content != self.content:
+            self.postings = jnp.asarray(postings)
+            self.n_installs += 1
         self.words_per_query = words_per_query
         self.generation = generation
+        if content is not None:
+            self.content = content
         self.draining = False
 
     def match(self, tokens: jnp.ndarray) -> np.ndarray:
@@ -66,21 +85,31 @@ class ShardReplica:
 
     def __repr__(self) -> str:  # debugging/observability
         return (f"ShardReplica(t{self.tier} s{self.shard.index} "
-                f"gen={self.generation}{' draining' if self.draining else ''})")
+                f"gen={self.generation} c{self.content}"
+                f"{' draining' if self.draining else ''})")
 
 
 @dataclasses.dataclass(frozen=True)
 class BatchTrace:
-    """What one batch observed: the ψ generation it was classified with and
-    the generations of every Tier-1 replica that served it."""
+    """What one batch observed: the ψ generation it was classified with and,
+    per served shard, the CONTENT each Tier-1 replica held vs the content
+    that ψ's generation prescribes for that shard."""
     psi_generation: int          # -1 = Tier-2 fallback (no ψ consulted)
     t1_generations: tuple[int, ...]
     n_tier1: int
     n_tier2: int
+    t1_shards: tuple[int, ...] = ()         # shard index per Tier-1 server
+    t1_contents: tuple[int, ...] = ()       # content each server held
+    expected_contents: tuple[int, ...] = ()  # ψ generation's per-shard content
 
     @property
     def consistent(self) -> bool:
-        """No mixed (ψ, Tier-1) pair: every Tier-1 server matched the ψ."""
+        """No mixed (ψ, Tier-1) pair, PER SHARD: every Tier-1 server held
+        exactly the sub-index content the ψ generation prescribes for its
+        shard (generation numbers may differ across shards mid-roll — only
+        content equality is what Theorem 3.1 needs)."""
+        if self.t1_contents or self.expected_contents:
+            return self.t1_contents == self.expected_contents
         return all(g == self.psi_generation for g in self.t1_generations)
 
 
@@ -115,11 +144,16 @@ class ClusterRouter:
 
     def complete_generations(self) -> list[int]:
         """Generations with a routable Tier-1 replica on every shard whose
-        local D₁ is non-empty under that generation, oldest first."""
+        local D₁ is non-empty under that generation, oldest first.
+
+        Routable means holding the generation's CONTENT for that shard — a
+        replica whose shard was carried across generations serves both, so
+        scoped rollouts never open a fallback gap on untouched shards."""
         out = []
         for g, buf in sorted(self._buffers.items()):
             if all(not buf.shard_nonempty(s.index)
-                   or any(r.generation == g and not r.draining
+                   or any(r.content == buf.shard_content[s.index]
+                          and not r.draining
                           for r in self.t1[s.index])
                    for s in self.shards):
                 out.append(g)
@@ -147,9 +181,9 @@ class ClusterRouter:
 
     # -- routing --------------------------------------------------------------
     def _pick(self, group: list[ShardReplica], tier: int, shard_idx: int,
-              generation: int | None = None) -> ShardReplica:
+              content: int | None = None) -> ShardReplica:
         ready = [r for r in group if not r.draining
-                 and (generation is None or r.generation == generation)]
+                 and (content is None or r.content == content)]
         key = (tier, shard_idx)
         i = self._rr.get(key, 0)
         self._rr[key] = i + 1
@@ -179,15 +213,22 @@ class ClusterRouter:
             elig = np.zeros(b, bool)
         toks = matching.pad_token_batch(queries)
         t1_gens: list[int] = []
+        t1_shards: list[int] = []
+        t1_contents: list[int] = []
+        expected: list[int] = []
         idx1 = np.nonzero(elig)[0]
         if len(idx1):
             sub = jnp.asarray(toks[idx1])
             for s in self.shards:
                 if not buf.shard_nonempty(s.index):
                     continue                # D₁ misses this shard: no matches
-                rep = self._pick(self.t1[s.index], 1, s.index, generation=gen)
+                rep = self._pick(self.t1[s.index], 1, s.index,
+                                 content=buf.shard_content[s.index])
                 out[idx1, s.word_lo:s.word_hi] = rep.match(sub)
                 t1_gens.append(rep.generation)
+                t1_shards.append(s.index)
+                t1_contents.append(rep.content)
+                expected.append(buf.shard_content[s.index])
                 self.stats.tier1_words += len(idx1) * rep.words_per_query
             self.stats.n_tier1 += len(idx1)
         idx2 = np.nonzero(~elig)[0]
@@ -200,7 +241,9 @@ class ClusterRouter:
         self.stats.n_queries += b
         self.trace.append(BatchTrace(
             psi_generation=gen, t1_generations=tuple(t1_gens),
-            n_tier1=len(idx1), n_tier2=len(idx2)))
+            n_tier1=len(idx1), n_tier2=len(idx2),
+            t1_shards=tuple(t1_shards), t1_contents=tuple(t1_contents),
+            expected_contents=tuple(expected)))
         return [bitset.np_to_indices(row, self.n_docs) for row in out]
 
 
@@ -224,24 +267,46 @@ class TieredCluster:
         self.postings_t2 = jnp.asarray(postings)          # oracle index
         self.shards, self._slices = shard_mod.shard_postings(
             self._postings_host, n_docs, n_shards)
+        self._content_seq = 0
         buf0 = self._build_buffer(tiering, generation=0)
         t1 = [[ShardReplica(1, s, buf0.shard_postings[s.index],
-                            buf0.shard_words[s.index])
+                            buf0.shard_words[s.index],
+                            content=buf0.shard_content[s.index])
                for _ in range(t1_replicas)] for s in self.shards]
         t2 = [[ShardReplica(2, s, self._slices[s.index], s.n_words)
                for _ in range(t2_replicas)] for s in self.shards]
         self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs)
 
+    def _shard_t1(self, tiering: ClauseTiering, s) -> np.ndarray:
+        return np.asarray(tiering.tier1_docs[s.doc_lo:s.doc_lo + s.n_docs],
+                          bool)
+
     def _build_buffer(self, tiering: ClauseTiering,
                       generation: int) -> ClusterTieringBuffer:
-        posts, words = [], []
+        """Per-shard sub-indexes + content ids. A shard whose local D₁ slice
+        equals the live target's carries that content id forward (its
+        replicas won't drain during the rollout); changed shards get fresh
+        ids. So a shard-scoped re-tiering builds a buffer that only rolls
+        the shards it touched."""
+        prev = None
+        if hasattr(self, "router"):
+            prev = self.router._buffers[self.router.target_generation]
+        posts, words, contents = [], [], []
         for s in self.shards:
             p, w = shard_mod.shard_tier_postings(
                 self._slices[s.index], s, tiering.tier1_docs)
             posts.append(jnp.asarray(p))
             words.append(w)
+            if prev is not None and np.array_equal(
+                    self._shard_t1(tiering, s),
+                    self._shard_t1(prev.tiering, s)):
+                contents.append(prev.shard_content[s.index])
+            else:
+                self._content_seq += 1
+                contents.append(self._content_seq)
         return ClusterTieringBuffer(tiering=tiering, shard_postings=posts,
-                                    shard_words=words, generation=generation)
+                                    shard_words=words, generation=generation,
+                                    shard_content=tuple(contents))
 
     # -- engine-compatible surface -------------------------------------------
     @property

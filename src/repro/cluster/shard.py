@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import bitset
+from repro.core import bitset, constraint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,20 +37,18 @@ def plan_shards(n_docs: int, n_shards: int) -> list[DocShard]:
 
     Words are spread as evenly as possible; the effective shard count is
     clamped to the number of postings words (a shard must own ≥ 1 word).
+    Delegates the split to `core.constraint.partition_bounds`, so a
+    `PartitionedBudget` over the same (n_docs, n_shards) bounds exactly the
+    doc ranges these shards serve — per-shard solver budgets and fleet
+    shards line up by construction.
     """
-    if n_shards < 1:
-        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
-    words = bitset.n_words(n_docs)
-    n = min(n_shards, words)
-    base, rem = divmod(words, n)
-    shards, lo = [], 0
-    for i in range(n):
-        hi = lo + base + (1 if i < rem else 0)
+    bounds = constraint.partition_bounds(n_docs, n_shards)
+    shards = []
+    for i, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
         doc_lo = lo * bitset.WORD
         shards.append(DocShard(
             index=i, word_lo=lo, word_hi=hi, doc_lo=doc_lo,
             n_docs=min(n_docs, hi * bitset.WORD) - doc_lo))
-        lo = hi
     return shards
 
 

@@ -90,9 +90,12 @@ def _cell(shape: str, mesh) -> R.Cell:
         inputs["clause_doc_bits"] = R.sds((c, wd), u32)
         specs["clause_doc_bits"] = P(dp, "model")
     if shape == "solve_optpes_l":
-        for nm in ("fbar", "flow", "gbar", "glow"):
+        for nm in ("fbar", "flow"):
             inputs[nm] = R.sds((c,), R.f32)
             specs[nm] = P(dp)
+        for nm in ("gbar", "glow"):           # per-partition bounds [C, P]
+            inputs[nm] = R.sds((c, 1), R.f32)
+            specs[nm] = P(dp, None)
     return R.Cell("solve", inputs, specs)
 
 
@@ -132,6 +135,7 @@ def solve_fn(shape: str):
 
     if shape == "solve_optpes_l":
         def optpes(batch):
+            from repro.core.constraint import GlobalBudget
             from repro.core.optpes import optpes_round
             from repro.core.problem import SCSKProblem
             wq = batch["clause_query_bits"].shape[1]
@@ -144,10 +148,11 @@ def solve_fn(shape: str):
                 query_weights=wpad, test_weights=wpad,
                 n_queries=nq, n_docs=batch["covered_d"].shape[0] * 32)
             state = (batch["covered_q"], batch["covered_d"],
-                     batch["selected"], batch["g_used"],
+                     batch["selected"], batch["g_used"][None],
                      batch["fbar"], batch["flow"], batch["gbar"],
                      batch["glow"], jnp.float32(0.0))
-            return optpes_round(prob, state, batch["budget"],
+            return optpes_round(prob, state,
+                                GlobalBudget(budget=batch["budget"]),
                                 k=CONFIG.refresh_k)
         return optpes
 

@@ -26,6 +26,9 @@ dict remain as thin legacy shims over the registry.
 """
 from repro.core.agnostic import agnostic_greedy, solve_agnostic    # noqa: F401
 from repro.core.config import SolveConfig                          # noqa: F401
+from repro.core.constraint import (                                # noqa: F401
+    GlobalBudget, KnapsackConstraint, PartitionedBudget, partition_bounds,
+    partition_capacities, trim_state)
 from repro.core.greedy import greedy, greedy_step, solve_greedy    # noqa: F401
 from repro.core.isk import isk, solve_isk1, solve_isk2             # noqa: F401
 from repro.core.lazy_greedy import lazy_greedy, solve_lazy_greedy  # noqa: F401

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import SolveConfig
+from repro.core.constraint import resolve_constraint
 from repro.core.lazy_greedy import _exact_gains_one, _singleton_gains
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.registry import register_solver
@@ -31,8 +32,9 @@ def solve_agnostic(problem: SCSKProblem, config: SolveConfig,
     state = problem.init_state() if state is None else state
     covered_q, covered_d = state.covered_q, state.covered_d
     budget = config.budget
+    constraint = resolve_constraint(problem, config)
 
-    fbar_d, _ = _singleton_gains(problem, covered_q, covered_d)
+    fbar_d, _ = _singleton_gains(problem, constraint, covered_q, covered_d)
     fbar = np.asarray(fbar_d, np.float64)
 
     selected = np.asarray(state.selected).copy()
@@ -51,12 +53,13 @@ def solve_agnostic(problem: SCSKProblem, config: SolveConfig,
             _, j = heapq.heappop(heap)
             if selected[j]:
                 continue
-            fg, gg = _exact_gains_one(problem, covered_q, covered_d, jnp.int32(j))
+            fg, gg_part = _exact_gains_one(problem, constraint, covered_q,
+                                           covered_d, jnp.int32(j))
             fbar[j] = float(fg)
             trace.add_evals(2)
             if fbar[j] <= 0:
                 continue
-            if g_used + float(gg) > budget:
+            if g_used + float(jnp.sum(gg_part)) > budget:
                 continue                      # infeasible winner: drop
             if not heap or fbar[j] >= -heap[0][0]:
                 chosen = j

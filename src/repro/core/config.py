@@ -13,13 +13,22 @@ signature-uniform without losing per-solver tunability.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
     budget: float
     solver: str = "greedy"
+    # Partitioned knapsack (shard-aware budgets, see core.constraint):
+    #   budget_split — {partition: cap} mapping / cap sequence over the
+    #       word-aligned doc partition, or the string "traffic" (resolved
+    #       from observed traffic shares by TieringPipeline; invalid at the
+    #       bare registry level). None = single global budget.
+    #   constraint — an explicit KnapsackConstraint object; wins over both
+    #       `budget` and `budget_split`.
+    budget_split: Mapping[int, float] | Sequence[float] | str | None = None
+    constraint: Any = None
     max_steps: int | None = None        # cap on selections this call
     record_every: int = 1               # trace density (history points)
     time_limit: float | None = None     # wall-clock seconds, checked per step
@@ -44,6 +53,18 @@ class SolveConfig:
             raise ValueError(f"unknown stop_policy: {self.stop_policy!r}")
         if self.record_every < 1:
             raise ValueError("record_every must be >= 1")
+        if isinstance(self.budget_split, str) and \
+                self.budget_split != "traffic":
+            raise ValueError(
+                f"unknown budget_split: {self.budget_split!r} "
+                "(a mapping, a cap sequence, or 'traffic')")
+
+    @property
+    def partitioned(self) -> bool:
+        """True when this config implies a multi-partition constraint."""
+        if self.constraint is not None:
+            return getattr(self.constraint, "n_parts", 1) > 1
+        return self.budget_split is not None
 
     def replace(self, **kw) -> "SolveConfig":
         return dataclasses.replace(self, **kw)

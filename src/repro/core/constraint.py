@@ -1,0 +1,288 @@
+"""Knapsack constraints: the budget side of SCSK as a first-class object.
+
+The paper's single constraint g(X) <= B (eq. 12) models ONE machine's index
+budget. A serving fleet has per-shard capacity: the doc space is partitioned
+into word-aligned ranges (exactly `cluster.plan_shards`' split) and each
+partition k carries its own cap B_k over its own cost g_k(X) = |m(X) ∩ D_k|.
+This module extracts the budget/cost logic that used to live inline in the
+solvers into a pluggable constraint object:
+
+  * `GlobalBudget`      — today's scalar knapsack; the feasibility arithmetic
+                          is bit-identical to the pre-refactor inline checks
+                          (same comparisons on the same floats), pinned by
+                          tests/test_constraint.py.
+  * `PartitionedBudget` — per-partition doc-cost vectors g_k and caps B_k;
+                          a clause is feasible iff EVERY partition it touches
+                          still fits: ∀k. g_k(X) + g_k(j|X) <= B_k. The
+                          batched per-partition cost-gain oracle is one fused
+                          kernel call (`ops.partition_gain`).
+
+Both are registered jax dataclasses, so they flow through jitted solver steps
+as pytrees (caps are data, partition bounds are static metadata).
+
+Every g_k is monotone submodular by the same Theorem-3.4 argument as g (a
+coverage function restricted to D_k), so each partition's lower-bound update
+rule (eq. 14 / Thm 4.1) remains valid per-coordinate — the lazy and opt/pes
+solvers keep their laziness with vector bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+
+
+def partition_bounds(n_docs: int, n_parts: int) -> tuple[int, ...]:
+    """Word-aligned doc-space partition: P+1 word offsets, 0 first, W last.
+
+    Words are spread as evenly as possible and the partition count is clamped
+    to the number of postings words — the SAME split `cluster.plan_shards`
+    uses (it delegates here), so a `PartitionedBudget` built from this is
+    aligned with the serving fleet's shards by construction.
+    """
+    if n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    words = bitset.n_words(n_docs)
+    n = min(n_parts, words)
+    base, rem = divmod(words, n)
+    bounds = [0]
+    for i in range(n):
+        bounds.append(bounds[-1] + base + (1 if i < rem else 0))
+    return tuple(bounds)
+
+
+class KnapsackConstraint:
+    """Protocol every constraint implements (consumed by the solvers).
+
+    used/value return f32 [P] fills, gains returns (total [C], per-part
+    [C, P]) marginal costs, feasible masks candidates that fit EVERY
+    partition. Implementations must be jit-traceable pytrees.
+    """
+
+    @property
+    def n_parts(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def total(self) -> float:
+        """Total budget across partitions (host-side reporting)."""
+        raise NotImplementedError
+
+    def used(self, problem, state) -> jax.Array:
+        """f32 [P] fill of a SolverState (device)."""
+        raise NotImplementedError
+
+    def value(self, problem, covered_d) -> jax.Array:
+        """f32 [P] fill of a covered-doc bitset (device)."""
+        raise NotImplementedError
+
+    def np_value(self, covered_d: np.ndarray) -> np.ndarray:
+        """f64 [P] fill of a host covered-doc bitset (host solvers)."""
+        raise NotImplementedError
+
+    def gains(self, problem, covered_d, *, rows=None):
+        """(g_total f32 [C], g_part f32 [C, P]) marginal costs."""
+        raise NotImplementedError
+
+    def feasible(self, used, g_part) -> jax.Array:
+        """bool [C]: used[k] + g_part[:, k] <= B_k for every partition k."""
+        raise NotImplementedError
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["budget"], meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class GlobalBudget(KnapsackConstraint):
+    """The paper's scalar knapsack g(X) <= B, as a constraint object.
+
+    Feasibility is the literal pre-refactor comparison
+    `g_used + g_gain <= budget` — no reshapes or reductions touch the floats,
+    so solves are bit-identical to the inline-budget era.
+    """
+    budget: jax.Array     # f32 scalar
+
+    def __post_init__(self):
+        # tracer-safe: pytree unflatten re-runs this inside jit
+        object.__setattr__(self, "budget",
+                           jnp.asarray(self.budget, jnp.float32))
+
+    @property
+    def n_parts(self) -> int:
+        return 1
+
+    @property
+    def total(self) -> float:
+        return float(self.budget)
+
+    def used(self, problem, state) -> jax.Array:
+        return jnp.reshape(state.g_used, (1,))
+
+    def value(self, problem, covered_d) -> jax.Array:
+        return jnp.reshape(problem.g_value(covered_d), (1,))
+
+    def np_value(self, covered_d: np.ndarray) -> np.ndarray:
+        return np.asarray([bitset.np_popcount(covered_d)], np.float64)
+
+    def gains(self, problem, covered_d, *, rows=None):
+        gg = problem.g_gains(covered_d, rows=rows)
+        return gg, gg[..., None]
+
+    def feasible(self, used, g_part) -> jax.Array:
+        return used[0] + g_part[..., 0] <= self.budget
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["caps"], meta_fields=["bounds"])
+@dataclasses.dataclass(frozen=True)
+class PartitionedBudget(KnapsackConstraint):
+    """Per-partition caps B_k over word-aligned doc ranges.
+
+    bounds : tuple of P+1 word offsets (static metadata; partitions are the
+             contiguous word ranges [bounds[k], bounds[k+1]))
+    caps   : f32 [P] per-partition doc budgets
+
+    Feasibility masks a clause the moment ANY partition it touches is out of
+    headroom; the objective side (f and the greedy ratio's total g) is
+    untouched — partitioning constrains placement, not value.
+    """
+    caps: jax.Array
+    bounds: tuple[int, ...]
+
+    def __post_init__(self):
+        bounds = tuple(int(b) for b in self.bounds)
+        if len(bounds) < 2 or bounds[0] != 0 or \
+                any(a >= b for a, b in zip(bounds, bounds[1:])):
+            raise ValueError(f"bounds must be ascending word offsets "
+                             f"starting at 0, got {bounds}")
+        object.__setattr__(self, "bounds", bounds)
+        caps = jnp.asarray(self.caps, jnp.float32)
+        if caps.shape != (len(bounds) - 1,):
+            raise ValueError(f"caps must have shape ({len(bounds) - 1},), "
+                             f"got {caps.shape}")
+        object.__setattr__(self, "caps", caps)
+
+    @classmethod
+    def from_split(cls, n_docs: int,
+                   split: Mapping[int, float] | Sequence[float],
+                   ) -> "PartitionedBudget":
+        """From a {partition: cap} mapping or a cap sequence; partitions are
+        `partition_bounds(n_docs, P)` word ranges."""
+        if isinstance(split, Mapping):
+            keys = sorted(split)
+            if keys != list(range(len(keys))):
+                raise ValueError(
+                    f"budget split keys must be 0..P-1, got {keys}")
+            caps = [float(split[k]) for k in keys]
+        else:
+            caps = [float(b) for b in split]
+        bounds = partition_bounds(n_docs, len(caps))
+        if len(bounds) - 1 != len(caps):
+            raise ValueError(
+                f"{len(caps)} partitions need >= {len(caps)} postings words; "
+                f"n_docs={n_docs} only has {bounds[-1]}")
+        return cls(caps=jnp.asarray(caps, jnp.float32), bounds=bounds)
+
+    @property
+    def n_parts(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def total(self) -> float:
+        return float(jnp.sum(self.caps))
+
+    def scaled(self, new_total: float) -> "PartitionedBudget":
+        """Same split shares at a different total budget (budget sweeps)."""
+        return PartitionedBudget(
+            caps=self.caps * (float(new_total) / max(self.total, 1e-30)),
+            bounds=self.bounds)
+
+    def used(self, problem, state) -> jax.Array:
+        return self.value(problem, state.covered_d)
+
+    def value(self, problem, covered_d) -> jax.Array:
+        return problem.g_value(covered_d, bounds=self.bounds)
+
+    def np_value(self, covered_d: np.ndarray) -> np.ndarray:
+        covered_d = np.asarray(covered_d)
+        return np.asarray(
+            [bitset.np_popcount(covered_d[lo:hi])
+             for lo, hi in zip(self.bounds, self.bounds[1:])], np.float64)
+
+    def gains(self, problem, covered_d, *, rows=None):
+        g_part = problem.g_gains(covered_d, rows=rows, bounds=self.bounds)
+        return jnp.sum(g_part, axis=-1), g_part
+
+    def feasible(self, used, g_part) -> jax.Array:
+        return jnp.all(used + g_part <= self.caps, axis=-1)
+
+
+def partition_capacities(n_docs: int, bounds: Sequence[int]) -> list[int]:
+    """Physical doc capacity of each partition of a word-aligned split."""
+    word = bitset.WORD
+    return [min(n_docs, hi * word) - lo * word
+            for lo, hi in zip(bounds, bounds[1:])]
+
+
+def trim_state(problem, state, constraint):
+    """Make a warm-start state feasible for (possibly shrunk) per-shard caps.
+
+    Re-allocating a traffic split can hand a shard a cap BELOW the fill its
+    frozen warm-prefix clauses already occupy; the solvers only mask NEW
+    candidates, so the overflow would survive the solve. This drops every
+    selected clause touching an over-cap partition (their budget is freed
+    for the re-solve) and rebuilds the state exactly. Returns
+    (state, dropped_indices); a no-op (same state object) when every
+    partition already fits.
+    """
+    if state is None or constraint.n_parts == 1:
+        return state, np.empty(0, np.int64)
+    covered_d = np.asarray(state.covered_d)
+    fills = constraint.np_value(covered_d)
+    caps = np.asarray(constraint.caps, np.float64)
+    over = np.nonzero(fills > caps)[0]
+    if not len(over):
+        return state, np.empty(0, np.int64)
+    selected = np.asarray(state.selected)
+    idx = np.nonzero(selected)[0].astype(np.int64)
+    rows = np.asarray(problem.clause_doc_bits)[idx]
+    touches = np.zeros(len(idx), bool)
+    for k in over:
+        lo, hi = constraint.bounds[k], constraint.bounds[k + 1]
+        touches |= bitset.np_popcount(rows[:, lo:hi]) > 0
+    kept = idx[~touches]
+    return problem.state_for(kept), idx[touches]
+
+
+def as_constraint(budget) -> KnapsackConstraint:
+    """Normalize a scalar budget (or pass a constraint through)."""
+    if isinstance(budget, KnapsackConstraint):
+        return budget
+    return GlobalBudget(budget=jnp.float32(budget))
+
+
+def resolve_constraint(problem, config) -> KnapsackConstraint:
+    """The constraint a SolveConfig implies for a given problem.
+
+    Precedence: an explicit `config.constraint` wins; a `budget_split`
+    mapping/sequence builds a `PartitionedBudget` over the problem's doc
+    space; otherwise the scalar `config.budget` is a `GlobalBudget`.
+    `budget_split="traffic"` needs traffic data and is resolved by
+    `TieringPipeline` (api layer) before the solve reaches here.
+    """
+    if config.constraint is not None:
+        return as_constraint(config.constraint)
+    split = config.budget_split
+    if split is None:
+        return GlobalBudget(budget=jnp.float32(config.budget))
+    if isinstance(split, str):
+        raise ValueError(
+            f"budget_split={split!r} must be resolved from traffic data by "
+            "TieringPipeline (api layer); pass a mapping or a constraint "
+            "object at this level")
+    return PartitionedBudget.from_split(problem.n_docs, split)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import SolveConfig
+from repro.core.constraint import as_constraint, resolve_constraint
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.registry import register_solver
 from repro.core.state import SolverState
@@ -31,19 +32,13 @@ def ratio_of(fg: jax.Array, gg: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("cost_aware", "truncate"))
-def greedy_step(problem: SCSKProblem, state: SolverState, budget, *,
-                cost_aware: bool = True, truncate: bool = False):
-    """One greedy selection over a SolverState.
-
-    Returns (state, f_val, j, stop). `truncate=False` masks the score to
-    feasible candidates ("exhaust": classic greedy); `truncate=True` ranks
-    ALL unselected candidates and stops at the first infeasible argmax, which
-    makes the selection path budget-independent (warm-start sweeps).
-    """
+def _greedy_step(problem: SCSKProblem, state: SolverState, constraint, *,
+                 cost_aware: bool = True, truncate: bool = False):
     fg = problem.f_gains(state.covered_q)
-    gg = problem.g_gains(state.covered_d)
+    gg, gg_part = constraint.gains(problem, state.covered_d)
+    used = constraint.used(problem, state)
     candidates = (~state.selected) & (fg > 0.0)
-    feasible = candidates & (state.g_used + gg <= budget)
+    feasible = candidates & constraint.feasible(used, gg_part)
     score = ratio_of(fg, gg) if cost_aware else fg
     score = jnp.where(candidates if truncate else feasible, score, -jnp.inf)
     j = jnp.argmax(score)
@@ -55,7 +50,23 @@ def greedy_step(problem: SCSKProblem, state: SolverState, budget, *,
     return state, f_val, j, stop
 
 
+def greedy_step(problem: SCSKProblem, state: SolverState, budget, *,
+                cost_aware: bool = True, truncate: bool = False):
+    """One greedy selection over a SolverState.
+
+    `budget` is a scalar knapsack budget or any `KnapsackConstraint` (a
+    `PartitionedBudget` masks candidates that overflow ANY per-shard cap).
+    Returns (state, f_val, j, stop). `truncate=False` masks the score to
+    feasible candidates ("exhaust": classic greedy); `truncate=True` ranks
+    ALL unselected candidates and stops at the first infeasible argmax, which
+    makes the selection path budget-independent (warm-start sweeps).
+    """
+    return _greedy_step(problem, state, as_constraint(budget),
+                        cost_aware=cost_aware, truncate=truncate)
+
+
 @register_solver("greedy", supports_state=True, supports_truncate=True,
+                 supports_partition=True,
                  description="dense cost-ratio greedy (paper eq. 13)")
 def solve_greedy(problem: SCSKProblem, config: SolveConfig,
                  state: SolverState | None = None) -> SolverResult:
@@ -63,15 +74,16 @@ def solve_greedy(problem: SCSKProblem, config: SolveConfig,
     state = problem.init_state() if state is None else state
     trace = Trace(config, f0=float(problem.f_value(state.covered_q)),
                   g0=float(state.g_used))
-    budget = jnp.float32(config.budget)
+    constraint = resolve_constraint(problem, config)
     truncate = config.stop_policy == "truncate"
     c = problem.n_clauses
 
     order: list[int] = []
     steps = config.max_steps or c
     for _ in range(steps):
-        state, f_val, j, stop = greedy_step(
-            problem, state, budget, cost_aware=cost_aware, truncate=truncate)
+        state, f_val, j, stop = _greedy_step(
+            problem, state, constraint, cost_aware=cost_aware,
+            truncate=truncate)
         trace.add_evals(2 * c)
         if bool(stop):
             break

@@ -10,6 +10,12 @@ Only heap-top candidates get exact (expensive) re-evaluation, so the count of
 exact oracle calls — `n_exact_evals` — is the laziness metric benchmarked in
 Fig. 2/4. The selected sequence provably equals dense greedy's (tested).
 
+The knapsack side is a pluggable `KnapsackConstraint`: every g̲ bound is a
+per-partition VECTOR (each g_k is submodular, so eq. 14 holds coordinatewise)
+and feasibility masks candidates whose optimistic cost overflows ANY
+partition cap — with `GlobalBudget` (one partition) the arithmetic reduces to
+the scalar pre-refactor comparisons, bit for bit.
+
 Registered as "lazy" (`repro.api`). Warm-startable: resuming re-seeds the
 bounds with exact singleton gains at the resumed state (valid upper/lower
 bounds by submodularity), so the continuation equals a fresh lazy solve over
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import SolveConfig
+from repro.core.constraint import resolve_constraint
 from repro.core.greedy import BIG
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.registry import register_solver
@@ -32,59 +39,76 @@ from repro.core.trace import Trace
 
 
 @jax.jit
-def _exact_gains_one(problem: SCSKProblem, covered_q, covered_d, j):
+def _exact_gains_one(problem: SCSKProblem, constraint, covered_q, covered_d,
+                     j):
     fg = problem.f_gains(covered_q, rows=problem.clause_query_bits[j][None])[0]
-    gg = problem.g_gains(covered_d, rows=problem.clause_doc_bits[j][None])[0]
-    return fg, gg
+    _, gg_part = constraint.gains(
+        problem, covered_d, rows=problem.clause_doc_bits[j][None])
+    return fg, gg_part[0]
 
 
 @jax.jit
-def _singleton_gains(problem: SCSKProblem, covered_q, covered_d):
-    return problem.f_gains(covered_q), problem.g_gains(covered_d)
+def _singleton_gains(problem: SCSKProblem, constraint, covered_q, covered_d):
+    fg = problem.f_gains(covered_q)
+    _, gg_part = constraint.gains(problem, covered_d)
+    return fg, gg_part
 
 
 def _ratio(f: float, g: float) -> float:
     return f * BIG if g <= 0 else f / g
 
 
-@register_solver("lazy", supports_state=True,
+@register_solver("lazy", supports_state=True, supports_partition=True,
                  description="lazy greedy with Thm-4.1 bounds (Alg. 1)")
 def solve_lazy_greedy(problem: SCSKProblem, config: SolveConfig,
                       state: SolverState | None = None) -> SolverResult:
     c = problem.n_clauses
     state = problem.init_state() if state is None else state
     covered_q, covered_d = state.covered_q, state.covered_d
-    budget = config.budget
+    constraint = resolve_constraint(problem, config)
+    caps = np.asarray(constraint.caps, np.float64) \
+        if hasattr(constraint, "caps") else \
+        np.asarray([float(constraint.budget)], np.float64)
 
-    fbar_d, gg_d = _singleton_gains(problem, covered_q, covered_d)
+    fbar_d, glow_d = _singleton_gains(problem, constraint, covered_q,
+                                      covered_d)
     fbar = np.asarray(fbar_d, np.float64)
-    glow = np.asarray(gg_d, np.float64)
+    glow = np.asarray(glow_d, np.float64)          # [C, P] per-partition g̲
+    glow_tot = glow.sum(axis=-1)
 
     selected = np.asarray(state.selected).copy()
     order: list[int] = []
     g_used = float(state.g_used)
+    g_part = constraint.np_value(np.asarray(covered_d))
     f_val = float(problem.f_value(covered_q))
     trace = Trace(config, f0=f_val, g0=g_used)
     trace.add_evals(2 * c)
 
+    def fits(j: int) -> bool:
+        """Optimistic feasibility: the lower-bound cost fits EVERY cap."""
+        return bool(np.all(g_part + glow[j] <= caps))
+
     steps = config.max_steps or c
     for _ in range(steps):
         # rebuild heap of optimistically-feasible candidates (Alg. 1 outer loop)
-        heap = [(-_ratio(fbar[j], glow[j]), j) for j in range(c)
-                if not selected[j] and g_used + glow[j] <= budget and fbar[j] > 0]
+        heap = [(-_ratio(fbar[j], glow_tot[j]), j) for j in range(c)
+                if not selected[j] and fits(j) and fbar[j] > 0]
         heapq.heapify(heap)
         chosen = -1
         while heap:
             _, j = heapq.heappop(heap)
             # tighten bounds with exact evaluation
-            fg, gg = _exact_gains_one(problem, covered_q, covered_d, jnp.int32(j))
-            fbar[j], glow[j] = float(fg), float(gg)
+            fg, gg_part = _exact_gains_one(problem, constraint, covered_q,
+                                           covered_d, jnp.int32(j))
+            fbar[j] = float(fg)
+            glow[j] = np.asarray(gg_part, np.float64)
+            glow_tot[j] = glow[j].sum()
             trace.add_evals(2)
-            if g_used + glow[j] > budget:
+            if not fits(j):
                 continue                          # Alg. 1: infeasible, skip
             if fbar[j] <= 0:
                 continue
-            r = _ratio(fbar[j], glow[j])
+            r = _ratio(fbar[j], glow_tot[j])
             if not heap or r >= -heap[0][0]:
                 chosen = j                        # exact top beats next optimist
                 break
@@ -92,15 +116,17 @@ def solve_lazy_greedy(problem: SCSKProblem, config: SolveConfig,
         if chosen < 0:
             break
         # select
-        fg_star, gg_star = fbar[chosen], glow[chosen]
+        fg_star, gg_star = fbar[chosen], glow[chosen].copy()
         covered_q, covered_d = problem.add_clause(
             covered_q, covered_d, jnp.int32(chosen))
         selected[chosen] = True
         order.append(chosen)
-        g_used = float(problem.g_value(covered_d))
+        g_part = constraint.np_value(np.asarray(covered_d))
+        g_used = float(g_part.sum())   # partitions tile covered_d exactly
         f_val += fg_star
-        # Theorem 4.1 bound update (eq. 14) for every candidate
-        glow = np.maximum(0.0, glow - gg_star)
+        # Theorem 4.1 bound update (eq. 14), per partition, every candidate
+        glow = np.maximum(0.0, glow - gg_star[None, :])
+        glow_tot = glow.sum(axis=-1)
         # f̄ stays as-is: stale f-gains upper-bound current ones (submodularity)
         trace.on_select(f_val, g_used)
         if trace.should_stop():

@@ -10,6 +10,12 @@ guarantees j^(t) ∈ C, so this terminates with the exact greedy choice).
 
 Bounds maintained per candidate (all eq.-14-style updates, Thm 4.1):
   f̄ upper / f̲ lower bounds of f(j|X);  ḡ upper / g̲ lower bounds of g(j|X).
+
+The knapsack is a pluggable `KnapsackConstraint`: the ḡ/g̲ bounds are
+per-partition MATRICES [C, P] (eq. 14 holds coordinatewise since every g_k is
+submodular), ratios use the partition totals, and feasibility masks any
+candidate whose optimistic cost overflows ANY per-shard cap. `GlobalBudget`
+(P=1) reduces to the scalar pre-refactor arithmetic bit for bit.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import SolveConfig
+from repro.core.constraint import resolve_constraint
 from repro.core.greedy import ratio_of
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.registry import register_solver
@@ -28,13 +35,17 @@ from repro.core.trace import Trace
 NEG = -jnp.inf
 
 
-def _subset_gains(problem: SCSKProblem, covered_q, covered_d, top_idx):
-    """Exact f/g gains for K gathered candidate rows.
+def _subset_gains(problem: SCSKProblem, constraint, covered_q, covered_d,
+                  top_idx):
+    """Exact f gains [K] and per-partition g gains [K, P] for K gathered rows.
 
     Mesh-aware: `A[top_idx]` on a (dp x model)-sharded incidence matrix makes
     XLA all-gather the whole operand (512 GB at solve_l scale — §Perf). The
     sharded path instead slices rows owner-locally and folds the owner
     selection and the W-partial reduction into ONE psum over all mesh axes.
+    (Partitioned constraints take the direct path: their covered_d word
+    slices don't line up with the mesh's model sharding — an RDMA-friendly
+    fusion is an open item.)
     """
     from repro.distributed import mesh_context
     from repro.models.moe import shard_map
@@ -43,13 +54,14 @@ def _subset_gains(problem: SCSKProblem, covered_q, covered_d, top_idx):
     x = (problem.query_weights
          * (1.0 - bitset.unpack(covered_q).astype(jnp.float32)))[:, None]
     mesh = mesh_context.current_mesh()
-    if mesh.size == 1 or "model" not in mesh.axis_names:
+    if mesh.size == 1 or "model" not in mesh.axis_names \
+            or constraint.n_parts > 1:
         rows_q = problem.clause_query_bits[top_idx]
         rows_d = problem.clause_doc_bits[top_idx]
         from repro.kernels import ops
         fg = ops.bit_matvec(rows_q, x)[:, 0]
-        gg = ops.coverage_gain(rows_d, covered_d).astype(jnp.float32)
-        return fg, gg
+        _, gg_part = constraint.gains(problem, covered_d, rows=rows_d)
+        return fg, gg_part
 
     from repro.kernels import ops
     dp = tuple(a for a in mesh.axis_names if a != "model")
@@ -70,24 +82,29 @@ def _subset_gains(problem: SCSKProblem, covered_q, covered_d, top_idx):
         axes = dp + ("model",)       # owner-select + W-partials in one psum
         return jax.lax.psum(fg_p, axes), jax.lax.psum(gg_p, axes)
 
-    return shard_map(
+    fg, gg = shard_map(
         body, mesh,
         in_specs=(P(dp, "model"), P(dp, "model"), P("model"), P("model"),
                   P()),
         out_specs=(P(), P()), check_vma=False,
     )(problem.clause_query_bits, problem.clause_doc_bits, x, covered_d,
       top_idx)
+    return fg, gg[..., None]
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def optpes_round(problem: SCSKProblem, state, budget, *, k: int):
-    """One refresh-(and maybe select) round. Fully batched."""
-    (covered_q, covered_d, selected, g_used,
+def optpes_round(problem: SCSKProblem, state, constraint, *, k: int):
+    """One refresh-(and maybe select) round. Fully batched.
+
+    `state` is (covered_q, covered_d, selected, g_part [P], fbar [C],
+    flow [C], gbar [C, P], glow [C, P], f_val).
+    """
+    (covered_q, covered_d, selected, g_part,
      fbar, flow, gbar, glow, f_val) = state
 
-    feasible = (~selected) & (g_used + glow <= budget) & (fbar > 0.0)
-    opt = jnp.where(feasible, ratio_of(fbar, glow), NEG)
-    pes = jnp.where(feasible, ratio_of(flow, gbar), NEG)
+    feasible = (~selected) & constraint.feasible(g_part, glow) & (fbar > 0.0)
+    opt = jnp.where(feasible, ratio_of(fbar, jnp.sum(glow, -1)), NEG)
+    pes = jnp.where(feasible, ratio_of(flow, jnp.sum(gbar, -1)), NEG)
     best_pes = jnp.max(pes)
     in_c = feasible & (opt >= best_pes)
 
@@ -96,22 +113,27 @@ def optpes_round(problem: SCSKProblem, state, budget, *, k: int):
     valid = top_vals > NEG
 
     # exact re-evaluation (one fused kernel call over the gathered rows)
-    fg, gg = _subset_gains(problem, covered_q, covered_d, top_idx)
+    fg, gg_part = _subset_gains(problem, constraint, covered_q, covered_d,
+                                top_idx)
+    gg = jnp.sum(gg_part, -1)
 
     def upd(arr, vals):
-        return arr.at[top_idx].set(jnp.where(valid, vals, arr[top_idx]))
+        keep = valid if vals.ndim == 1 else valid[:, None]
+        return arr.at[top_idx].set(jnp.where(keep, vals, arr[top_idx]))
     fbar, flow = upd(fbar, fg), upd(flow, fg)
-    gbar, glow = upd(gbar, gg), upd(glow, gg)
+    gbar, glow = upd(gbar, gg_part), upd(glow, gg_part)
 
     # selection test: exact-argmax among refreshed beats all other optimists
-    exact_feas = valid & (~selected[top_idx]) & (g_used + gg <= budget) & (fg > 0.0)
+    exact_feas = valid & (~selected[top_idx]) \
+        & constraint.feasible(g_part, gg_part) & (fg > 0.0)
     exact_ratio = jnp.where(exact_feas, ratio_of(fg, gg), NEG)
     bi = jnp.argmax(exact_ratio)
     j_star = top_idx[bi]
     r_star = exact_ratio[bi]
 
     refreshed = jnp.zeros_like(selected).at[top_idx].set(valid)
-    opt2 = jnp.where(feasible & ~refreshed, ratio_of(fbar, glow), NEG)
+    opt2 = jnp.where(feasible & ~refreshed,
+                     ratio_of(fbar, jnp.sum(glow, -1)), NEG)
     other_best = jnp.max(opt2)
     do_select = (r_star > NEG) & (r_star >= other_best)
     any_feasible = jnp.any(feasible)
@@ -143,15 +165,15 @@ def optpes_round(problem: SCSKProblem, state, budget, *, k: int):
                          out_specs=P("model"), check_vma=False)(mat, jj)
 
     def select(args):
-        covered_q, covered_d, selected, g_used, fbar, flow, gbar, glow, f_val = args
-        fg_s, gg_s = fg[bi], gg[bi]
+        covered_q, covered_d, selected, g_part, fbar, flow, gbar, glow, f_val = args
+        fg_s, gg_s = fg[bi], gg_part[bi]
         cq = covered_q | _row(problem.clause_query_bits, j_star)
         cd = covered_d | _row(problem.clause_doc_bits, j_star)
         sel = selected.at[j_star].set(True)
-        # eq. (14) lower-bound updates for every candidate
-        glow2 = jnp.maximum(0.0, glow - gg_s)
+        # eq. (14) lower-bound updates for every candidate, per partition
+        glow2 = jnp.maximum(0.0, glow - gg_s[None, :])
         flow2 = jnp.maximum(0.0, flow - fg_s)
-        return (cq, cd, sel, problem.g_value(cd),
+        return (cq, cd, sel, constraint.value(problem, cd),
                 fbar, flow2, gbar, glow2, f_val + fg_s)
 
     def no_select(args):
@@ -159,26 +181,28 @@ def optpes_round(problem: SCSKProblem, state, budget, *, k: int):
 
     state = jax.lax.cond(
         do_select, select, no_select,
-        (covered_q, covered_d, selected, g_used, fbar, flow, gbar, glow, f_val))
+        (covered_q, covered_d, selected, g_part, fbar, flow, gbar, glow,
+         f_val))
     return state, do_select, any_feasible, j_star
 
 
-@register_solver("optpes", supports_state=True,
+@register_solver("optpes", supports_state=True, supports_partition=True,
                  description="batched optimistic/pessimistic greedy (Alg. 2)")
 def solve_optpes(problem: SCSKProblem, config: SolveConfig,
                  state: SolverState | None = None) -> SolverResult:
     c = problem.n_clauses
     k = min(int(config.opt("k", 256)), c)
     state = problem.init_state() if state is None else state
+    constraint = resolve_constraint(problem, config)
     covered_q, covered_d = state.covered_q, state.covered_d
     f0 = float(problem.f_value(covered_q))
     # warm start: exact singleton gains at the resumed state are valid
     # optimistic AND pessimistic bounds (they are exact)
     fg0 = problem.f_gains(covered_q)
-    gg0 = problem.g_gains(covered_d)
-    round_state = (covered_q, covered_d, state.selected, state.g_used,
+    _, gg0 = constraint.gains(problem, covered_d)
+    round_state = (covered_q, covered_d, state.selected,
+                   constraint.used(problem, state),
                    fg0, fg0, gg0, gg0, jnp.float32(f0))
-    budget = jnp.float32(config.budget)
 
     trace = Trace(config, f0=f0, g0=float(state.g_used))
     trace.add_evals(2 * c)
@@ -188,20 +212,21 @@ def solve_optpes(problem: SCSKProblem, config: SolveConfig,
     rounds = 0
     while len(order) < max_sel and rounds < rounds_cap:
         round_state, did, any_feasible, j_star = optpes_round(
-            problem, round_state, budget, k=k)
+            problem, round_state, constraint, k=k)
         rounds += 1
         trace.add_evals(2 * k)
         if not bool(any_feasible):
             break
         if bool(did):
             order.append(int(j_star))
-            trace.on_select(float(round_state[8]), float(round_state[3]))
+            trace.on_select(float(round_state[8]),
+                            float(jnp.sum(round_state[3])))
             if trace.should_stop():
                 break
 
     final = SolverState(
         covered_q=round_state[0], covered_d=round_state[1],
-        selected=round_state[2], g_used=round_state[3],
+        selected=round_state[2], g_used=jnp.sum(round_state[3]),
         step=state.step + len(order))
     return trace.result(f"optpes-k{k}", problem, final, order)
 

@@ -115,6 +115,28 @@ class SCSKProblem:
             step=jnp.int32(0),
         )
 
+    def state_for(self, kept: np.ndarray) -> SolverState:
+        """Exact `SolverState` for a clause subset, as if it were a solve
+        prefix: covered bitsets re-OR'd on host, `g_used` recomputed."""
+        kept = np.asarray(kept, np.int64)
+        selected = np.zeros(self.n_clauses, bool)
+        selected[kept] = True
+        if len(kept):
+            covered_q = np.bitwise_or.reduce(
+                np.asarray(self.clause_query_bits)[kept], axis=0)
+            covered_d = np.bitwise_or.reduce(
+                np.asarray(self.clause_doc_bits)[kept], axis=0)
+        else:
+            covered_q = np.zeros(self.wq, np.uint32)
+            covered_d = np.zeros(self.wd, np.uint32)
+        return SolverState(
+            covered_q=jnp.asarray(covered_q),
+            covered_d=jnp.asarray(covered_d),
+            selected=jnp.asarray(selected),
+            g_used=jnp.float32(int(np.bitwise_count(covered_d).sum())),
+            step=jnp.int32(len(kept)),
+        )
+
     def apply(self, state: SolverState, j: jax.Array) -> SolverState:
         """Select clause j: fold its coverage into the state. jit-safe."""
         covered_q, covered_d = self.add_clause(state.covered_q,
@@ -136,17 +158,33 @@ class SCSKProblem:
         a = self.clause_query_bits if rows is None else rows
         return ops.bit_matvec(a, x[:, None])[:, 0]
 
-    def g_gains(self, covered_d: jax.Array, *, rows: jax.Array | None = None) -> jax.Array:
-        """g(j|X) for all clauses (or a gathered row subset)."""
+    def g_gains(self, covered_d: jax.Array, *, rows: jax.Array | None = None,
+                bounds: tuple[int, ...] | None = None) -> jax.Array:
+        """g(j|X) for all clauses (or a gathered row subset).
+
+        With `bounds` (word offsets of a doc-space partition, see
+        `core.constraint`), returns the per-partition cost-gain matrix
+        g_k(j|X) as f32 [C, P] via the batched `ops.partition_gain` kernel;
+        without it, the scalar-knapsack f32 [C] path is unchanged.
+        """
         a = self.clause_doc_bits if rows is None else rows
-        return ops.coverage_gain(a, covered_d).astype(jnp.float32)
+        if bounds is None:
+            return ops.coverage_gain(a, covered_d).astype(jnp.float32)
+        return ops.partition_gain(a, covered_d, bounds).astype(jnp.float32)
 
     def f_value(self, covered_q: jax.Array, *, weights: jax.Array | None = None) -> jax.Array:
         w = self.query_weights if weights is None else weights
         return jnp.sum(w * bitset.unpack(covered_q).astype(jnp.float32))
 
-    def g_value(self, covered_d: jax.Array) -> jax.Array:
-        return bitset.popcount(covered_d).sum().astype(jnp.float32)
+    def g_value(self, covered_d: jax.Array,
+                bounds: tuple[int, ...] | None = None) -> jax.Array:
+        """g(X) = |covered_d|; with `bounds`, the per-partition fills
+        g_k(X) as f32 [P]."""
+        if bounds is None:
+            return bitset.popcount(covered_d).sum().astype(jnp.float32)
+        return jnp.stack(
+            [bitset.popcount(covered_d[lo:hi]).sum()
+             for lo, hi in zip(bounds, bounds[1:])]).astype(jnp.float32)
 
     def add_clause(self, covered_q: jax.Array, covered_d: jax.Array, j: jax.Array):
         return (covered_q | self.clause_query_bits[j],

@@ -20,7 +20,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import numpy as np
+
 from repro.core.config import SolveConfig
+from repro.core.constraint import resolve_constraint
 from repro.core.problem import SolverResult
 from repro.core.state import SolverState
 
@@ -33,6 +36,7 @@ class SolverSpec:
     fn: Callable  # (problem, config, state) -> SolverResult
     supports_state: bool = False     # accepts state= for warm starts
     supports_truncate: bool = False  # implements stop_policy="truncate"
+    supports_partition: bool = False  # masks per-partition knapsack caps
     needs_data: bool = False         # consumes TieringData, not SCSKProblem
     description: str = ""
 
@@ -43,6 +47,7 @@ class SolverSpec:
 
 def register_solver(name: str, *, supports_state: bool = False,
                     supports_truncate: bool = False,
+                    supports_partition: bool = False,
                     needs_data: bool = False, description: str = ""):
     """Decorator: register `fn(problem, config, state=None) -> SolverResult`."""
     def deco(fn):
@@ -50,7 +55,8 @@ def register_solver(name: str, *, supports_state: bool = False,
             raise ValueError(f"solver {name!r} already registered")
         _REGISTRY[name] = SolverSpec(
             name=name, fn=fn, supports_state=supports_state,
-            supports_truncate=supports_truncate, needs_data=needs_data,
+            supports_truncate=supports_truncate,
+            supports_partition=supports_partition, needs_data=needs_data,
             description=description or (fn.__doc__ or "").strip().split("\n")[0])
         return fn
     return deco
@@ -78,7 +84,21 @@ def solve(problem, config: SolveConfig,
     if config.stop_policy == "truncate" and not spec.supports_truncate:
         raise ValueError(
             f"solver {spec.name!r} does not implement stop_policy='truncate'")
-    return spec.fn(problem, config, state)
+    if config.partitioned and not spec.supports_partition:
+        raise ValueError(
+            f"solver {spec.name!r} does not implement partitioned budgets "
+            f"(budget_split); solvers that do: "
+            f"{[n for n, s in _REGISTRY.items() if s.supports_partition]}")
+    result = spec.fn(problem, config, state)
+    if config.partitioned and result.state is not None:
+        # per-partition fill report: g_k(X) and the caps, for observability
+        # and the per-shard acceptance checks (tests, launch --verify)
+        constraint = resolve_constraint(problem, config)
+        result.extra["g_part"] = constraint.np_value(
+            np.asarray(result.state.covered_d))
+        result.extra["caps"] = np.asarray(constraint.caps, np.float64)
+        result.extra["bounds"] = constraint.bounds
+    return result
 
 
 def solve_sweep(problem, budgets: list[float],
@@ -104,11 +124,24 @@ def solve_sweep(problem, budgets: list[float],
             f"selection path); solvers that can: "
             f"{[n for n, s in _REGISTRY.items() if s.supports_state and s.supports_truncate]}")
     cfg = config.replace(stop_policy="truncate")
+    base_constraint = None
+    if config.partitioned:
+        # per-point constraints keep the SAME split shares, rescaled to each
+        # total; the truncate ranking never reads the caps, so the selection
+        # path stays budget-independent and warm == cold per point
+        base_constraint = resolve_constraint(problem, config)
+        if not hasattr(base_constraint, "scaled"):
+            raise ValueError("budget_split sweeps need a PartitionedBudget "
+                             "(or a constraint implementing .scaled)")
     state = None
     results: list[SolverResult] = []
     order: list[int] = []
     for b in budgets:
-        r = solve(problem, cfg.replace(budget=float(b)), state=state)
+        step_cfg = cfg.replace(budget=float(b))
+        if base_constraint is not None:
+            step_cfg = step_cfg.replace(
+                constraint=base_constraint.scaled(float(b)))
+        r = solve(problem, step_cfg, state=state)
         order = order + r.order
         r.order = list(order)
         results.append(r)

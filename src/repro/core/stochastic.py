@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import SolveConfig
+from repro.core.constraint import resolve_constraint
 from repro.core.greedy import ratio_of
 from repro.core.problem import SCSKProblem, SolverResult
 from repro.core.registry import register_solver
@@ -29,10 +30,13 @@ from repro.core.trace import Trace
 
 
 @jax.jit
-def _stochastic_step(problem: SCSKProblem, state: SolverState, budget, w_mb):
+def _stochastic_step(problem: SCSKProblem, state: SolverState, constraint,
+                     w_mb):
     fg = problem.f_gains(state.covered_q, weights=w_mb)  # minibatch estimate
-    gg = problem.g_gains(state.covered_d)                # exact cost
-    feasible = (~state.selected) & (state.g_used + gg <= budget) & (fg > 0.0)
+    gg, gg_part = constraint.gains(problem, state.covered_d)  # exact cost
+    used = constraint.used(problem, state)
+    feasible = (~state.selected) & constraint.feasible(used, gg_part) \
+        & (fg > 0.0)
     score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
     j = jnp.argmax(score)
     stop = ~feasible[j]
@@ -42,7 +46,7 @@ def _stochastic_step(problem: SCSKProblem, state: SolverState, budget, w_mb):
     return state, j, stop
 
 
-@register_solver("stochastic", supports_state=True,
+@register_solver("stochastic", supports_state=True, supports_partition=True,
                  description="minibatch-f greedy (§3.2, Karimi-style)")
 def solve_stochastic(problem: SCSKProblem, config: SolveConfig,
                      state: SolverState | None = None) -> SolverResult:
@@ -53,7 +57,7 @@ def solve_stochastic(problem: SCSKProblem, config: SolveConfig,
     n = len(probs)
 
     state = problem.init_state() if state is None else state
-    budget = jnp.float32(config.budget)
+    constraint = resolve_constraint(problem, config)
     trace = Trace(config, f0=float(problem.f_value(state.covered_q)),
                   g0=float(state.g_used))
     order: list[int] = []
@@ -62,7 +66,7 @@ def solve_stochastic(problem: SCSKProblem, config: SolveConfig,
         idx = rng.choice(n, size=batch_queries, p=probs)
         counts = np.bincount(idx, minlength=n).astype(np.float32)
         w_mb = jnp.asarray(counts / batch_queries)
-        state, j, stop = _stochastic_step(problem, state, budget, w_mb)
+        state, j, stop = _stochastic_step(problem, state, constraint, w_mb)
         if bool(stop):
             break
         order.append(int(j))

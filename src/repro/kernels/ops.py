@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import bit_matvec as _bm
 from repro.kernels import clause_match as _cm
 from repro.kernels import coverage_gain as _cg
+from repro.kernels import partition_gain as _pg
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_gain as _sg
 from repro.kernels.tiles import block_dim  # noqa: F401  (public re-export)
@@ -115,6 +116,35 @@ def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
     if b == "interpret":
         return _cm.clause_match(query_bits, clause_bits, interpret=True)
     return _clause_match_xla(query_bits, clause_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bounds",))
+def _partition_gain_xla(a_bits: jnp.ndarray, mask: jnp.ndarray,
+                        bounds: tuple[int, ...]) -> jnp.ndarray:
+    """Integer-exact per-partition slice popcounts; peak memory is bounded by
+    C * widest-partition (each column materializes one word slice)."""
+    cols = [jnp.sum(jax.lax.population_count(
+                a_bits[:, lo:hi] & ~mask[None, lo:hi]).astype(jnp.int32),
+                axis=-1)
+            for lo, hi in zip(bounds, bounds[1:])]
+    return jnp.stack(cols, axis=-1)
+
+
+def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
+                   bounds, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C, P]: per-partition popcount(a & ~mask) over word ranges.
+
+    `bounds` is the word-offset cut list (len P+1, bounds[0]=0, bounds[-1]=W)
+    of a word-aligned doc-space partition — the batched g_k(.|X) oracle
+    behind `core.constraint.PartitionedBudget`.
+    """
+    bounds = tuple(int(b) for b in bounds)
+    b = resolve_backend(backend)
+    if b == "pallas":
+        return _pg.partition_gain(a_bits, mask, bounds)
+    if b == "interpret":
+        return _pg.partition_gain(a_bits, mask, bounds, interpret=True)
+    return _partition_gain_xla(a_bits, mask, bounds)
 
 
 def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:

@@ -39,6 +39,11 @@ def main() -> None:
     ap.add_argument("--strength", type=float, default=1.0)
     ap.add_argument("--solver", default="greedy")
     ap.add_argument("--budget-frac", type=float, default=0.5)
+    ap.add_argument("--budget-split", default="",
+                    help="shard-aware budgets: 'traffic' (size per-shard "
+                         "caps from observed traffic shares; refits "
+                         "re-allocate) or comma caps like '60,40'; empty = "
+                         "one global budget")
     ap.add_argument("--min-support", type=float, default=1e-3)
     ap.add_argument("--rate", type=float, default=20000.0,
                     help="loadgen offered load, queries/s")
@@ -56,15 +61,27 @@ def main() -> None:
           f"scenario={args.scenario} windows={args.windows} "
           f"qpw={args.queries_per_window} strength={args.strength} "
           f"solver={args.solver} budget_frac={args.budget_frac} "
+          f"budget_split={args.budget_split or '-'} "
           f"shards={args.shards} t1_replicas={args.replicas} "
           f"t2_replicas={args.t2_replicas}")
+    budget_split = None
+    if args.budget_split == "traffic":
+        budget_split = "traffic"
+    elif args.budget_split:
+        budget_split = [float(c) for c in args.budget_split.split(",")]
     t0 = time.time()
     pipe = (api.TieringPipeline.from_synthetic(seed=args.seed,
                                                scale=args.scale)
             .mine(min_support=args.min_support)
-            .solve(args.solver, budget_frac=args.budget_frac))
+            .solve(args.solver, budget_frac=args.budget_frac,
+                   budget_split=budget_split, n_shards=args.shards))
     print(f"[cluster] offline solve: {pipe.result.summary()}  "
           f"({time.time() - t0:.1f}s)")
+    if budget_split is not None:
+        caps = pipe.result.extra["caps"]
+        fill = pipe.result.extra["g_part"]
+        print(f"[cluster] per-shard budgets B_k={[int(c) for c in caps]}  "
+              f"fill g_k={[int(g) for g in fill]}")
 
     # -- 1. strong-scaling loadgen sweep -------------------------------------
     sweep = [int(s) for s in args.sweep.split(",") if s] or [args.shards]
@@ -122,9 +139,21 @@ def main() -> None:
                                      "serving diverged from single-tier "
                                      "matching on the direct probe")
             direct_checks = len(probe)
+        if budget_split is not None:
+            # per-shard Tier-1 doc counts must respect every cap B_k
+            caps = pipe.result.extra["caps"]
+            t1 = pipe.tiering().tier1_docs
+            for s, cap in zip(fleet.shards, caps):
+                local = int(t1[s.doc_lo:s.doc_lo + s.n_docs].sum())
+                if local > cap:
+                    raise SystemExit(
+                        f"[cluster] BUDGET FAILURE: shard {s.index} holds "
+                        f"{local} Tier-1 docs > cap {cap:.0f}")
         print(f"[cluster] verified: {report.n_parity_checks} swap parity "
               f"checks + {direct_checks} direct probes ok, "
-              f"{len(fleet.trace)} batches pair-consistent")
+              f"{len(fleet.trace)} batches pair-consistent"
+              + (", per-shard caps respected" if budget_split is not None
+                 else ""))
     if static is not None:
         delta = report.mean_coverage - static.mean_coverage
         print(f"[cluster] mean windowed tier-1 coverage: "

@@ -23,10 +23,11 @@ import time
 
 import numpy as np
 
+from repro.core import bitset
 from repro.serve.engine import ServeStats, TieredEngine
 from repro.stream.detector import DriftDetector
 from repro.stream.drift import TrafficSimulator, TrafficWindow
-from repro.stream.window import LogAccumulator, prune_state
+from repro.stream.window import LogAccumulator, prune_partitions, prune_state
 
 
 @dataclasses.dataclass
@@ -43,6 +44,8 @@ class WindowReport:
     pruned: int = 0              # clauses dropped before the warm start
     generation: int = 0          # engine generation serving this window's END
     parity_ok: bool | None = None  # Theorem-3.1 spot check (verify_swaps)
+    shard_tv: tuple[float, ...] = ()  # per-shard TV drift (partitioned only)
+    scope: tuple[int, ...] = ()  # shards a scoped warm refit re-tiered
 
     def line(self) -> str:
         refit = f"refit={self.refit}({self.refit_steps} steps, " \
@@ -50,9 +53,10 @@ class WindowReport:
                 else "refit=-"
         parity = "" if self.parity_ok is None else \
             f"  parity={'ok' if self.parity_ok else 'FAIL'}"
+        scope = f"  scope={list(self.scope)}" if self.scope else ""
         return (f"window {self.index:3d}  cov={self.coverage:.3f}  "
                 f"saving={self.cost_saving:.3f}  tv={self.tv_distance:.3f}  "
-                f"{refit}  gen={self.generation}{parity}")
+                f"{refit}  gen={self.generation}{scope}{parity}")
 
 
 @dataclasses.dataclass
@@ -108,7 +112,9 @@ class RetieringController:
                  detector: DriftDetector | None = None,
                  warm: bool = True, enable_refit: bool = True,
                  prune_below: float = 2e-3, cold_fallback: bool = True,
-                 blend_prior: float = 0.35, verify_swaps: bool = False):
+                 blend_prior: float = 0.35, verify_swaps: bool = False,
+                 scoped: bool = True, shard_tv_threshold: float = 0.15,
+                 scope_frac: float = 0.5):
         self.pipe = pipe
         self.engine = engine if engine is not None else pipe.deploy()
         self.queries = pipe.log.queries
@@ -135,6 +141,25 @@ class RetieringController:
         self._baseline_tiering = self.engine.tiering
         self._elig_cache: list = []    # (tiering, eligibility mask) pairs
         self.cumulative = ServeStats()
+        # shard-aware re-tiering: when the pipe solved with a budget_split,
+        # track each doc partition's traffic distribution so refits can be
+        # SCOPED — only the drifted shards' clauses are unfrozen and only
+        # their caps get re-spent (global drift still re-solves everything)
+        self.scoped = scoped
+        self.shard_tv_threshold = shard_tv_threshold
+        self.scope_frac = scope_frac
+        self._bounds: tuple[int, ...] | None = None
+        if pipe.config is not None and pipe.config.partitioned and \
+                pipe.data is not None:
+            from repro.core.constraint import resolve_constraint
+            constraint = resolve_constraint(pipe.problem, pipe.config)
+            self._bounds = constraint.bounds
+            qdb = pipe.data.query_doc_bits
+            # mass[q, k] = |m(q) ∩ D_k|: each query's demand on shard k
+            self._shard_mass = np.stack(
+                [bitset.np_popcount(qdb[:, lo:hi]).astype(np.float64)
+                 for lo, hi in zip(self._bounds, self._bounds[1:])], axis=1)
+            self._shard_ref = self._shard_dists(self.accumulator.weights())
         self.detector.rebase(self.accumulator.weights(),
                              self.predicted_coverage(self.accumulator.weights()))
 
@@ -157,6 +182,25 @@ class RetieringController:
         """Tier-1 eligible mass of `weights` under the DEPLOYED tiering."""
         return self.coverage_of(self.engine.tiering, weights)
 
+    # -- per-shard drift ------------------------------------------------------
+    def _shard_dists(self, weights: np.ndarray) -> np.ndarray:
+        """Per-shard query distributions [Nq, P]: column k is the traffic a
+        shard k machine sees, dist_k(q) ∝ w(q)·|m(q) ∩ D_k|."""
+        d = np.asarray(weights, np.float64)[:, None] * self._shard_mass
+        s = d.sum(axis=0)
+        d = np.divide(d, s[None, :], out=np.full_like(d, 0.0),
+                      where=s[None, :] > 0)
+        d[:, s <= 0] = 1.0 / d.shape[0]
+        return d
+
+    def shard_drift(self, weights: np.ndarray) -> np.ndarray:
+        """TV distance per shard between its CURRENT traffic distribution
+        and the one at the last refit. Empty when the solve is unpartitioned."""
+        if self._bounds is None:
+            return np.empty(0)
+        cur = self._shard_dists(weights)
+        return 0.5 * np.abs(cur - self._shard_ref).sum(axis=0)
+
     # -- the loop -------------------------------------------------------------
     def step(self, window: TrafficWindow) -> WindowReport:
         self.engine.stats.reset()
@@ -173,7 +217,8 @@ class RetieringController:
         report = WindowReport(
             index=window.index, stats=wstats,
             coverage=wstats.tier1_fraction, cost_saving=wstats.cost_saving,
-            tv_distance=signal.tv_distance, generation=self.engine.generation)
+            tv_distance=signal.tv_distance, generation=self.engine.generation,
+            shard_tv=tuple(float(t) for t in self.shard_drift(weights)))
         if signal.triggered and self.enable_refit:
             lam = self.blend_prior
             solve_w = (1.0 - lam) * weights + lam * self._prior
@@ -200,6 +245,19 @@ class RetieringController:
                 self.pipe.problem, prev.state, weights=solve_w,
                 min_unique_mass=self.prune_below)
             report.pruned = len(dropped)
+            if self._bounds is not None and self.scoped:
+                # scope the re-solve: unfreeze ONLY the drifted shards'
+                # clauses (a drift everywhere degenerates to a full warm
+                # re-solve, which is exactly right)
+                tv = self.shard_drift(raw_w)
+                drifted = tuple(int(k) for k in
+                                np.nonzero(tv > self.shard_tv_threshold)[0])
+                if drifted:
+                    state, _, unfrozen = prune_partitions(
+                        self.pipe.problem, state, self._bounds, drifted,
+                        scope_frac=self.scope_frac)
+                    report.scope = drifted
+                    report.pruned += len(unfrozen)
             self.pipe.refit(solve_w, state=state)
             kind = "warm"
             baseline_cov = self.coverage_of(self._baseline_tiering, solve_w)
@@ -210,11 +268,14 @@ class RetieringController:
                 self.pipe.refit(solve_w, state=None)
                 kind = "cold"
                 report.pruned = 0          # cold solves don't prune
+                report.scope = ()          # ... and aren't scoped
         else:
             self.pipe.refit(solve_w, state=None)
         buf = self.engine.prepare_tiering(self.pipe.tiering())  # off-path
         report.generation = self.engine.swap_tiering(buf)       # atomic
         self.detector.rebase(raw_w, self.predicted_coverage(raw_w))
+        if self._bounds is not None:
+            self._shard_ref = self._shard_dists(raw_w)
         report.refit = kind
         report.refit_steps = len(self.pipe.result.order)
         report.refit_seconds = time.perf_counter() - t0

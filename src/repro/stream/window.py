@@ -11,6 +11,12 @@ weighted query coverage under the CURRENT distribution has decayed to
 nothing. That frees knapsack budget (g) for clauses matching the new traffic
 while keeping every still-hot clause — so the warm solve only pays for the
 drift delta, not a from-scratch path.
+
+`prune_partitions` scopes a warm re-solve to the doc-space partitions that
+actually drifted (shard-aware re-tiering): selected clauses whose document
+mass is concentrated in the drifted shards are unfrozen (dropped, freeing
+their per-shard budget for the re-solve); every other clause stays in the
+warm prefix, so the solver effectively only re-tier the drifted shards.
 """
 from __future__ import annotations
 
@@ -119,21 +125,42 @@ def prune_state(problem: SCSKProblem, state: SolverState, *,
         return state, idx.astype(np.int64), empty
 
     kept = idx[~drop].astype(np.int64)
-    new_selected = np.zeros(problem.n_clauses, bool)
-    new_selected[kept] = True
-    if len(kept):
-        covered_q = np.bitwise_or.reduce(
-            np.asarray(problem.clause_query_bits)[kept], axis=0)
-        covered_d = np.bitwise_or.reduce(
-            np.asarray(problem.clause_doc_bits)[kept], axis=0)
-    else:
-        covered_q = np.zeros(problem.wq, np.uint32)
-        covered_d = np.zeros(problem.wd, np.uint32)
-    new_state = SolverState(
-        covered_q=jnp.asarray(covered_q),
-        covered_d=jnp.asarray(covered_d),
-        selected=jnp.asarray(new_selected),
-        g_used=jnp.float32(int(bitset.np_popcount(covered_d).sum())),
-        step=jnp.int32(len(kept)),
-    )
-    return new_state, kept, idx[drop].astype(np.int64)
+    return rebuild_state(problem, kept), kept, idx[drop].astype(np.int64)
+
+
+def rebuild_state(problem: SCSKProblem, kept: np.ndarray) -> SolverState:
+    """Exact `SolverState` for a clause subset, as if it were a solve prefix
+    (covered bitsets re-OR'd, `g_used` recomputed)."""
+    return problem.state_for(kept)
+
+
+def prune_partitions(problem: SCSKProblem, state: SolverState,
+                     bounds: tuple[int, ...], parts,
+                     *, scope_frac: float = 0.5,
+                     ) -> tuple[SolverState, np.ndarray, np.ndarray]:
+    """Unfreeze the clauses living in drifted doc partitions.
+
+    Drops every selected clause whose document mass inside the partitions
+    `parts` (indices into the word-aligned `bounds` split) is at least
+    `scope_frac` of its total mass; returns (state, kept, dropped) like
+    `prune_state`. The kept clauses stay a frozen warm prefix, so a re-solve
+    from the returned state only spends budget re-tiering the drifted
+    shards (plus whatever slack the caps leave elsewhere).
+    """
+    selected = np.asarray(state.selected)
+    idx = np.nonzero(selected)[0].astype(np.int64)
+    parts = sorted(set(int(p) for p in parts))
+    empty = np.empty(0, np.int64)
+    if len(idx) == 0 or not parts:
+        return state, idx, empty
+    rows = np.asarray(problem.clause_doc_bits)[idx]              # [K, Wd]
+    total = bitset.np_popcount(rows).astype(np.float64)
+    in_scope = np.zeros(len(idx), np.float64)
+    for k in parts:
+        lo, hi = bounds[k], bounds[k + 1]
+        in_scope += bitset.np_popcount(rows[:, lo:hi])
+    drop = in_scope >= scope_frac * np.maximum(total, 1.0)
+    if not drop.any():
+        return state, idx, empty
+    kept = idx[~drop]
+    return rebuild_state(problem, kept), kept, idx[drop]

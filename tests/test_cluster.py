@@ -268,6 +268,135 @@ def test_loadgen_rollout_outage_falls_back(tiny_data, tiny_problem):
     assert rolled.fleet_words > quiet.fleet_words  # fallback scans more
 
 
+# -- shard-aware budgets ------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_cluster_per_shard_budgets_exact_and_capped(tiny_data, n_shards):
+    """Exhaustive cluster-vs-oracle with per-shard budgets: every served
+    match set equals single-tier matching AND each shard's local Tier-1
+    doc count respects its cap B_k."""
+    from repro import api
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5, budget_split="traffic", n_shards=n_shards)
+    fleet = pipe.deploy_cluster(t1_replicas=2)       # shards == partitions
+    assert len(fleet.shards) == n_shards
+    queries = tiny_data.log.queries
+    got = []
+    for s in range(0, len(queries), 128):
+        got.extend(fleet.serve(queries[s:s + 128]))
+    want = fleet.serve_reference(queries)
+    for q, a, b in zip(queries, got, want):
+        np.testing.assert_array_equal(a, b, err_msg=str(q))
+    assert fleet.consistency_ok()
+    caps = pipe.result.extra["caps"]
+    t1 = pipe.tiering().tier1_docs
+    buf = fleet.router._buffers[fleet.generation]
+    for s, cap in zip(fleet.shards, caps):
+        local = int(t1[s.doc_lo:s.doc_lo + s.n_docs].sum())
+        assert local <= cap, f"shard {s.index}: {local} > B_k={cap}"
+        # the fleet's compacted sub-index width reflects the same count
+        assert buf.shard_words[s.index] == \
+            (bitset.n_words(local) if local else 0)
+
+
+def test_scoped_rollout_leaves_untouched_shards_alone(tiny_data, tiny_problem):
+    """A re-tiering confined to one shard rolls ONLY that shard's replicas:
+    untouched shards carry their content metadata-only (no drain, no
+    install), serving stays oracle-exact on every mid-roll batch, and no
+    batch pairs a ψ with foreign Tier-1 content."""
+    data = tiny_data
+    tiering = _pipe_parts(data, tiny_problem, solver="greedy")
+    fleet = _fleet(data, tiering, n_shards=2, t1_replicas=2)
+    s1 = fleet.shards[1]
+    # drop a selected clause whose doc coverage lives entirely in shard 1
+    # and whose removal keeps shard 0's local D1 slice intact
+    sel = np.zeros(len(data.clauses), bool)
+    sel[[data.clauses.index(c) for c in tiering.clauses]] = True
+    t_new = None
+    for j in np.nonzero(sel)[0]:
+        row = data.clause_doc_bits[j]
+        if bitset.np_popcount(row[:s1.word_lo]) == 0 and \
+                bitset.np_popcount(row) > 0:
+            trial = sel.copy()
+            trial[j] = False
+            cand = ClauseTiering.from_selection(data, trial)
+            if np.array_equal(cand.tier1_docs[:s1.doc_lo],
+                              tiering.tier1_docs[:s1.doc_lo]) and \
+                    not np.array_equal(cand.tier1_docs, tiering.tier1_docs):
+                t_new = cand
+                break
+    assert t_new is not None, "no shard-1-confined clause in this selection"
+
+    queries = data.log.queries
+    fleet.serve(queries[:64])
+    installs0 = [r.n_installs for g in fleet.router.t1 for r in g]
+    fleet.swap_tiering(t_new)
+    batches = 0
+    while fleet.router.rollout is not None and batches < 30:
+        lo = 64 * (batches % 4)
+        got = fleet.serve(queries[lo:lo + 64])
+        want = fleet.serve_reference(queries[lo:lo + 64])
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+        # 2 replicas on the one changed shard: never a Tier-2 fallback gap
+        assert fleet.trace[-1].psi_generation != -1
+        batches += 1
+    installs1 = [r.n_installs for g in fleet.router.t1 for r in g]
+    delta = [a - b for a, b in zip(installs1, installs0)]
+    assert delta[:2] == [0, 0], "untouched shard replicas re-installed"
+    assert delta[2:] == [1, 1], "changed shard replicas must install once"
+    assert fleet.consistency_ok()
+    assert fleet.router.live_generations() == {1}
+
+
+def test_full_swap_still_rolls_every_replica(tiny_data, tiny_problem):
+    """When every shard's D1 changes, the content carry must NOT kick in —
+    the swap walks all replicas exactly as before."""
+    t_old = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.5)
+    t_new = _pipe_parts(tiny_data, tiny_problem, budget_frac=0.25)
+    fleet = _fleet(tiny_data, t_old, n_shards=2, t1_replicas=2)
+    fleet.swap_tiering(t_new)
+    assert fleet.router.rollout.n_carried == 0
+    n = fleet.router.rollout.run_to_completion()
+    assert n == 4
+
+
+# -- replica autoscaling ------------------------------------------------------
+
+def test_suggest_replicas_saturating_workload(tiny_data, tiny_problem):
+    """On an offered load that saturates a 1x fleet, the autoscaler must
+    grow the replica groups until the p95 SLO holds — deterministically."""
+    tiering = _pipe_parts(tiny_data, tiny_problem)
+    fleet = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=1,
+                   t2_replicas=1)
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    elig = fleet.classify(tiny_data.log.queries[:256])
+    base = cluster.run_loadgen(plan, elig, rate_qps=60000.0, n_queries=2000,
+                               seed=0)
+    slo = base.p95_ms / 4.0          # unreachable without scaling out
+    sug = cluster.suggest_replicas(plan, 60000.0, slo, eligible=elig,
+                                   n_queries=2000, seed=0)
+    assert sug.meets_slo
+    assert sug.report.p95_ms <= slo
+    assert sug.t1_replicas + sug.t2_replicas > 2
+    # deterministic: same inputs, same sizing
+    sug2 = cluster.suggest_replicas(plan, 60000.0, slo, eligible=elig,
+                                    n_queries=2000, seed=0)
+    assert (sug.t1_replicas, sug.t2_replicas) == \
+        (sug2.t1_replicas, sug2.t2_replicas)
+    assert sug.report == sug2.report
+
+
+def test_fit_service_model_recovers_linear_law(rng):
+    words = np.asarray([16, 64, 256, 1024, 4096], np.float64)
+    t_fixed, t_word = 18.0, 3.5
+    us = t_fixed + words * t_word + rng.normal(0, 0.01, size=words.shape)
+    fit = cluster.fit_service_model(words, us)
+    assert fit["t_fixed_us"] == pytest.approx(t_fixed, abs=0.1)
+    assert fit["t_word_us"] == pytest.approx(t_word, rel=1e-3)
+    assert fit["r2"] > 0.9999
+
+
 # -- facade -------------------------------------------------------------------
 
 def test_deploy_cluster_facade(tiny_data):

@@ -1,0 +1,338 @@
+"""Partitioned-knapsack constraint core.
+
+The load-bearing guarantees:
+  * `GlobalBudget` is BIT-IDENTICAL to the pre-refactor inline-budget
+    solvers — pinned against an in-test reimplementation of the original
+    greedy step (the semantics of record), for the full selection order.
+  * A one-partition `PartitionedBudget` equals `GlobalBudget` exactly.
+  * Multi-partition caps are hard: every solver's per-shard fill g_k(X)
+    respects B_k, and a clause is masked the moment ANY partition it
+    touches would overflow — even when the global budget has room.
+  * The batched per-partition cost-gain kernel agrees across backends and
+    with brute force.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GlobalBudget, PartitionedBudget, SCSKProblem,
+                        SolveConfig, partition_bounds, registry)
+from repro.core.greedy import BIG
+
+PARTITION_SOLVERS = ("greedy", "lazy", "optpes", "stochastic")
+
+
+def _budget(data, frac=0.5) -> float:
+    return float(int(data.n_docs * frac))
+
+
+# -- GlobalBudget bit-identity (regression vs the pre-refactor semantics) ----
+
+def _reference_greedy_order(problem: SCSKProblem, budget: float) -> list[int]:
+    """The ORIGINAL inline-budget greedy step, reimplemented verbatim:
+    feasible = ~selected & (f>0) & (g_used + gg <= budget); score = f/g with
+    the BIG stand-in for free clauses; argmax; stop at first infeasible."""
+    state = problem.init_state()
+    order = []
+    budget = jnp.float32(budget)
+    for _ in range(problem.n_clauses):
+        fg = problem.f_gains(state.covered_q)
+        gg = problem.g_gains(state.covered_d)
+        candidates = (~state.selected) & (fg > 0.0)
+        feasible = candidates & (state.g_used + gg <= budget)
+        score = jnp.where(gg <= 0.0, fg * BIG, fg / jnp.maximum(gg, 1e-30))
+        score = jnp.where(feasible, score, -jnp.inf)
+        j = int(jnp.argmax(score))
+        if not bool(feasible[j]):
+            break
+        state = problem.apply(state, jnp.int32(j))
+        order.append(j)
+    return order
+
+
+def test_global_budget_bit_identical_to_pre_refactor_greedy(tiny_data,
+                                                            tiny_problem):
+    b = _budget(tiny_data)
+    want = _reference_greedy_order(tiny_problem, b)
+    got = registry.solve(tiny_problem, SolveConfig(budget=b, solver="greedy"))
+    assert got.order == want
+
+
+@pytest.mark.parametrize("solver", PARTITION_SOLVERS)
+def test_single_partition_equals_global(tiny_data, tiny_problem, solver):
+    """P=1 partitioned caps reduce to the scalar knapsack, selection-exact."""
+    b = _budget(tiny_data)
+    r_global = registry.solve(tiny_problem,
+                              SolveConfig(budget=b, solver=solver, seed=3))
+    r_one = registry.solve(tiny_problem,
+                           SolveConfig(budget=b, solver=solver, seed=3,
+                                       budget_split=[b]))
+    assert r_one.order == r_global.order
+    np.testing.assert_array_equal(r_one.selected, r_global.selected)
+
+
+def test_explicit_global_constraint_equals_budget(tiny_data, tiny_problem):
+    b = _budget(tiny_data)
+    r1 = registry.solve(tiny_problem, SolveConfig(budget=b, solver="greedy"))
+    r2 = registry.solve(tiny_problem, SolveConfig(
+        budget=b, solver="greedy", constraint=GlobalBudget(budget=b)))
+    assert r1.order == r2.order
+
+
+# -- per-partition caps are hard ---------------------------------------------
+
+@pytest.mark.parametrize("solver", PARTITION_SOLVERS)
+def test_partitioned_caps_respected(tiny_data, tiny_problem, solver):
+    b = _budget(tiny_data)
+    split = {0: 0.7 * b, 1: 0.3 * b}
+    r = registry.solve(tiny_problem, SolveConfig(
+        budget=b, solver=solver, budget_split=split))
+    caps = r.extra["caps"]
+    assert np.all(r.extra["g_part"] <= caps + 1e-6)
+    assert r.g_final <= caps.sum() + 1e-6
+    # the fill report is consistent with the final covered bitset
+    bounds = r.extra["bounds"]
+    cd = np.asarray(r.state.covered_d)
+    for k, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        assert r.extra["g_part"][k] == np.bitwise_count(cd[lo:hi]).sum()
+
+
+def test_partition_masks_clause_global_budget_would_admit():
+    """A clause whose docs all land in a FULL partition must be skipped even
+    though the global budget still has room — the structural difference
+    between one knapsack and per-shard caps."""
+    # 2 partitions x 1 word. clause 0: 8 docs in part 0; clause 1: 8 docs in
+    # part 1; clause 2: 8 MORE docs in part 0. Caps [16, 16]... then cap
+    # part 0 at 8: greedy takes clause 0 (or 2), then must skip the other
+    # part-0 clause and take clause 1, despite 24 <= 32 globally.
+    cq = np.zeros((3, 1), np.uint32)
+    cq[0, 0] = 0b0001            # each clause covers a distinct query
+    cq[1, 0] = 0b0010
+    cq[2, 0] = 0b0100
+    cd = np.zeros((3, 2), np.uint32)
+    cd[0, 0] = 0x000000FF        # 8 docs, partition 0
+    cd[1, 1] = 0x000000FF        # 8 docs, partition 1
+    cd[2, 0] = 0x0000FF00        # 8 different docs, partition 0
+    w = np.zeros(32, np.float32)
+    w[:3] = [0.5, 0.3, 0.4]      # clause 0 best, then 2, then 1
+    problem = SCSKProblem(
+        clause_query_bits=jnp.asarray(cq), clause_doc_bits=jnp.asarray(cd),
+        query_weights=jnp.asarray(w), test_weights=jnp.asarray(w),
+        n_queries=3, n_docs=64)
+    r_global = registry.solve(problem, SolveConfig(budget=24.0,
+                                                   solver="greedy"))
+    assert set(r_global.order) == {0, 1, 2}  # global: everything fits in 24
+    r_split = registry.solve(problem, SolveConfig(
+        budget=24.0, solver="greedy", budget_split=[8.0, 16.0]))
+    assert r_split.order == [0, 1]           # part 0 full after clause 0
+    np.testing.assert_array_equal(np.asarray(r_split.extra["g_part"]),
+                                  [8.0, 8.0])
+
+
+def test_unsupported_solver_rejects_budget_split(tiny_data, tiny_problem):
+    with pytest.raises(ValueError, match="partitioned"):
+        registry.solve(tiny_problem, SolveConfig(
+            budget=100.0, solver="isk1", budget_split=[50.0, 50.0]))
+
+
+def test_registry_rejects_unresolved_traffic_split(tiny_problem):
+    with pytest.raises(ValueError, match="traffic"):
+        registry.solve(tiny_problem, SolveConfig(
+            budget=100.0, solver="greedy", budget_split="traffic"))
+
+
+# -- partitioned sweeps -------------------------------------------------------
+
+def test_partitioned_sweep_matches_cold_solves(tiny_data, tiny_problem):
+    """Warm-started split sweeps equal cold truncate solves per point: the
+    truncate ranking never reads the caps, so the path is budget-free."""
+    b = _budget(tiny_data)
+    budgets = [b / 2, b]
+    base = PartitionedBudget.from_split(tiny_problem.n_docs,
+                                        [0.6 * b, 0.4 * b])
+    cfg = SolveConfig(budget=b, solver="greedy", constraint=base)
+    warm = registry.solve_sweep(tiny_problem, budgets, cfg)
+    for bb, r in zip(budgets, warm):
+        cold = registry.solve(tiny_problem, cfg.replace(
+            budget=float(bb), stop_policy="truncate",
+            constraint=base.scaled(float(bb))))
+        assert r.order == cold.order
+        np.testing.assert_array_equal(r.selected, cold.selected)
+        assert np.all(r.extra["g_part"] <= base.scaled(bb).caps + 1e-6)
+
+
+# -- the batched per-partition cost-gain kernel ------------------------------
+
+@pytest.mark.parametrize("c,w,parts", [(37, 11, 3), (5, 3, 1), (130, 33, 5),
+                                       (64, 8, 8)])
+def test_partition_gain_backends_agree(rng, c, w, parts):
+    from repro.kernels import ops
+    bounds = partition_bounds(w * 32, parts)
+    a = rng.integers(0, 2 ** 32, size=(c, w), dtype=np.uint32)
+    m = rng.integers(0, 2 ** 32, size=(w,), dtype=np.uint32)
+    want = np.stack(
+        [np.bitwise_count(a[:, lo:hi] & ~m[lo:hi]).sum(1, dtype=np.int64)
+         for lo, hi in zip(bounds, bounds[1:])], -1)
+    for backend in ("xla", "interpret"):
+        got = np.asarray(ops.partition_gain(
+            jnp.asarray(a), jnp.asarray(m), bounds, backend=backend))
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+    # totals equal the scalar coverage-gain oracle
+    cg = np.asarray(ops.coverage_gain(jnp.asarray(a), jnp.asarray(m)))
+    np.testing.assert_array_equal(want.sum(-1), cg)
+
+
+def test_problem_g_value_per_partition(tiny_problem, rng):
+    bounds = partition_bounds(tiny_problem.n_docs, 3)
+    cd = rng.integers(0, 2 ** 32, size=(tiny_problem.wd,), dtype=np.uint32)
+    got = np.asarray(tiny_problem.g_value(jnp.asarray(cd), bounds=bounds))
+    assert got.sum() == float(tiny_problem.g_value(jnp.asarray(cd)))
+    for k, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        assert got[k] == np.bitwise_count(cd[lo:hi]).sum()
+
+
+# -- bounds + allocator ------------------------------------------------------
+
+def test_partition_bounds_matches_plan_shards():
+    from repro.cluster import plan_shards
+    for n_docs, p in [(200, 2), (200, 4), (33, 4), (1, 3), (4096, 7)]:
+        bounds = partition_bounds(n_docs, p)
+        shards = plan_shards(n_docs, p)
+        assert bounds[0] == 0
+        assert len(bounds) - 1 == len(shards)
+        for s, (lo, hi) in zip(shards, zip(bounds, bounds[1:])):
+            assert (s.word_lo, s.word_hi) == (lo, hi)
+
+
+def test_partition_budgets_allocator():
+    from repro.api import partition_budgets
+    caps = partition_budgets([100, 100, 100], [0.5, 0.3, 0.2], 90)
+    assert sum(caps.values()) == 90
+    assert caps[0] >= caps[1] >= caps[2]           # monotone in share
+    # capacity clamp + redistribution: shard 0 can only hold 10
+    caps = partition_budgets([10, 100, 100], [0.9, 0.05, 0.05], 90)
+    assert caps[0] == 10 and sum(caps.values()) == 90
+    assert all(caps[k] <= c for k, c in enumerate([10, 100, 100]))
+    # zero-share shards still absorb overflow rather than losing budget
+    caps = partition_budgets([10, 10, 100], [1.0, 0.0, 0.0], 60)
+    assert sum(caps.values()) == 60 and caps[0] == 10
+    with pytest.raises(ValueError, match="capacity"):
+        partition_budgets([10, 10], [0.5, 0.5], 50)
+
+
+def test_shard_traffic_shares(tiny_data):
+    from repro.api import shard_traffic_shares
+    bounds = partition_bounds(tiny_data.n_docs, 2)
+    w = np.asarray(tiny_data.log.train_weights, np.float64)
+    shares = shard_traffic_shares(tiny_data.query_doc_bits, w, bounds)
+    assert shares.shape == (2,)
+    assert abs(shares.sum() - 1.0) < 1e-12
+    assert np.all(shares >= 0)
+    # moving all weight onto queries matching only shard-0 docs must tilt
+    # the share toward shard 0
+    mass0 = np.bitwise_count(
+        tiny_data.query_doc_bits[:, :bounds[1]]).sum(1, dtype=np.int64)
+    mass1 = np.bitwise_count(
+        tiny_data.query_doc_bits[:, bounds[1]:]).sum(1, dtype=np.int64)
+    only0 = (mass0 > 0) & (mass1 == 0)
+    if only0.any():
+        w2 = np.where(only0, 1.0, 0.0)
+        shares2 = shard_traffic_shares(tiny_data.query_doc_bits, w2, bounds)
+        assert shares2[0] == pytest.approx(1.0)
+
+
+# -- warm refits across re-allocated caps ------------------------------------
+
+def test_warm_refit_respects_shrunk_caps(tiny_data):
+    """Re-allocating caps can hand a shard LESS budget than the warm
+    prefix's frozen fill already occupies; the refit must shed the overflow
+    so the post-solve fills respect the NEW caps."""
+    from repro import api
+    b = float(tiny_data.n_docs // 2)
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_split={0: 0.8 * b, 1: 0.2 * b})
+    prev = pipe.result
+    assert prev.extra["g_part"][0] > 0.3 * b      # shard 0 well-filled
+    # warm refit onto INVERTED caps: shard 0 shrinks below its fill
+    w = np.asarray(tiny_data.log.train_weights, np.float64)
+    pipe.refit(w, state=prev.state,
+               budget_split={0: 0.2 * b, 1: 0.8 * b})
+    caps = pipe.result.extra["caps"]
+    np.testing.assert_array_equal(caps, [0.2 * b, 0.8 * b])
+    assert np.all(pipe.result.extra["g_part"] <= caps + 1e-6)
+
+
+def test_trim_state_sheds_only_overflowing_partitions(tiny_data,
+                                                      tiny_problem):
+    from repro.core import trim_state
+    b = float(tiny_data.n_docs // 2)
+    r = registry.solve(tiny_problem, SolveConfig(
+        budget=b, solver="greedy", budget_split=[0.8 * b, 0.2 * b]))
+    fills = r.extra["g_part"]
+    # shrink partition 0's cap below its fill; partition 1 keeps headroom
+    tight = PartitionedBudget.from_split(
+        tiny_problem.n_docs, [max(1.0, fills[0] // 2), 0.8 * b])
+    state, dropped = trim_state(tiny_problem, r.state, tight)
+    assert len(dropped) > 0
+    new_fills = tight.np_value(np.asarray(state.covered_d))
+    assert np.all(new_fills <= np.asarray(tight.caps) + 1e-6)
+    # a fitting constraint is a no-op (same object back)
+    loose = PartitionedBudget.from_split(tiny_problem.n_docs,
+                                         [fills[0] + 1, fills[1] + 1])
+    same, none_dropped = trim_state(tiny_problem, r.state, loose)
+    assert same is r.state and len(none_dropped) == 0
+
+
+def test_refit_carries_explicit_constraint(tiny_data):
+    """A solve under an explicit PartitionedBudget (no budget_split spec)
+    must stay partitioned across refits, not silently degrade to global."""
+    from repro import api
+    b = float(tiny_data.n_docs // 2)
+    constraint = PartitionedBudget.from_split(tiny_data.n_docs,
+                                              [0.6 * b, 0.4 * b])
+    pipe = api.TieringPipeline.from_data(tiny_data)
+    pipe.solve(config=api.SolveConfig(budget=b, solver="greedy",
+                                      constraint=constraint))
+    w = np.asarray(tiny_data.log.train_weights, np.float64)
+    pipe.refit(w, state=None)
+    assert pipe.config.constraint is constraint
+    assert np.all(pipe.result.extra["g_part"] <=
+                  np.asarray(constraint.caps) + 1e-6)
+    # budget change rescales the carried caps, same shares
+    pipe.refit(w, state=None, budget=b / 2)
+    np.testing.assert_allclose(np.asarray(pipe.config.constraint.caps),
+                               np.asarray(constraint.caps) / 2)
+
+
+def test_explicit_caps_conflicting_budget_raises(tiny_data):
+    from repro import api
+    pipe = api.TieringPipeline.from_data(tiny_data)
+    with pytest.raises(ValueError, match="pass one or the other"):
+        pipe.solve("greedy", budget=30.0, budget_split={0: 60.0, 1: 40.0})
+    # agreeing budget is fine
+    pipe.solve("greedy", budget=100.0, budget_split={0: 60.0, 1: 40.0})
+    assert pipe.result is not None
+
+
+# -- pipeline surface --------------------------------------------------------
+
+def test_pipeline_traffic_split_solve_and_refit(tiny_data):
+    from repro import api
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5, budget_split="traffic", n_shards=2)
+    caps = pipe.result.extra["caps"]
+    assert caps.sum() == float(int(tiny_data.n_docs * 0.5))
+    assert np.all(pipe.result.extra["g_part"] <= caps + 1e-6)
+    assert pipe.n_partitions == 2
+    assert pipe.verify()
+    # refit against shifted weights re-allocates the caps (same total)
+    w = np.asarray(tiny_data.log.train_weights, np.float64)[::-1].copy()
+    pipe.refit(w, state=None)
+    caps2 = pipe.result.extra["caps"]
+    assert caps2.sum() == caps.sum()
+    assert pipe.verify()
+    # explicitly dropping back to a global budget works
+    pipe.refit(w, state=None, budget_split=None)
+    assert "caps" not in pipe.result.extra

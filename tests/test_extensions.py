@@ -1,5 +1,6 @@
 """Beyond-2-tier and stochastic-solver extensions (paper §3.2 / §6)."""
 import numpy as np
+import pytest
 
 from repro.core.multitier import build_multitier, verify_multitier
 from repro.core.stochastic import stochastic_greedy
@@ -49,3 +50,60 @@ def test_multitier_routing_monotone_coverage(tiny_data):
                               tiny_data.log.test_weights)
     assert cost3 <= cost2 + 1e-9
     assert cost3 < 1.0                              # beats untiered
+
+
+def _drifted_weights(log, seed=7):
+    rng = np.random.default_rng(seed)
+    w = np.asarray(log.train_weights, np.float64) * rng.uniform(
+        0.05, 1.0, size=log.n_queries)
+    return w / w.sum()
+
+
+def test_multitier_route_is_weight_independent(tiny_data):
+    """ψ-routing depends only on the clause sets, never on the weights, so
+    reweighting the problem (`SCSKProblem.with_weights`) must not move any
+    query between tiers of a FIXED multi-tiering."""
+    mt = build_multitier(tiny_data, [tiny_data.n_docs // 4,
+                                     tiny_data.n_docs // 2])
+    routes = mt.route(tiny_data.log.query_bits)
+    np.testing.assert_array_equal(routes, mt.route(tiny_data.log.query_bits))
+    w2 = _drifted_weights(tiny_data.log)
+    cov = mt.coverage(tiny_data.log.query_bits, w2)
+    assert abs(sum(cov) - w2.sum()) < 1e-9
+    # coverage under the new weights is the routes' masses, per level
+    for k, c in enumerate(cov):
+        assert c == w2[routes == k].sum()
+
+
+def test_multitier_expected_cost_under_reweighted_problem(tiny_data):
+    """expected_cost under drifted weights: matches the brute-force
+    route-mass × tier-size sum, and a multitier SOLVED on the reweighted
+    problem (via with_weights) costs no more on those weights than on the
+    stale ones would suggest structurally."""
+    from repro.core.problem import SCSKProblem
+    w2 = _drifted_weights(tiny_data.log)
+    budgets = [tiny_data.n_docs // 4, tiny_data.n_docs // 2]
+    mt = build_multitier(tiny_data, budgets)
+    cost = mt.expected_cost(tiny_data.log.query_bits, w2)
+    routes = mt.route(tiny_data.log.query_bits)
+    sizes = [d.mean() for d in mt.tier_docs] + [1.0]
+    brute = sum(w2[routes == k].sum() * sizes[k]
+                for k in range(len(mt.tiers) + 1))
+    assert cost == pytest.approx(brute, rel=1e-12)
+    assert 0.0 < cost <= 1.0 + 1e-9
+
+    # solve the REWEIGHTED problem (bitset-sharing with_weights path) and
+    # build the multitier from that solver — still nested + Thm-3.1-exact,
+    # and its expected cost under w2 must beat the untiered system
+    problem2 = SCSKProblem.from_data(tiny_data).with_weights(w2)
+
+    def reweighted_solver(_problem, budget, **kw):
+        from repro.core import greedy
+        return greedy(problem2, budget)
+
+    mt2 = build_multitier(tiny_data, budgets, solver=reweighted_solver)
+    assert verify_multitier(mt2, tiny_data)
+    cost2 = mt2.expected_cost(tiny_data.log.query_bits, w2)
+    assert cost2 < 1.0
+    # the multitier tuned to w2 serves w2 no worse than the stale one
+    assert cost2 <= cost + 0.05

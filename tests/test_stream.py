@@ -283,3 +283,92 @@ def test_detector_triggers_on_tv_and_hysteresis():
     assert s2.triggered and "tv" in s2.reasons[0]
     det.rebase(q, 0.7)
     assert not det.update(stats, q).triggered   # anchored: no drift now
+
+
+# -- shard-aware re-tiering ---------------------------------------------------
+
+def test_prune_partitions_unfreezes_only_scoped_clauses(tiny_problem,
+                                                        tiny_data):
+    """Dropping one partition's clauses keeps every other clause frozen and
+    rebuilds the state exactly (a solver can resume from it)."""
+    from repro.core import SolveConfig, bitset, partition_bounds, registry
+    from repro.stream import prune_partitions
+    b = float(tiny_data.n_docs // 2)
+    r = registry.solve(tiny_problem, SolveConfig(budget=b, solver="greedy"))
+    bounds = partition_bounds(tiny_problem.n_docs, 2)
+    state, kept, dropped = stream.prune_partitions(
+        tiny_problem, r.state, bounds, [1], scope_frac=0.5)
+    assert set(kept) | set(dropped) == set(np.nonzero(r.selected)[0])
+    assert not (set(kept) & set(dropped))
+    rows = np.asarray(tiny_problem.clause_doc_bits)
+    lo, hi = bounds[1], bounds[2]
+    for j in dropped:       # dropped: >= half their doc mass in partition 1
+        frac = bitset.np_popcount(rows[j, lo:hi]) / \
+            max(bitset.np_popcount(rows[j]), 1)
+        assert frac >= 0.5
+    for j in kept:
+        frac = bitset.np_popcount(rows[j, lo:hi]) / \
+            max(bitset.np_popcount(rows[j]), 1)
+        assert frac < 0.5
+    # rebuilt state is exact: covered bitsets == OR of kept rows
+    want_d = np.bitwise_or.reduce(rows[kept], axis=0) if len(kept) else \
+        np.zeros(tiny_problem.wd, np.uint32)
+    np.testing.assert_array_equal(np.asarray(state.covered_d), want_d)
+    assert float(state.g_used) == bitset.np_popcount(want_d)
+    # scoping everything == a full unfreeze
+    state_all, kept_all, dropped_all = stream.prune_partitions(
+        tiny_problem, r.state, bounds, [0, 1], scope_frac=0.0)
+    assert len(kept_all) == 0 or len(dropped_all) > 0
+
+
+def test_controller_scoped_refit_with_traffic_split(tiny_data):
+    """The control loop over a traffic-split solve: refits re-allocate the
+    per-shard caps (equal total), per-shard drift is reported every window,
+    scoped refits record which shards they re-tiered, and the final fills
+    respect the final caps."""
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5, budget_split="traffic", n_shards=2)
+    total = pipe.result.extra["caps"].sum()
+    report = stream.run_stream(pipe, scenario="rotate", n_windows=6,
+                               queries_per_window=256, seed=0,
+                               verify_swaps=True)
+    assert report.n_refits > 0
+    assert report.parity_all_ok()
+    for w in report.windows:
+        assert len(w.shard_tv) == 2            # reported every window
+    scoped = [w for w in report.windows if w.refit and w.scope]
+    assert scoped, "no refit recorded its scope"
+    caps = pipe.result.extra["caps"]
+    assert caps.sum() == total                 # re-allocated, same total
+    assert np.all(pipe.result.extra["g_part"] <= caps + 1e-6)
+
+
+def test_controller_single_shard_drift_scopes_one_shard(tiny_data):
+    """Traffic drifting toward queries matching ONE shard's documents must
+    yield a single-shard scope on the triggered refit."""
+    from repro.core import bitset, partition_bounds
+    bounds = partition_bounds(tiny_data.n_docs, 2)
+    qdb = tiny_data.query_doc_bits
+    mass0 = np.asarray([bitset.np_popcount(r[:bounds[1]]) for r in qdb])
+    mass1 = np.asarray([bitset.np_popcount(r[bounds[1]:]) for r in qdb])
+    only1 = (mass1 > 0) & (mass0 == 0)
+    if only1.sum() < 8:
+        pytest.skip("tiny log has too few shard-1-exclusive queries")
+    pipe = api.TieringPipeline.from_data(tiny_data).solve(
+        "greedy", budget_frac=0.5, budget_split="traffic", n_shards=2)
+    ctrl = stream.RetieringController(pipe, shard_tv_threshold=0.2)
+    # synthesize windows: shard-1-exclusive queries only
+    ids = np.nonzero(only1)[0]
+    from repro.stream.drift import TrafficWindow
+    probs = np.where(only1, 1.0, 0.0)
+    probs = probs / probs.sum()
+    scope_seen = ()
+    for i in range(4):
+        win = TrafficWindow(index=i, query_ids=np.resize(ids, 256),
+                            probs=probs)
+        rep = ctrl.step(win)
+        if rep.refit and rep.scope:
+            scope_seen = rep.scope
+            break
+    assert scope_seen, "drift toward shard 1 never triggered a scoped refit"
+    assert 1 in scope_seen
