@@ -24,10 +24,18 @@ CI-sized; REPRO_BENCH_CLUSTER_SCALE overrides):
     `match_batch` wall times across sub-index widths at tiny/small scale;
     the coefficients + R² land in BENCH_cluster.json so `run_loadgen` can
     be driven with measured, not assumed, service times.
+  * mesh_routing: fused shard_map serve (ONE SPMD program per batch over
+    the `"shard"` device axis) vs the sequential per-shard host dispatch,
+    measured batch-serve wall-clock at {1, 2, 4} forced host devices (each
+    device count is a fresh subprocess — XLA fixes the device count at
+    init).
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -191,7 +199,75 @@ def run() -> dict:
 
     # -- loadgen service-model calibration ------------------------------------
     results["calibration"] = calibrate()
+
+    # -- fused shard_map routing vs sequential host dispatch ------------------
+    results["mesh_routing"] = mesh_routing()
     return results
+
+
+_MESH_PROBE = r"""
+import json, os, sys, time
+import numpy as np
+from repro import api, distributed as D
+
+scale, n_shards, batch = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+pipe = (api.TieringPipeline.from_synthetic(seed=0, scale=scale)
+        .mine(min_support=1e-3).solve("greedy", budget_frac=0.5))
+queries = pipe.log.queries[:batch]
+
+
+def wall(fleet, reps=5):
+    fleet.serve(queries)                        # warm (compile + caches)
+    best = min(
+        (lambda t0: (fleet.serve(queries), time.perf_counter() - t0)[1])(
+            time.perf_counter())
+        for _ in range(reps))
+    return 1e6 * best / len(queries)
+
+host_fleet = pipe.deploy_cluster(n_shards=n_shards, t1_replicas=2)
+host_us = wall(host_fleet)
+a = host_fleet.serve(queries[:64])
+mesh_fleet = pipe.deploy_cluster(n_shards=n_shards, t1_replicas=2)
+with D.use_mesh(D.shard_mesh()):
+    plan = D.current_plan()
+    fused_us = wall(mesh_fleet)
+    b = mesh_fleet.serve(queries[:64])      # parity probed ON the mesh path
+assert all(np.array_equal(x, y) for x, y in zip(a, b)), "parity"
+print(json.dumps({
+    "devices": plan.n_shard_devices, "n_shards": n_shards,
+    "fused_active": plan.shard_fused, "host_us_per_query": round(host_us, 3),
+    "fused_us_per_query": round(fused_us, 3)}))
+"""
+
+
+def mesh_routing(device_counts=(1, 2, 4), n_shards: int = 4,
+                 batch: int = 512) -> dict:
+    """Fused vs host dispatch at forced host-device counts (subprocesses:
+    the device count is fixed at jax init). At 1 device the plan gates the
+    fusion off, so both arms measure the host path — the honest baseline."""
+    out = {}
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    for ndev in device_counts:
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=src + os.pathsep * bool(
+                       os.environ.get("PYTHONPATH", ""))
+                   + os.environ.get("PYTHONPATH", ""))
+        proc = subprocess.run(
+            [sys.executable, "-c", _MESH_PROBE, CLUSTER_SCALE,
+             str(n_shards), str(batch)],
+            capture_output=True, text=True, env=env, timeout=900)
+        if proc.returncode != 0:
+            out[ndev] = {"error": proc.stderr[-500:]}
+            continue
+        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        out[ndev] = rec
+        emit(f"cluster_mesh_d{ndev}", rec["fused_us_per_query"],
+             f"host_us={rec['host_us_per_query']};"
+             f"fused_us={rec['fused_us_per_query']};"
+             f"shards={rec['n_shards']};fused_active={rec['fused_active']}")
+    return out
 
 
 def _timed(fn, *args) -> float:

@@ -55,11 +55,18 @@ from repro.api.partition import (  # noqa: F401,E402
     partition_budgets, shard_traffic_shares)
 from repro.api.pipeline import TieringPipeline  # noqa: F401,E402
 
+# the mesh-resident data plane rides the same one-import surface: install a
+# ("shard",) mesh with `use_mesh(shard_mesh())` and solves/serving fuse
+# (owner-local partition gains, one shard_map serve program per batch)
+from repro.distributed import (  # noqa: F401,E402
+    ExecutionPlan, current_plan, shard_mesh, use_mesh)
+
 __all__ = [
-    "GlobalBudget", "KnapsackConstraint", "PartitionedBudget", "SCSKProblem",
-    "SolveConfig", "SolverResult", "SolverSpec", "SolverState",
-    "TieringPipeline", "Trace", "get_solver", "list_solvers",
-    "partition_bounds", "partition_budgets", "partition_capacities",
-    "register_solver", "shard_traffic_shares", "solve", "solve_sweep",
-    "trim_state",
+    "ExecutionPlan", "GlobalBudget", "KnapsackConstraint",
+    "PartitionedBudget", "SCSKProblem", "SolveConfig", "SolverResult",
+    "SolverSpec", "SolverState", "TieringPipeline", "Trace", "current_plan",
+    "get_solver", "list_solvers", "partition_bounds", "partition_budgets",
+    "partition_capacities", "register_solver", "shard_mesh",
+    "shard_traffic_shares", "solve", "solve_sweep", "trim_state",
+    "use_mesh",
 ]

@@ -45,6 +45,8 @@ CLI: `python -m repro.launch.cluster --shards 2 --replicas 2 --windows 2`
 from repro.cluster.loadgen import (                    # noqa: F401
     ClusterPlan, LoadgenReport, ReplicaSuggestion, fit_service_model,
     run_loadgen, suggest_replicas)
+from repro.cluster.mesh_serve import (                 # noqa: F401
+    MeshRouteTable, serve_fused)
 from repro.cluster.rollout import (                    # noqa: F401
     ClusterTieringBuffer, RollingSwap)
 from repro.cluster.router import (                     # noqa: F401
@@ -54,8 +56,8 @@ from repro.cluster.shard import (                      # noqa: F401
 
 __all__ = [
     "BatchTrace", "ClusterPlan", "ClusterRouter", "ClusterTieringBuffer",
-    "DocShard", "LoadgenReport", "ReplicaSuggestion", "RollingSwap",
-    "ShardReplica", "TieredCluster", "fit_service_model", "plan_shards",
-    "run_loadgen", "shard_postings", "shard_tier_postings",
-    "suggest_replicas",
+    "DocShard", "LoadgenReport", "MeshRouteTable", "ReplicaSuggestion",
+    "RollingSwap", "ShardReplica", "TieredCluster", "fit_service_model",
+    "plan_shards", "run_loadgen", "serve_fused", "shard_postings",
+    "shard_tier_postings", "suggest_replicas",
 ]

@@ -1,0 +1,177 @@
+"""Fused scatter-gather serving: one shard_map program per batch.
+
+The host router issues one sequential dispatch per shard per batch; on a
+mesh the shards ARE devices, so the whole serve path fuses into a single
+SPMD program over the `"shard"` axis:
+
+  1. replicated classify — every device runs the packed clause-subset-test
+     kernel (`ops.clause_match`) on the full batch, so the ψ^clause decision
+     needs no broadcast;
+  2. scatter — each query's work lands on the devices that own its doc
+     words: the device holds its shard's RESIDENT Tier-1 and Tier-2 postings
+     slices and AND-matches the batch against the slice ψ prescribes per
+     query (Tier-1 for eligible, Tier-2 for the rest — the same replica
+     content the host router would pick);
+  3. gather — shards own disjoint word ranges, so the OR-merge of per-shard
+     match bitsets is ONE psum: every global word has exactly one owner,
+     non-owners contribute zeros, and an integer sum of disjoint
+     contributions IS the bitwise OR.
+
+Bit-identity with the host path is by construction: the classify kernel, the
+AND-reduce, and the word placement are the same ops on the same bits — only
+the dispatch moves. Parity at every shard/replica count is pinned by
+tests/test_mesh.py (replicas don't enter: replicas of a shard hold identical
+content, which is exactly what lets the mesh hold one copy per shard).
+
+Operands live in a `MeshRouteTable`: per-shard slices are zero-padded to the
+widest shard and stacked leading-axis-sharded over `"shard"` (pad shards
+write zeros into a scratch word range past the real index, so they never
+touch owned words). Tables are built once per (generation content, topology)
+and cached by the router; batch shapes are bucketed to powers of two so
+recompiles stay rare.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import distributed
+from repro.kernels import ops
+from repro.serve import matching
+
+ONES = 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRouteTable:
+    """Device-resident operands of the fused serve program for ONE
+    (ψ generation, fleet topology) pair. `S'` is the shard count padded to a
+    multiple of the `"shard"` axis size; `wmax` the widest shard's words."""
+    clause_bits: jnp.ndarray   # uint32 [K, Wv]  ψ clauses (replicated)
+    t1: jnp.ndarray            # uint32 [S', V, wmax]  resident Tier-1 slices
+    t2: jnp.ndarray            # uint32 [S', V, wmax]  resident Tier-2 slices
+    off: jnp.ndarray           # int32 [S'] owned word_lo (pad rows: w_total)
+    wid: jnp.ndarray           # int32 [S'] owned words (pad rows: 0)
+    t1w: jnp.ndarray           # int32 [S'] compacted Tier-1 words (0: no D₁)
+    w_total: int               # global packed match-set width
+    wmax: int
+    vocab_size: int
+
+
+def build_table(shards, t2_slices, buf, n_docs_words: int,
+                vocab_size: int, n_devices: int) -> MeshRouteTable:
+    """Stack per-shard resident slices for the fused program.
+
+    `buf` is the generation's `ClusterTieringBuffer` (its `shard_postings`
+    are the SAME bits a committed replica holds), or None for the
+    mid-rollout Tier-2-only gap — then the ψ clause set is empty, every
+    query routes to Tier 2, and the program stays one fused dispatch.
+    """
+    wmax = max(s.n_words for s in shards)
+    s_pad = -len(shards) % n_devices
+    v = int(np.asarray(t2_slices[0]).shape[0])
+    t1_l, t2_l, off, wid, t1w = [], [], [], [], []
+    for s in shards:
+        pad = ((0, 0), (0, wmax - s.n_words))
+        t2_l.append(np.pad(np.asarray(t2_slices[s.index]), pad))
+        if buf is not None:
+            t1_l.append(np.pad(np.asarray(buf.shard_postings[s.index]), pad))
+            t1w.append(buf.shard_words[s.index])
+        else:
+            t1_l.append(np.zeros((v, wmax), np.uint32))
+            t1w.append(0)
+        off.append(s.word_lo)
+        wid.append(s.n_words)
+    for _ in range(s_pad):          # pad shards: zero words, scratch offset
+        t1_l.append(np.zeros((v, wmax), np.uint32))
+        t2_l.append(np.zeros((v, wmax), np.uint32))
+        off.append(n_docs_words)
+        wid.append(0)
+        t1w.append(0)
+    cbits = buf.tiering.clause_vocab_bits if buf is not None else \
+        np.zeros((0, max(1, -(-vocab_size // 32))), np.uint32)
+    return MeshRouteTable(
+        clause_bits=jnp.asarray(cbits),
+        t1=jnp.asarray(np.stack(t1_l)), t2=jnp.asarray(np.stack(t2_l)),
+        off=jnp.asarray(off, jnp.int32), wid=jnp.asarray(wid, jnp.int32),
+        t1w=jnp.asarray(t1w, jnp.int32),
+        w_total=n_docs_words, wmax=wmax, vocab_size=vocab_size)
+
+
+_PROGRAMS: dict = {}
+
+
+def _program(mesh, axis: str, w_total: int, wmax: int, n_clauses: int):
+    """The compiled fused program for one (mesh, widths, ψ size) signature."""
+    key = (mesh, axis, w_total, wmax, n_clauses > 0)
+    if key in _PROGRAMS:
+        return _PROGRAMS[key]
+
+    def body(qbits, cbits, toks, t1, t2, off, wid, t1w):
+        elig = ops.clause_match(qbits, cbits)              # replicated [B]
+        valid = toks >= 0
+        safe = jnp.where(valid, toks, 0)
+        cols = jnp.arange(wmax, dtype=jnp.int32)
+        out = jnp.zeros((toks.shape[0], w_total + wmax), jnp.uint32)
+        for i in range(t1.shape[0]):                       # local shards
+            # owner-local AND-match: ψ picks the resident slice per query
+            rows = jnp.where((elig & (t1w[i] > 0))[:, None, None],
+                             t1[i][safe], t2[i][safe])     # [B, L, wmax]
+            rows = jnp.where(valid[:, :, None], rows, jnp.uint32(ONES))
+            m = jax.lax.reduce(rows, jnp.uint32(ONES),
+                               jax.lax.bitwise_and, (1,))
+            # host parity: the router never contacts a shard whose local D₁
+            # is empty for an eligible query — its words stay zero
+            m = jnp.where(elig[:, None] & (t1w[i] == 0), jnp.uint32(0), m)
+            m = jnp.where(cols[None, :] < wid[i], m, jnp.uint32(0))
+            out = jax.lax.dynamic_update_slice(out, m, (0, off[i]))
+        # disjoint-word OR-merge: every word has one owner, so + == |
+        return jax.lax.psum(out, axis), elig
+
+    fused = distributed.mesh_fused(
+        body,
+        in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis),
+                  P(axis)),
+        out_specs=(P(), P()), axis=axis, mesh=mesh)
+    prog = jax.jit(fused)
+    if len(_PROGRAMS) > 32:
+        _PROGRAMS.clear()
+    _PROGRAMS[key] = prog
+    return prog
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def serve_fused(table: MeshRouteTable, queries, plan
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Serve one batch through the fused program.
+
+    Returns `(match_words [B, w_total] uint32, eligible [B] bool)` —
+    bit-identical to the host router's scatter-gather OR-merge. Batch and
+    token dims are bucketed to powers of two (padded queries are empty and
+    sliced off) so the program compiles once per bucket, not per batch.
+    """
+    b = len(queries)
+    bb = _bucket(b)
+    lb = _bucket(max((len(q) for q in queries), default=1))
+    toks = np.full((bb, lb), -1, np.int32)
+    toks[:b] = matching.pad_token_batch(queries, pad_len=lb)
+    qbits = np.zeros((bb, max(1, -(-table.vocab_size // 32))), np.uint32)
+    if table.clause_bits.shape[0]:
+        qbits[:b] = matching.pack_query_bits(queries, table.vocab_size)
+    prog = _program(plan.mesh, plan.shard_axis, table.w_total, table.wmax,
+                    int(table.clause_bits.shape[0]))
+    out, elig = prog(jnp.asarray(qbits), table.clause_bits,
+                     jnp.asarray(toks), table.t1, table.t2,
+                     table.off, table.wid, table.t1w)
+    return (np.asarray(out[:b, :table.w_total]),
+            np.asarray(elig[:b]).astype(bool))

@@ -78,10 +78,16 @@ class ShardReplica:
 
     def match(self, tokens: jnp.ndarray) -> np.ndarray:
         """AND-match a padded token batch against the local sub-index."""
-        self.n_batches += 1
-        self.n_queries += int(tokens.shape[0])
-        self.words_scanned += int(tokens.shape[0]) * self.words_per_query
+        self.account(int(tokens.shape[0]))
         return np.asarray(matching.match_batch(self.postings, tokens))
+
+    def account(self, n_queries: int) -> None:
+        """Batch bookkeeping without a local match — the fused mesh path
+        serves from the SAME resident content this replica holds, so the
+        replica this batch rotated onto still carries the counters."""
+        self.n_batches += 1
+        self.n_queries += n_queries
+        self.words_scanned += n_queries * self.words_per_query
 
     def __repr__(self) -> str:  # debugging/observability
         return (f"ShardReplica(t{self.tier} s{self.shard.index} "
@@ -126,6 +132,7 @@ class ClusterRouter:
             buffer0.generation: buffer0}
         self.rollout: RollingSwap | None = None
         self._rr: dict[tuple[int, int], int] = {}
+        self._mesh_tables: dict = {}     # fused-serve operands per generation
         self.trace: list[BatchTrace] = []
         self.stats = ServeStats(
             full_words_per_query=sum(s.n_words for s in shards))
@@ -197,54 +204,128 @@ class ClusterRouter:
             buf.tiering.clause_vocab_bits, queries, buf.tiering.vocab_size)
 
     def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
-        """Exact global match sets (sorted doc ids) per query."""
+        """Exact global match sets (sorted doc ids) per query.
+
+        Two dispatch layouts, bit-identical by construction and pinned by
+        tests/test_mesh.py: one host `match_batch` call per shard (the
+        default), or — when the ambient `ExecutionPlan` carries a multi-
+        device `"shard"` axis — ONE fused shard_map program per batch
+        (`cluster.mesh_serve`: replicated ψ classify, owner-local AND-match
+        on the resident slices, psum OR-merge).
+        """
         self.advance_rollout()              # one drain-or-swap phase per batch
         b = len(queries)
         if b == 0:
             return []
-        out = np.zeros((b, self.stats.full_words_per_query), np.uint32)
         complete = self.complete_generations()
         if complete:
             gen = complete[-1]              # newest fully-covered generation
             buf = self._buffers[gen]
-            elig = self.classify(queries, generation=gen)
         else:                               # mid-rollout gap: Tier 2 is exact
             gen, buf = -1, None
+        from repro import distributed
+        plan = distributed.current_plan()
+        if plan.shard_fused:
+            out, elig = self._match_mesh(queries, buf, plan)
+        else:
+            out, elig = self._match_host(queries, buf)
+        self._account(buf, gen, elig)
+        self.stats.n_queries += b
+        return [bitset.np_to_indices(row, self.n_docs) for row in out]
+
+    def _match_host(self, queries, buf) -> tuple[np.ndarray, np.ndarray]:
+        """Sequential per-shard host dispatch; returns (words [B, W], elig)."""
+        b = len(queries)
+        out = np.zeros((b, self.stats.full_words_per_query), np.uint32)
+        if buf is not None:
+            elig = matching.classify_batch(
+                buf.tiering.clause_vocab_bits, queries,
+                buf.tiering.vocab_size)
+        else:
             elig = np.zeros(b, bool)
         toks = matching.pad_token_batch(queries)
-        t1_gens: list[int] = []
-        t1_shards: list[int] = []
-        t1_contents: list[int] = []
-        expected: list[int] = []
         idx1 = np.nonzero(elig)[0]
         if len(idx1):
             sub = jnp.asarray(toks[idx1])
             for s in self.shards:
                 if not buf.shard_nonempty(s.index):
                     continue                # D₁ misses this shard: no matches
-                rep = self._pick(self.t1[s.index], 1, s.index,
-                                 content=buf.shard_content[s.index])
+                rep = self._served(1, s.index, buf)
                 out[idx1, s.word_lo:s.word_hi] = rep.match(sub)
-                t1_gens.append(rep.generation)
-                t1_shards.append(s.index)
-                t1_contents.append(rep.content)
-                expected.append(buf.shard_content[s.index])
-                self.stats.tier1_words += len(idx1) * rep.words_per_query
-            self.stats.n_tier1 += len(idx1)
         idx2 = np.nonzero(~elig)[0]
         if len(idx2):
             sub = jnp.asarray(toks[idx2])
             for s in self.shards:
-                rep = self._pick(self.t2[s.index], 2, s.index)
-                out[idx2, s.word_lo:s.word_hi] = rep.match(sub)
-                self.stats.tier2_words += len(idx2) * rep.words_per_query
-        self.stats.n_queries += b
+                out[idx2, s.word_lo:s.word_hi] = \
+                    self._served(2, s.index, buf).match(sub)
+        return out, np.asarray(elig, bool)
+
+    def _match_mesh(self, queries, buf, plan) -> tuple[np.ndarray, np.ndarray]:
+        """One fused shard_map program for the whole batch; the replica this
+        batch rotates onto still pays the (virtual) scan accounting, so
+        observability matches the host path exactly."""
+        from repro.cluster import mesh_serve
+        # generation identifies the ψ clause set: two generations can share
+        # every shard's Tier-1 CONTENT (doc sets equal, clauses not), so
+        # shard_content alone would serve a stale clause_bits table
+        key = ((buf.generation, buf.shard_content) if buf is not None
+               else None, plan.mesh, len(self.shards))
+        table = self._mesh_tables.get(key)
+        if table is None:
+            table = mesh_serve.build_table(
+                self.shards, [g[0].postings for g in self.t2], buf,
+                self.stats.full_words_per_query,
+                self._buffers[self.target_generation].tiering.vocab_size,
+                plan.n_shard_devices)
+            if len(self._mesh_tables) > 8:
+                self._mesh_tables.clear()
+            self._mesh_tables[key] = table
+        out, elig = mesh_serve.serve_fused(table, queries, plan)
+        n1 = int(elig.sum())
+        for s in self.shards:
+            if n1 and buf is not None and buf.shard_nonempty(s.index):
+                self._served(1, s.index, buf).account(n1)
+            if n1 < len(queries):
+                self._served(2, s.index, buf).account(len(queries) - n1)
+        return out, elig
+
+    def _served(self, tier: int, shard_idx: int, buf) -> ShardReplica:
+        """Rotate the replica group and return the serving replica."""
+        if tier == 1:
+            return self._pick(self.t1[shard_idx], 1, shard_idx,
+                              content=buf.shard_content[shard_idx])
+        return self._pick(self.t2[shard_idx], 2, shard_idx)
+
+    def _account(self, buf, gen: int, elig: np.ndarray) -> None:
+        """Stats + BatchTrace from the replicas this batch was served by (or
+        accounted against, on the fused path) — `_rr` already rotated, so
+        `_pick` with a rewound rotation would misattribute; instead the
+        counters were updated inside the match helpers and the trace reads
+        the groups' current content directly."""
+        n1 = int(elig.sum())
+        n2 = len(elig) - n1
+        t1_gens, t1_shards, t1_contents, expected = [], [], [], []
+        if n1:
+            for s in self.shards:
+                if not buf.shard_nonempty(s.index):
+                    continue
+                want = buf.shard_content[s.index]
+                rep = next(r for r in self.t1[s.index]
+                           if not r.draining and r.content == want)
+                t1_gens.append(rep.generation)
+                t1_shards.append(s.index)
+                t1_contents.append(rep.content)
+                expected.append(want)
+                self.stats.tier1_words += n1 * rep.words_per_query
+            self.stats.n_tier1 += n1
+        if n2:
+            for s in self.shards:
+                self.stats.tier2_words += n2 * self.t2[s.index][0].words_per_query
         self.trace.append(BatchTrace(
             psi_generation=gen, t1_generations=tuple(t1_gens),
-            n_tier1=len(idx1), n_tier2=len(idx2),
+            n_tier1=n1, n_tier2=n2,
             t1_shards=tuple(t1_shards), t1_contents=tuple(t1_contents),
             expected_contents=tuple(expected)))
-        return [bitset.np_to_indices(row, self.n_docs) for row in out]
 
 
 class TieredCluster:

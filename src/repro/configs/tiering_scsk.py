@@ -161,74 +161,49 @@ def solve_fn(shape: str):
         # [C/dp, Wq/tp] blocks (no resharding of the scan chunks — the
         # baseline pjit version let XLA reshard every W-chunk: 0.62 TB of
         # all-gathers per round, §Perf); one psum over 'model' combines
-        # partial gains (C·4B — trivial).
-        from repro.distributed import mesh_context
-        from repro.launch import mesh as mesh_lib
-        from repro.models.moe import shard_map
+        # partial gains (C·4B — trivial). Gating and the owner-local row
+        # select are the shared `distributed` helpers.
+        from repro import distributed
 
-        mesh = mesh_context.current_mesh()
-        dp = mesh_lib.data_axes(mesh)
+        dp = distributed.current_plan().data_axes
         x = (batch["query_weights"] * (
             1.0 - bitset.unpack(batch["covered_q"]).astype(jnp.float32)
         )[:batch["query_weights"].shape[0]])[:, None]
 
-        if mesh.size > 1 and "model" in mesh.axis_names:
-            def gains(a_q, a_d, xw, cov_d):
-                fg_p = ops.bit_matvec(a_q, xw)[:, 0]
-                gg_p = ops.coverage_gain(a_d, cov_d).astype(jnp.float32)
-                return (jax.lax.psum(fg_p, "model"),
-                        jax.lax.psum(gg_p, "model"))
+        def gains(a_q, a_d, xw, cov_d):
+            fg_p = ops.bit_matvec(a_q, xw)[:, 0]
+            gg_p = ops.coverage_gain(a_d, cov_d).astype(jnp.float32)
+            return (jax.lax.psum(fg_p, "model"),
+                    jax.lax.psum(gg_p, "model"))
 
-            fg, gg = shard_map(
-                gains, mesh,
-                in_specs=(P(dp, "model"), P(dp, "model"),
-                          P("model"), P("model")),
-                out_specs=(P(dp), P(dp)),
-            )(batch["clause_query_bits"], batch["clause_doc_bits"],
-              x, batch["covered_d"])
-        else:
+        fused = distributed.mesh_fused(
+            gains,
+            in_specs=(P(dp, "model"), P(dp, "model"), P("model"),
+                      P("model")),
+            out_specs=(P(dp), P(dp)))
+        if fused is None:
             fg = ops.bit_matvec(batch["clause_query_bits"], x)[:, 0]
             gg = ops.coverage_gain(batch["clause_doc_bits"],
                                    batch["covered_d"]).astype(jnp.float32)
+        else:
+            fg, gg = fused(batch["clause_query_bits"],
+                           batch["clause_doc_bits"], x, batch["covered_d"])
         feasible = (~batch["selected"]) & \
             (batch["g_used"] + gg <= batch["budget"]) & (fg > 0.0)
         score = jnp.where(feasible, ratio_of(fg, gg), -jnp.inf)
         j = jnp.argmax(score)
-        if mesh.size > 1 and "model" in mesh.axis_names:
-            # A[j] at a traced index on a (dp x model)-sharded operand makes
-            # XLA all-gather the WHOLE matrix (512 GB here — §Perf); instead
-            # the owning dp-rank dynamic-slices locally and a [W]-sized psum
-            # broadcasts the row.
-            row_q = _select_row(mesh, dp, batch["clause_query_bits"], j)
-            row_d = _select_row(mesh, dp, batch["clause_doc_bits"], j)
-        else:
-            row_q = batch["clause_query_bits"][j]
-            row_d = batch["clause_doc_bits"][j]
+        # A[j] at a traced index on a (dp x model)-sharded operand makes
+        # XLA all-gather the WHOLE matrix (512 GB here — §Perf);
+        # `owner_row` lets the owning dp-rank dynamic-slice locally and a
+        # [W]-sized psum broadcast the row (identity off-mesh).
+        row_q = distributed.owner_row(batch["clause_query_bits"], j,
+                                      w_axis="model")
+        row_d = distributed.owner_row(batch["clause_doc_bits"], j,
+                                      w_axis="model")
         covered_q = batch["covered_q"] | row_q
         covered_d = batch["covered_d"] | row_d
         return covered_q, covered_d, batch["selected"].at[j].set(True), j
     return dense
-
-
-def _select_row(mesh, dp, mat, j):
-    from repro.models.moe import shard_map
-
-    def body(a, jj):
-        rank = jnp.int32(0)
-        for ax in dp:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        c_loc = a.shape[0]
-        local_j = jj - rank * c_loc
-        inb = (local_j >= 0) & (local_j < c_loc)
-        row = a[jnp.clip(local_j, 0, c_loc - 1)]
-        row = jnp.where(inb, row, jnp.zeros_like(row))
-        for ax in dp:                       # only the owner contributes
-            row = jax.lax.psum(row, ax)
-        return row
-
-    return shard_map(body, mesh,
-                     in_specs=(P(dp, "model"), P()),
-                     out_specs=P("model"), check_vma=False)(mat, j)
 
 
 def _smoke():

@@ -41,54 +41,46 @@ def _subset_gains(problem: SCSKProblem, constraint, covered_q, covered_d,
 
     Mesh-aware: `A[top_idx]` on a (dp x model)-sharded incidence matrix makes
     XLA all-gather the whole operand (512 GB at solve_l scale — §Perf). The
-    sharded path instead slices rows owner-locally and folds the owner
-    selection and the W-partial reduction into ONE psum over all mesh axes.
-    (Partitioned constraints take the direct path: their covered_d word
-    slices don't line up with the mesh's model sharding — an RDMA-friendly
-    fusion is an open item.)
+    fused path (`distributed.mesh_fused`) instead slices rows owner-locally
+    and folds the owner selection and the W-partial reduction into ONE psum
+    over all mesh axes. Partitioned constraints take the direct path over
+    the model axes — their covered_d word slices don't line up with the
+    mesh's model sharding — but their per-partition gain kernel
+    (`ops.partition_gain`) fuses owner-locally over the `"shard"` axis when
+    one is present, so each partition's cost is computed on the device that
+    owns it either way.
     """
-    from repro.distributed import mesh_context
-    from repro.models.moe import shard_map
-
+    from repro import distributed
     from repro.core import bitset
+    from repro.kernels import ops
     x = (problem.query_weights
          * (1.0 - bitset.unpack(covered_q).astype(jnp.float32)))[:, None]
-    mesh = mesh_context.current_mesh()
-    if mesh.size == 1 or "model" not in mesh.axis_names \
-            or constraint.n_parts > 1:
-        rows_q = problem.clause_query_bits[top_idx]
-        rows_d = problem.clause_doc_bits[top_idx]
-        from repro.kernels import ops
-        fg = ops.bit_matvec(rows_q, x)[:, 0]
-        _, gg_part = constraint.gains(problem, covered_d, rows=rows_d)
-        return fg, gg_part
-
-    from repro.kernels import ops
-    dp = tuple(a for a in mesh.axis_names if a != "model")
+    plan = distributed.current_plan()
+    mesh, dp = plan.mesh, plan.data_axes
     P = jax.sharding.PartitionSpec
 
     def body(a_q, a_d, xw, cov_d, idx):
-        rank = jnp.int32(0)
-        for ax in dp:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        c_loc = a_q.shape[0]
-        lidx = idx - rank * c_loc
-        inb = (lidx >= 0) & (lidx < c_loc)
-        lidx = jnp.clip(lidx, 0, c_loc - 1)
-        rows_q = jnp.where(inb[:, None], a_q[lidx], 0)
-        rows_d = jnp.where(inb[:, None], a_d[lidx], 0)
+        rank = distributed.axis_rank(mesh, dp)
+        rows_q = distributed.owner_select(a_q, idx, rank)
+        rows_d = distributed.owner_select(a_d, idx, rank)
         fg_p = ops.bit_matvec(rows_q, xw)[:, 0]
         gg_p = ops.coverage_gain(rows_d, cov_d).astype(jnp.float32)
         axes = dp + ("model",)       # owner-select + W-partials in one psum
         return jax.lax.psum(fg_p, axes), jax.lax.psum(gg_p, axes)
 
-    fg, gg = shard_map(
-        body, mesh,
+    fused = None if constraint.n_parts > 1 else distributed.mesh_fused(
+        body,
         in_specs=(P(dp, "model"), P(dp, "model"), P("model"), P("model"),
                   P()),
-        out_specs=(P(), P()), check_vma=False,
-    )(problem.clause_query_bits, problem.clause_doc_bits, x, covered_d,
-      top_idx)
+        out_specs=(P(), P()), mesh=mesh)
+    if fused is None:
+        rows_q = problem.clause_query_bits[top_idx]
+        rows_d = problem.clause_doc_bits[top_idx]
+        fg = ops.bit_matvec(rows_q, x)[:, 0]
+        _, gg_part = constraint.gains(problem, covered_d, rows=rows_d)
+        return fg, gg_part
+    fg, gg = fused(problem.clause_query_bits, problem.clause_doc_bits, x,
+                   covered_d, top_idx)
     return fg, gg[..., None]
 
 
@@ -141,28 +133,8 @@ def optpes_round(problem: SCSKProblem, state, constraint, *, k: int):
     def _row(mat, jj):
         """Owner-local row select (avoids whole-matrix all-gather on
         sharded operands — see _subset_gains)."""
-        from repro.distributed import mesh_context
-        from repro.models.moe import shard_map
-        mesh = mesh_context.current_mesh()
-        if mesh.size == 1 or "model" not in mesh.axis_names:
-            return mat[jj]
-        dp = tuple(a for a in mesh.axis_names if a != "model")
-        P = jax.sharding.PartitionSpec
-
-        def body(a, j_):
-            rank = jnp.int32(0)
-            for ax in dp:
-                rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-            c_loc = a.shape[0]
-            lj = j_ - rank * c_loc
-            inb = (lj >= 0) & (lj < c_loc)
-            row = jnp.where(inb, a[jnp.clip(lj, 0, c_loc - 1)],
-                            jnp.zeros_like(a[0]))
-            for ax in dp:
-                row = jax.lax.psum(row, ax)
-            return row
-        return shard_map(body, mesh, in_specs=(P(dp, "model"), P()),
-                         out_specs=P("model"), check_vma=False)(mat, jj)
+        from repro import distributed
+        return distributed.owner_row(mat, jj, w_axis="model")
 
     def select(args):
         covered_q, covered_d, selected, g_part, fbar, flow, gbar, glow, f_val = args

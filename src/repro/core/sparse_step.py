@@ -8,14 +8,16 @@ clause lists sharded over ('pod','data'); the covered masks replicated
 
 Mesh-aware paths (same pathology class as EXPERIMENTS §Perf H3): the f-gain
 bit-matvec runs shard-locally with one psum, and the selected clause's rows
-are owner-gathered — a traced-index gather on a sharded operand would
-all-gather the whole matrix.
+are owner-gathered (`distributed.owner_row`) — a traced-index gather on a
+sharded operand would all-gather the whole matrix. All gating goes through
+`distributed.mesh_fused`; this module carries no mesh boilerplate of its own.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro import distributed
 from repro.core import bitset
 from repro.core.greedy import ratio_of
 from repro.kernels import ops
@@ -23,58 +25,18 @@ from repro.kernels import ops
 P = jax.sharding.PartitionSpec
 
 
-def _mesh_dp():
-    from repro.distributed import mesh_context
-    mesh = mesh_context.current_mesh()
-    if mesh.size == 1 or "model" not in mesh.axis_names:
-        return None, ()
-    return mesh, tuple(a for a in mesh.axis_names if a != "model")
-
-
 def _f_gains(clause_query_bits, x):
-    mesh, dp = _mesh_dp()
-    if mesh is None:
-        return ops.bit_matvec(clause_query_bits, x)[:, 0]
-    from repro.models.moe import shard_map
+    dp = distributed.current_plan().data_axes
 
     def body(a_q, xw):
         return jax.lax.psum(ops.bit_matvec(a_q, xw)[:, 0], "model")
 
-    return shard_map(body, mesh,
-                     in_specs=(P(dp, "model"), P("model")),
-                     out_specs=P(dp), check_vma=False)(clause_query_bits, x)
-
-
-def _owner_row(mat, j, *, w_axis: str | None):
-    """Row `j` of a dp-sharded matrix without an all-gather."""
-    mesh, dp = _mesh_dp()
-    if mesh is None:
-        return mat[j]
-    from repro.models.moe import shard_map
-
-    def body(a, jj):
-        rank = jnp.int32(0)
-        for ax in dp:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        c_loc = a.shape[0]
-        lj = jj - rank * c_loc
-        inb = (lj >= 0) & (lj < c_loc)
-        row = jnp.where(inb, a[jnp.clip(lj, 0, c_loc - 1)],
-                        jnp.zeros_like(a[0]) if a.dtype != jnp.int32
-                        else jnp.full_like(a[0], -1))
-        if a.dtype == jnp.int32:
-            # -1-padded id rows: combine via max (non-owners hold -1)
-            for ax in dp:
-                row = jax.lax.pmax(row, ax)
-        else:
-            for ax in dp:
-                row = jax.lax.psum(row, ax)
-        return row
-
-    return shard_map(
-        body, mesh,
-        in_specs=(P(dp, w_axis), P()),
-        out_specs=P(w_axis), check_vma=False)(mat, j)
+    fused = distributed.mesh_fused(body,
+                                   in_specs=(P(dp, "model"), P("model")),
+                                   out_specs=P(dp))
+    if fused is None:
+        return ops.bit_matvec(clause_query_bits, x)[:, 0]
+    return fused(clause_query_bits, x)
 
 
 @jax.jit
@@ -98,9 +60,10 @@ def sparse_greedy_step(
     j = jnp.argmax(score)
     stop = ~feasible[j]
 
-    ids_j = _owner_row(clause_doc_ids, j, w_axis=None)
-    row_q = _owner_row(clause_query_bits, j, w_axis="model") \
-        if _mesh_dp()[0] is not None else clause_query_bits[j]
+    # -1-padded int32 id rows combine via pmax, packed rows via psum — both
+    # owner-local (no all-gather), both falling back to mat[j] off-mesh
+    ids_j = distributed.owner_row(clause_doc_ids, j, w_axis=None)
+    row_q = distributed.owner_row(clause_query_bits, j, w_axis="model")
     new_d = covered_d | bitset.from_indices(
         jnp.maximum(ids_j, 0), covered_d.shape[0] * 32, valid=ids_j >= 0,
         unique=True)  # match-set id lists are sorted+unique by construction

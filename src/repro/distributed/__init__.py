@@ -1,0 +1,26 @@
+"""repro.distributed — meshes, placement, and fused execution.
+
+  * `mesh_context` — the ambient mesh (`use_mesh`, `current_mesh`,
+    `shard_hint`): model code never threads a Mesh through calls.
+  * `plan` — the mesh-resident execution plan: `ExecutionPlan` binds the
+    ambient mesh, the `"shard"` fleet axis and the kernel backend;
+    `mesh_fused` is the single shard_map gate every fused path (solver
+    gain kernels, the cluster scatter-gather router, `partition_gain`)
+    goes through; `owner_row`/`owner_select` are the shared owner-local
+    gather primitives.
+  * `sharding` — FSDP-augmented param specs, optimizer-state spec
+    derivation (training side).
+  * `compression` — quantized collectives.
+"""
+from repro.distributed.mesh_context import (            # noqa: F401
+    current_mesh, shard_hint, use_mesh)
+from repro.distributed.plan import (                    # noqa: F401
+    BACKENDS, SHARD_AXIS, ExecutionPlan, axis_rank, current_plan,
+    mesh_fused, owner_row, owner_select, resolve_backend, shard_map,
+    shard_mesh)
+
+__all__ = [
+    "BACKENDS", "ExecutionPlan", "SHARD_AXIS", "axis_rank", "current_mesh",
+    "current_plan", "mesh_fused", "owner_row", "owner_select",
+    "resolve_backend", "shard_hint", "shard_map", "shard_mesh", "use_mesh",
+]

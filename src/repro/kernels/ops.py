@@ -7,17 +7,26 @@ Three execution paths per op:
   * "xla"        — pure-jnp reference (chunked where memory-naive), the
                    default on CPU hosts and the path dry-run lowering uses
 
-Default resolution: pallas on TPU backends, xla elsewhere. Override with the
-env var REPRO_KERNEL_BACKEND or the per-call `backend=` argument.
+Placement is one table + one resolver: every public op looks its
+implementation up in `_IMPLS` under the path `distributed.ExecutionPlan`
+resolves for it — no per-op `if pallas/interpret/xla` chains. Default
+resolution: pallas on TPU backends, xla elsewhere. Override with the env var
+`REPRO_KERNEL_BACKEND` (a default, or per-op placements like
+"xla,clause_match=interpret") or the per-call `backend=` argument.
+
+Mesh placement rides the same plan: under a `"shard"`-axis mesh,
+`partition_gain` computes each word-aligned partition's gains on the device
+that owns the partition (owner-local slices, one gather of the [C, P] result
+crossing the wire) — integer-exact, bit-identical to the xla reference.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import plan as _plan
 from repro.kernels import bit_matvec as _bm
 from repro.kernels import clause_match as _cm
 from repro.kernels import coverage_gain as _cg
@@ -30,11 +39,9 @@ WORD = 32
 
 
 def resolve_backend(backend: str | None = None) -> str:
-    b = backend or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
-    if b == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    assert b in ("pallas", "interpret", "xla"), b
-    return b
+    """Back-compat alias for `distributed.resolve_backend` (the plan layer
+    owns placement now). Raises ValueError on a bad choice."""
+    return _plan.resolve_backend(backend)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk_w",))
@@ -62,26 +69,6 @@ def _bit_matvec_xla(a_bits: jnp.ndarray, x: jnp.ndarray, chunk_w: int = 256) -> 
     return acc
 
 
-def bit_matvec(a_bits: jnp.ndarray, x: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
-    """gains [C, R] = unpack(a_bits [C, W]) @ x [W*32, R]."""
-    b = resolve_backend(backend)
-    if b == "pallas":
-        return _bm.bit_matvec(a_bits, x)
-    if b == "interpret":
-        return _bm.bit_matvec(a_bits, x, interpret=True)
-    return _bit_matvec_xla(a_bits, x)
-
-
-def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
-    """gains [C] = popcount(a_bits & ~mask)."""
-    b = resolve_backend(backend)
-    if b == "pallas":
-        return _cg.coverage_gain(a_bits, mask)
-    if b == "interpret":
-        return _cg.coverage_gain(a_bits, mask, interpret=True)
-    return _ref.coverage_gain(a_bits, mask)
-
-
 @functools.partial(jax.jit, static_argnames=("chunk_b",))
 def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
                       chunk_b: int = 1024) -> jnp.ndarray:
@@ -101,23 +88,6 @@ def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
     return out.reshape(-1)[:b]
 
 
-def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
-                 backend: str | None = None) -> jnp.ndarray:
-    """eligible [B] bool = any clause row is a bitwise subset of the query.
-
-    This is the batched ψ^clause classifier (paper eq. 8): one call per
-    serving batch replaces the engine's per-query host loop.
-    """
-    if clause_bits.shape[0] == 0 or query_bits.shape[0] == 0:
-        return jnp.zeros((query_bits.shape[0],), bool)
-    b = resolve_backend(backend)
-    if b == "pallas":
-        return _cm.clause_match(query_bits, clause_bits)
-    if b == "interpret":
-        return _cm.clause_match(query_bits, clause_bits, interpret=True)
-    return _clause_match_xla(query_bits, clause_bits)
-
-
 @functools.partial(jax.jit, static_argnames=("bounds",))
 def _partition_gain_xla(a_bits: jnp.ndarray, mask: jnp.ndarray,
                         bounds: tuple[int, ...]) -> jnp.ndarray:
@@ -130,6 +100,67 @@ def _partition_gain_xla(a_bits: jnp.ndarray, mask: jnp.ndarray,
     return jnp.stack(cols, axis=-1)
 
 
+# -- placement table -----------------------------------------------------------
+# op -> {path -> impl}. "interpret" is always the pallas body run through the
+# Pallas interpreter, so the TPU kernel logic is what CPU tests validate.
+
+_IMPLS = {
+    "bit_matvec": {
+        "pallas": _bm.bit_matvec,
+        "interpret": functools.partial(_bm.bit_matvec, interpret=True),
+        "xla": _bit_matvec_xla,
+    },
+    "coverage_gain": {
+        "pallas": _cg.coverage_gain,
+        "interpret": functools.partial(_cg.coverage_gain, interpret=True),
+        "xla": _ref.coverage_gain,
+    },
+    "clause_match": {
+        "pallas": _cm.clause_match,
+        "interpret": functools.partial(_cm.clause_match, interpret=True),
+        "xla": _clause_match_xla,
+    },
+    "partition_gain": {
+        "pallas": _pg.partition_gain,
+        "interpret": functools.partial(_pg.partition_gain, interpret=True),
+        "xla": _partition_gain_xla,
+    },
+    "sparse_gain": {
+        "pallas": _sg.sparse_gain,
+        "interpret": functools.partial(_sg.sparse_gain, interpret=True),
+        "xla": _ref.sparse_gain,
+    },
+}
+
+
+def _impl(op: str, backend: str | None):
+    return _IMPLS[op][_plan.current_plan().placement(op, backend)]
+
+
+# -- public ops ----------------------------------------------------------------
+
+def bit_matvec(a_bits: jnp.ndarray, x: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C, R] = unpack(a_bits [C, W]) @ x [W*32, R]."""
+    return _impl("bit_matvec", backend)(a_bits, x)
+
+
+def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """gains [C] = popcount(a_bits & ~mask)."""
+    return _impl("coverage_gain", backend)(a_bits, mask)
+
+
+def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
+                 backend: str | None = None) -> jnp.ndarray:
+    """eligible [B] bool = any clause row is a bitwise subset of the query.
+
+    This is the batched ψ^clause classifier (paper eq. 8): one call per
+    serving batch replaces the engine's per-query host loop.
+    """
+    if clause_bits.shape[0] == 0 or query_bits.shape[0] == 0:
+        return jnp.zeros((query_bits.shape[0],), bool)
+    return _impl("clause_match", backend)(query_bits, clause_bits)
+
+
 def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
                    bounds, *, backend: str | None = None) -> jnp.ndarray:
     """gains [C, P]: per-partition popcount(a & ~mask) over word ranges.
@@ -137,21 +168,71 @@ def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
     `bounds` is the word-offset cut list (len P+1, bounds[0]=0, bounds[-1]=W)
     of a word-aligned doc-space partition — the batched g_k(.|X) oracle
     behind `core.constraint.PartitionedBudget`.
+
+    Under a `"shard"`-axis mesh the partitions ARE the fleet shards: each
+    device popcounts its own partition's word slice locally (the same
+    owner-local fusion the global Opt/Pes f/g path has) and only the [C, P]
+    result gather crosses the wire — integer-exact, so the output is
+    bit-identical to the single-device path.
     """
     bounds = tuple(int(b) for b in bounds)
-    b = resolve_backend(backend)
-    if b == "pallas":
-        return _pg.partition_gain(a_bits, mask, bounds)
-    if b == "interpret":
-        return _pg.partition_gain(a_bits, mask, bounds, interpret=True)
-    return _partition_gain_xla(a_bits, mask, bounds)
+    plan = _plan.current_plan()
+    # an explicitly pinned path (backend= arg or per-op env placement) wins
+    # over the mesh fusion — pinning exists to exercise a specific kernel
+    if plan.shard_fused and not plan.pinned("partition_gain", backend):
+        return _partition_gain_mesh(a_bits, mask, bounds, plan)
+    return _impl("partition_gain", backend)(a_bits, mask, bounds)
 
 
 def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
     """gains [C] over padded id lists."""
-    b = resolve_backend(backend)
-    if b == "pallas":
-        return _sg.sparse_gain(doc_ids, mask)
-    if b == "interpret":
-        return _sg.sparse_gain(doc_ids, mask, interpret=True)
-    return _ref.sparse_gain(doc_ids, mask)
+    return _impl("sparse_gain", backend)(doc_ids, mask)
+
+
+# -- owner-local partitioned gains over the "shard" mesh axis ------------------
+
+def _partition_gain_mesh(a_bits: jnp.ndarray, mask: jnp.ndarray,
+                         bounds: tuple[int, ...], plan) -> jnp.ndarray:
+    """Each partition's AND-NOT popcount on the device that owns it.
+
+    The [C, W] operand is restacked into per-partition slices [P', C, wmax]
+    (P' padded to a multiple of the shard-axis size, slices zero-padded to
+    the widest partition — padded mask words are all-ones so they contribute
+    0), sharded over `"shard"`, popcounted owner-locally, and the [C, P]
+    columns gathered back. Integer int32 sums: exact at any scale, matching
+    `_partition_gain_xla` bit for bit.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    c, _ = a_bits.shape
+    p = len(bounds) - 1
+    d = plan.n_shard_devices
+    p_pad = -p % d
+    wmax = max(hi - lo for lo, hi in zip(bounds, bounds[1:]))
+
+    ones = jnp.uint32(0xFFFFFFFF)
+
+    def stack(k):
+        if k >= p:      # padding partition: all-ones mask -> zero gains
+            return (jnp.zeros((c, wmax), jnp.uint32),
+                    jnp.full((wmax,), ones, jnp.uint32))
+        lo, hi = bounds[k], bounds[k + 1]
+        wp = wmax - (hi - lo)
+        return (jnp.pad(a_bits[:, lo:hi], ((0, 0), (0, wp))),
+                jnp.concatenate([mask[lo:hi],
+                                 jnp.full((wp,), ones, jnp.uint32)]))
+
+    parts = [stack(k) for k in range(p + p_pad)]
+    a_parts = jnp.stack([a for a, _ in parts])       # [P', C, wmax]
+    m_parts = jnp.stack([m for _, m in parts])       # [P', wmax]
+
+    def body(ap, mp):
+        fresh = ap & ~mp[:, None, :]
+        return jnp.sum(jax.lax.population_count(fresh).astype(jnp.int32),
+                       axis=-1).T                    # [C, P_local]
+
+    ax = plan.shard_axis
+    fused = _plan.mesh_fused(
+        body, in_specs=(P(ax), P(ax)), out_specs=P(None, ax),
+        axis=ax, mesh=plan.mesh)
+    return fused(a_parts, m_parts)[:, :p]

@@ -14,16 +14,30 @@ builds the offline pipeline once, then:
 
 Every knob that shapes traffic is in the header line, so any run is
 reproducible from its log alone.
+
+`--mesh` runs the whole thing on the mesh-resident data plane: a `("shard",)`
+device mesh is installed as the ambient `ExecutionPlan`, the router serves
+every batch as ONE fused shard_map program (replicated ψ classify →
+owner-local AND-match → psum OR-merge) and partitioned solves compute each
+partition's gains on its owning device. On a CPU host with a single device,
+4 host devices are forced (XLA fixes the count at init) so the fused path
+actually engages; results are bit-identical either way.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import os
+import sys
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve through the fused shard_map data plane "
+                         "(forces 4 host devices if only 1 is visible)")
     ap.add_argument("--replicas", type=int, default=2,
                     help="Tier-1 replicas per shard")
     ap.add_argument("--t2-replicas", type=int, default=1)
@@ -55,7 +69,23 @@ def main() -> None:
                     help="parity after every swap + mixed-pair check")
     args = ap.parse_args()
 
+    if args.mesh and "jax" not in sys.modules and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count"
+                                     "=4").strip()
+
     from repro import api, cluster, stream
+
+    stack = contextlib.ExitStack()
+    if args.mesh:
+        from repro import distributed
+        mesh = stack.enter_context(
+            distributed.use_mesh(distributed.shard_mesh()))
+        print(f"[cluster] mesh: {mesh.size} device(s) on axis 'shard' — "
+              f"fused shard_map serve "
+              f"{'ON' if mesh.size > 1 else 'inert (1 device)'}")
 
     print(f"[cluster] scale={args.scale} seed={args.seed} "
           f"scenario={args.scenario} windows={args.windows} "
@@ -159,6 +189,7 @@ def main() -> None:
         print(f"[cluster] mean windowed tier-1 coverage: "
               f"single-static={static.mean_coverage:.3f} "
               f"cluster-retiered={report.mean_coverage:.3f} ({delta:+.3f})")
+    stack.close()
 
 
 if __name__ == "__main__":

@@ -22,20 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import mesh_context
-
-try:
-    from jax import shard_map as _shard_map  # jax >= 0.7
-
-    def shard_map(f, mesh, in_specs, out_specs, **kw):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, **kw)
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _sm_old
-
-    def shard_map(f, mesh, in_specs, out_specs, **kw):
-        kw.pop("check_vma", None)
-        return _sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       **kw)
+from repro.distributed.plan import shard_map  # noqa: F401  (compat re-export)
 
 P = jax.sharding.PartitionSpec
 
