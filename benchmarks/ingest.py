@@ -1,0 +1,223 @@
+"""Ingest section: live corpus growth under load, measured end to end.
+
+Question families (seeded, tiny scale by default so the section stays
+CI-sized; REPRO_BENCH_INGEST_SCALE overrides):
+
+  * append scaling: what does a word-aligned block append cost
+    (`append_docs` + `with_doc_block`) as the arrival batch grows, and how
+    much of the appended block is hole padding?
+  * admission A/B: on identical arrivals and EQUAL budget trajectories
+    (both arms track corpus growth, refits disabled so attribution is
+    clean), does secretary-style optional admission beat mandatory-only
+    growth on back-half windowed coverage?
+  * rolling vs stop-the-world: the same sustained ingest once with
+    replica-by-replica corpus rollouts and once with `immediate` swaps —
+    both verified against the versioned single-tier oracle — plus the
+    loadgen view: simulated p95/p99 when a corpus swap lands mid-traffic
+    as a rolling outage vs one fleet-wide stop.
+  * sustained ingest: the full serve → ingest → refit loop on a sharded
+    fleet with per-window verification — the bench's outage count is
+    `failed_windows` and the acceptance bar is zero.
+
+Every subsection records its own wall-clock `seconds` next to its numbers
+(PR 4 convention), on top of the section-level seconds `common` stamps.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+
+INGEST_SCALE = os.environ.get("REPRO_BENCH_INGEST_SCALE", "tiny")
+N_WINDOWS = int(os.environ.get("REPRO_BENCH_INGEST_WINDOWS", "10"))
+APPEND_BATCHES = (16, 64, 256)
+
+
+def _fresh_pipe(data, n_shards: int = 2):
+    from repro import api
+    return api.TieringPipeline.from_data(data).solve(
+        "greedy", budget_frac=0.5, budget_split="traffic",
+        n_shards=n_shards)
+
+
+def _ingest_kw(**over):
+    kw = dict(scenario="rotate", n_windows=N_WINDOWS,
+              queries_per_window=256, seed=0, arrivals_per_window=64.0,
+              correlation=0.6, budget_policy="track_corpus")
+    kw.update(over)
+    return kw
+
+
+def append_scaling(data) -> dict:
+    """Block-append + device-problem growth wall time per arrival batch."""
+    from repro import ingest
+    from repro.data import incidence
+
+    out = {}
+    t_sub = time.perf_counter()
+    feed = ingest.DocumentFeed(log=data.log, vocab_size=data.corpus.vocab_size,
+                               rate=float(max(APPEND_BATCHES)), seed=0)
+    docs = list(feed.window(0))
+    for n in APPEND_BATCHES:
+        pipe = _fresh_pipe(data)
+        batch = (docs * (n // max(len(docs), 1) + 1))[:n]
+        t0 = time.perf_counter()
+        delta = incidence.append_docs(pipe.data, batch)
+        problem = pipe.problem.with_doc_block(delta.clause_cols, delta.n_docs)
+        dt = time.perf_counter() - t0
+        out[n] = {
+            "docs_per_s": n / max(dt, 1e-9),
+            "words_appended": delta.word_hi - delta.word_lo,
+            "holes": delta.n_holes,
+            "n_docs_after": problem.n_docs,
+            "seconds": dt,
+        }
+        emit(f"ingest_append{n}", 1e6 * dt / n,
+             f"docs_per_s={out[n]['docs_per_s']:.0f};"
+             f"words={out[n]['words_appended']};holes={delta.n_holes}")
+    out["seconds"] = time.perf_counter() - t_sub
+    return out
+
+
+def admission_ab(data) -> dict:
+    """Optional admission on vs off at equal budget, identical arrivals.
+
+    Refits are disabled on BOTH arms so the only difference is the policy;
+    both arms track corpus growth, so budget trajectories are identical."""
+    from repro import ingest
+
+    t_sub = time.perf_counter()
+    arms = {}
+    for arm in ("off", "on"):
+        t0 = time.perf_counter()
+        rep = ingest.run_ingest(
+            _fresh_pipe(data), admission=(arm == "on"), enable_refit=False,
+            **_ingest_kw())
+        arms[arm] = {
+            "mean_cov": rep.mean_coverage, "late_cov": rep.late_coverage,
+            "n_ingested": rep.n_ingested, "n_admitted": rep.n_admitted,
+            "seconds": time.perf_counter() - t0,
+        }
+        emit(f"ingest_admission_{arm}", 0.0,
+             f"mean_cov={rep.mean_coverage:.4f};"
+             f"late_cov={rep.late_coverage:.4f};"
+             f"ingested={rep.n_ingested};admitted={rep.n_admitted}")
+    delta = arms["on"]["late_cov"] - arms["off"]["late_cov"]
+    arms["late_cov_delta"] = delta
+    arms["seconds"] = time.perf_counter() - t_sub
+    emit("ingest_admission_delta", 0.0,
+         f"late_cov_delta={delta:+.5f};"
+         f"admitted={arms['on']['n_admitted']}")
+    return arms
+
+
+def rolling_vs_stw(data) -> dict:
+    """Same sustained ingest under both rollout disciplines, verified; then
+    the loadgen tail-latency view of a swap landing mid-traffic."""
+    from repro import cluster, ingest
+
+    t_sub = time.perf_counter()
+    out = {}
+    for mode in ("rolling", "stw"):
+        t0 = time.perf_counter()
+        pipe = _fresh_pipe(data)
+        fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+        rep = ingest.run_ingest(pipe, engine=fleet, rollout=mode,
+                                verify=True, **_ingest_kw())
+        out[mode] = {
+            "mean_cov": rep.mean_coverage,
+            "failed_windows": rep.failed_windows(),
+            "final_version": rep.windows[-1].corpus_version,
+            "consistent": fleet.consistency_ok(),
+            "ingest_s_per_window": float(sum(
+                w.ingest_seconds for w in rep.windows)) / len(rep.windows),
+            "seconds": time.perf_counter() - t0,
+        }
+        emit(f"ingest_rollout_{mode}",
+             1e6 * out[mode]["ingest_s_per_window"],
+             f"cov={rep.mean_coverage:.4f};"
+             f"failed={rep.failed_windows()};"
+             f"v={out[mode]['final_version']};"
+             f"consistent={out[mode]['consistent']}")
+
+    # loadgen view: one corpus swap mid-stream, rolling outages vs one
+    # fleet-wide stop, identical arrivals + ingest write stream on both arms
+    pipe = _fresh_pipe(data)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+    sample = data.log.queries[:min(2048, data.log.n_queries)]
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    elig = fleet.classify(sample)
+    lat = {}
+    for mode in ("rolling", "stw"):
+        rep = cluster.run_loadgen(plan, elig, n_queries=4000, seed=0,
+                                  rollout_at_s=0.05, swap_ms=5.0,
+                                  rollout_mode=mode, ingest_qps=200.0)
+        lat[mode] = {
+            "p95_ms": rep.p95_ms, "p99_ms": rep.p99_ms,
+            "max_ms": rep.max_ms,
+            "stw_delayed_queries": rep.stw_delayed_queries,
+            "n_ingest_events": rep.n_ingest_events,
+        }
+        emit(f"ingest_loadgen_{mode}", 0.0,
+             f"p95={rep.p95_ms:.4f};p99={rep.p99_ms:.4f};"
+             f"max={rep.max_ms:.4f};delayed={rep.stw_delayed_queries};"
+             f"ingest_events={rep.n_ingest_events}")
+    out["loadgen"] = lat
+    out["seconds"] = time.perf_counter() - t_sub
+    return out
+
+
+def sustained_ingest(data) -> dict:
+    """The full loop — serve, ingest, refit on drift — on a rolling fleet
+    with per-window versioned parity checks. Zero failed windows is the
+    acceptance bar."""
+    from repro import ingest
+
+    t_sub = time.perf_counter()
+    pipe = _fresh_pipe(data)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+    rep = ingest.run_ingest(pipe, engine=fleet, rollout="rolling",
+                            verify=True, **_ingest_kw())
+    out = {
+        "windows": len(rep.windows),
+        "mean_cov": rep.mean_coverage,
+        "n_ingested": rep.n_ingested,
+        "n_admitted": rep.n_admitted,
+        "n_refits": rep.n_refits,
+        "failed_windows": rep.failed_windows(),
+        "final_version": rep.windows[-1].corpus_version,
+        "final_docs": rep.windows[-1].n_docs,
+        "consistent": fleet.consistency_ok(),
+        "seconds": time.perf_counter() - t_sub,
+    }
+    emit("ingest_sustained", 1e6 * out["seconds"] / len(rep.windows),
+         f"cov={rep.mean_coverage:.4f};ingested={rep.n_ingested};"
+         f"admitted={rep.n_admitted};refits={rep.n_refits};"
+         f"failed={out['failed_windows']};v={out['final_version']};"
+         f"consistent={out['consistent']}")
+    return out
+
+
+def run() -> dict:
+    from repro.data import incidence, synthetic
+
+    corpus, log = synthetic.make_tiering_dataset(0, INGEST_SCALE)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+
+    results: dict[str, dict] = {}
+    results["append_scaling"] = append_scaling(data)
+    results["admission_ab"] = admission_ab(data)
+    results["rolling_vs_stw"] = rolling_vs_stw(data)
+    results["sustained_ingest"] = sustained_ingest(data)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    from benchmarks import common
+    common.begin_section("ingest", scale=INGEST_SCALE)
+    run()
+    for path in common.write_json():
+        print(f"# wrote {path}", file=sys.stderr)

@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 SECTIONS = ("kernels", "solvers", "parallel", "generalization", "stream",
-            "cluster", "roofline")
+            "cluster", "ingest", "roofline")
 
 
 def main() -> None:
@@ -36,6 +36,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_SCALE"] = args.scale
         os.environ["REPRO_BENCH_STREAM_SCALE"] = args.scale
         os.environ["REPRO_BENCH_CLUSTER_SCALE"] = args.scale
+        os.environ["REPRO_BENCH_INGEST_SCALE"] = args.scale
     selected = [s for s in args.sections.split(",") if s] or list(SECTIONS)
     unknown = set(selected) - set(SECTIONS)
     if unknown:
@@ -45,7 +46,7 @@ def main() -> None:
     from benchmarks import common
 
     print("name,us_per_call,derived")
-    from benchmarks import cluster, generalization, kernels_micro, \
+    from benchmarks import cluster, generalization, ingest, kernels_micro, \
         parallel_scaling, roofline, solvers, streaming
 
     def run_roofline() -> None:
@@ -64,6 +65,7 @@ def main() -> None:
         "generalization": (generalization.run, {}),
         "stream": (streaming.run, {"scale": streaming.STREAM_SCALE}),
         "cluster": (cluster.run, {"scale": cluster.CLUSTER_SCALE}),
+        "ingest": (ingest.run, {"scale": ingest.INGEST_SCALE}),
         "roofline": (run_roofline, {}),
     }
     try:

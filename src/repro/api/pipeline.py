@@ -286,6 +286,14 @@ class TieringPipeline:
             raise ValueError(
                 f"solver {config.solver!r} does not support warm starts; "
                 "pass state=None for a cold refit")
+        if state is not None:
+            wd = int(np.asarray(state.covered_d).shape[0])
+            if wd != self.problem.wd:
+                raise ValueError(
+                    f"stale warm-start state: covered_d has {wd} words but "
+                    f"the problem has wd={self.problem.wd} (corpus appended "
+                    "since the state was captured?); re-derive it with "
+                    "problem.state_for before refitting")
         self.problem = self.problem.with_weights(weights)
         if state is not None and config.partitioned:
             # re-allocation can shrink a cap below the warm prefix's frozen
@@ -296,6 +304,30 @@ class TieringPipeline:
                                   resolve_constraint(self.problem, config))
         self.config = config
         self.result = registry.solve(self.problem, config, state=state)
+        self._tiering = None
+        return self
+
+    def adopt_selection(self, state: SolverState) -> "TieringPipeline":
+        """Install an externally-evolved selection as the current result.
+
+        The ingest admission loop (repro.ingest) grows the selection between
+        refits — mandatory Tier-1 admissions plus secretary-admitted clauses
+        applied via `SCSKProblem.apply` — and this folds that state back into
+        the pipeline so `tiering()`, `refit(state=...)` and `deploy*` see it.
+        The state must be sized for the CURRENT problem (post-append widths).
+        """
+        if self.result is None:
+            raise RuntimeError("call solve() before adopt_selection()")
+        wd = int(np.asarray(state.covered_d).shape[0])
+        if wd != self.problem.wd:
+            raise ValueError(
+                f"state covered_d has {wd} words, problem has "
+                f"wd={self.problem.wd}; derive the state against the "
+                "current (post-append) problem")
+        self.result.state = state
+        self.result.selected = np.asarray(state.selected)
+        self.result.f_final = float(self.problem.f_value(state.covered_q))
+        self.result.g_final = float(state.g_used)
         self._tiering = None
         return self
 

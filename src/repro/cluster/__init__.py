@@ -48,16 +48,18 @@ from repro.cluster.loadgen import (                    # noqa: F401
 from repro.cluster.mesh_serve import (                 # noqa: F401
     MeshRouteTable, serve_fused)
 from repro.cluster.rollout import (                    # noqa: F401
-    ClusterTieringBuffer, RollingSwap)
+    ClusterTieringBuffer, RollingSwap, StaleCorpusError)
 from repro.cluster.router import (                     # noqa: F401
     BatchTrace, ClusterRouter, ShardReplica, TieredCluster)
 from repro.cluster.shard import (                      # noqa: F401
-    DocShard, plan_shards, shard_postings, shard_tier_postings)
+    DocShard, grow_shards, plan_shards, shard_postings,
+    shard_tier_postings)
 
 __all__ = [
     "BatchTrace", "ClusterPlan", "ClusterRouter", "ClusterTieringBuffer",
     "DocShard", "LoadgenReport", "MeshRouteTable", "ReplicaSuggestion",
-    "RollingSwap", "ShardReplica", "TieredCluster", "fit_service_model",
-    "plan_shards", "run_loadgen", "serve_fused", "shard_postings",
-    "shard_tier_postings", "suggest_replicas",
+    "RollingSwap", "ShardReplica", "StaleCorpusError", "TieredCluster",
+    "fit_service_model", "grow_shards", "plan_shards", "run_loadgen",
+    "serve_fused", "shard_postings", "shard_tier_postings",
+    "suggest_replicas",
 ]

@@ -18,6 +18,18 @@ Optionally, a rolling Tier-1 swap can be injected mid-run (`rollout_at_s`):
 replicas go unavailable one at a time for `swap_ms` each, in the same
 replica-major order the live `RollingSwap` uses; eligible queries fall back
 to the Tier-2 scatter when no Tier-1 cover remains, exactly like the router.
+With `rollout_mode="stw"` the same aggregate swap time is instead ONE global
+outage window — the whole fleet is down and every query arriving inside it
+waits for the rebuild — which is the stop-the-world comparison arm for the
+rolling-ingest benchmarks.
+
+Ingest traffic (repro.ingest): `ingest_qps` adds a seeded Poisson stream of
+document-append events. Grow-mode appends land every new word in the LAST
+shard (`shard.grow_shards`), so each event writes `ingest_words` words into
+every Tier-2 replica of that shard — writes queue in the same FIFO as reads
+and show up as read-latency pressure, which is exactly the interference the
+ingest benchmarks measure. `ingest_qps=0` draws nothing extra from the rng,
+so query-only runs stay bit-identical to the pre-ingest generator.
 """
 from __future__ import annotations
 
@@ -88,6 +100,10 @@ class LoadgenReport:
     max_t2_util: float = 0.0
     max_t1_backlog_ms: float = 0.0
     max_t2_backlog_ms: float = 0.0
+    # ingest-under-load observability (repro.ingest)
+    n_ingest_events: int = 0
+    ingest_words_total: int = 0          # words written fleet-wide
+    stw_delayed_queries: int = 0         # arrivals inside the stw outage
 
     def line(self) -> str:
         return (f"qps={self.throughput_qps:,.0f} (offered {self.offered_qps:,.0f})"
@@ -102,15 +118,27 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 seed: int = 0, t_fixed_us: float = 20.0,
                 t_word_us: float = 4.0, straggler_p: float = 0.01,
                 straggler_x: float = 8.0, rollout_at_s: float | None = None,
-                swap_ms: float = 5.0) -> LoadgenReport:
+                swap_ms: float = 5.0, rollout_mode: str = "rolling",
+                ingest_qps: float = 0.0,
+                ingest_words: int = 64) -> LoadgenReport:
     """Simulate `n_queries` open-loop arrivals; queries cycle through the
     `eligible` flags (a classified sample of real traffic)."""
+    if rollout_mode not in ("rolling", "stw"):
+        raise ValueError(f"rollout_mode must be 'rolling' or 'stw', "
+                         f"got {rollout_mode!r}")
     rng = np.random.default_rng(seed)
     eligible = np.asarray(eligible, bool)
     if eligible.size == 0:
         eligible = np.zeros(1, bool)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_queries))
     straggle = rng.random((n_queries, plan.n_shards)) < straggler_p
+    # ingest arrivals draw AFTER the query stream, so ingest_qps=0 runs are
+    # bit-identical to the pre-ingest generator
+    ingest_times = np.empty(0)
+    if ingest_qps > 0:
+        n_ing = max(1, int(round(ingest_qps * float(arrivals[-1]))))
+        ingest_times = np.cumsum(
+            rng.exponential(1.0 / ingest_qps, size=n_ing))
 
     # per-replica next-free times, flat-indexed [tier][shard][replica]
     free_t1 = [np.zeros(len(g)) for g in plan.t1_words]
@@ -121,7 +149,15 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
 
     # replica-major rollout outage windows: (start, end) per t1 replica
     outages: dict[tuple[int, int], tuple[float, float]] = {}
-    if rollout_at_s is not None:
+    global_outage: tuple[float, float] | None = None
+    if rollout_at_s is not None and rollout_mode == "stw":
+        # stop-the-world: the SAME aggregate swap time (every replica of
+        # both tiers), concentrated into one fleet-wide outage window
+        n_reps = sum(len(g) for g in plan.t1_words) + \
+            sum(len(g) for g in plan.t2_words)
+        global_outage = (rollout_at_s,
+                         rollout_at_s + swap_ms * 1e-3 * n_reps)
+    elif rollout_at_s is not None:
         t = rollout_at_s
         n_reps = max((len(g) for g in plan.t1_words), default=0)
         for r in range(n_reps):
@@ -139,9 +175,35 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
     n_t1 = 0
     fallbacks = 0
     per_shard_t2 = np.zeros(plan.n_shards, np.int64)
+    n_ingest = 0
+    ingest_total = 0
+    stw_delayed = 0
+    ing_ptr = 0
+    last = plan.n_shards - 1       # grow-mode appends write the LAST shard
+
+    def apply_ingest(until: float) -> None:
+        """Queue every ingest write arriving before `until` on the last
+        shard's Tier-2 replicas (all replicas apply every write)."""
+        nonlocal ing_ptr, n_ingest, ingest_total
+        while ing_ptr < len(ingest_times) and ingest_times[ing_ptr] <= until:
+            it = float(ingest_times[ing_ptr])
+            if global_outage and global_outage[0] <= it < global_outage[1]:
+                it = global_outage[1]      # writes wait out the outage too
+            service = (t_fixed_us + ingest_words * t_word_us) * 1e-6
+            for r in range(len(plan.t2_words[last])):
+                start = max(it, free_t2[last][r])
+                free_t2[last][r] = start + service
+                busy_t2[last][r] += service
+            ingest_total += ingest_words * len(plan.t2_words[last])
+            n_ingest += 1
+            ing_ptr += 1
 
     for i in range(n_queries):
         t = arrivals[i]
+        apply_ingest(t)
+        if global_outage and global_outage[0] <= t < global_outage[1]:
+            stw_delayed += 1
+            t = global_outage[1]           # the fleet is down: wait it out
         elig = bool(eligible[i % eligible.size])
         use_t1 = False
         if elig:
@@ -189,8 +251,9 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 done = max(done, free_t2[s][r])
                 fleet_words += words
                 per_shard_t2[s] += words
-        latencies[i] = done - t
+        latencies[i] = done - arrivals[i]  # from TRUE arrival (stw delays)
 
+    apply_ingest(float("inf"))             # drain writes past the last read
     makespan = max(
         float(arrivals[-1] + latencies[-1]),
         max((float(f.max()) for f in free_t1 + free_t2 if f.size), default=0.0)
@@ -215,6 +278,9 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                               default=0.0) / max(makespan, 1e-12)),
         max_t1_backlog_ms=float(backlog[0] * 1e3),
         max_t2_backlog_ms=float(backlog[1] * 1e3),
+        n_ingest_events=n_ingest,
+        ingest_words_total=int(ingest_total),
+        stw_delayed_queries=stw_delayed,
     )
 
 

@@ -26,9 +26,12 @@ content, which is exactly what lets the mesh hold one copy per shard).
 Operands live in a `MeshRouteTable`: per-shard slices are zero-padded to the
 widest shard and stacked leading-axis-sharded over `"shard"` (pad shards
 write zeros into a scratch word range past the real index, so they never
-touch owned words). Tables are built once per (generation content, topology)
-and cached by the router; batch shapes are bucketed to powers of two so
-recompiles stay rare.
+touch owned words). Tables are built once per (generation content, CORPUS
+VERSION, topology) — a corpus append invalidates by key, and the table's
+Tier-2 slices come from the buffer's pinned snapshot rather than the live
+replicas, so a mid-roll replica can never leak a mixed-version slice into
+the fused path. Batch shapes are bucketed to powers of two so recompiles
+stay rare.
 """
 from __future__ import annotations
 
@@ -62,23 +65,27 @@ class MeshRouteTable:
     vocab_size: int
 
 
-def build_table(shards, t2_slices, buf, n_docs_words: int,
-                vocab_size: int, n_devices: int) -> MeshRouteTable:
+def build_table(buf, n_devices: int, *, use_t1: bool = True) -> MeshRouteTable:
     """Stack per-shard resident slices for the fused program.
 
-    `buf` is the generation's `ClusterTieringBuffer` (its `shard_postings`
-    are the SAME bits a committed replica holds), or None for the
-    mid-rollout Tier-2-only gap — then the ψ clause set is empty, every
-    query routes to Tier 2, and the program stays one fused dispatch.
+    Every operand comes from ONE `ClusterTieringBuffer`: its Tier-1
+    sub-indexes (the SAME bits a committed replica holds) and its pinned
+    corpus snapshot — shard plan, Tier-2 slices, global width — so a table
+    can never pair tiers from different corpus versions (repro.ingest).
+    With `use_t1=False` (the mid-rollout gap, served entirely at the
+    buffer's corpus version) the ψ clause set is empty and every query
+    routes to the buffer's Tier-2 slices, still one fused dispatch.
     """
+    shards = buf.shards
+    vocab_size = buf.tiering.vocab_size
     wmax = max(s.n_words for s in shards)
     s_pad = -len(shards) % n_devices
-    v = int(np.asarray(t2_slices[0]).shape[0])
+    v = int(np.asarray(buf.t2_postings[0]).shape[0])
     t1_l, t2_l, off, wid, t1w = [], [], [], [], []
     for s in shards:
         pad = ((0, 0), (0, wmax - s.n_words))
-        t2_l.append(np.pad(np.asarray(t2_slices[s.index]), pad))
-        if buf is not None:
+        t2_l.append(np.pad(np.asarray(buf.t2_postings[s.index]), pad))
+        if use_t1:
             t1_l.append(np.pad(np.asarray(buf.shard_postings[s.index]), pad))
             t1w.append(buf.shard_words[s.index])
         else:
@@ -89,17 +96,17 @@ def build_table(shards, t2_slices, buf, n_docs_words: int,
     for _ in range(s_pad):          # pad shards: zero words, scratch offset
         t1_l.append(np.zeros((v, wmax), np.uint32))
         t2_l.append(np.zeros((v, wmax), np.uint32))
-        off.append(n_docs_words)
+        off.append(buf.w_total)
         wid.append(0)
         t1w.append(0)
-    cbits = buf.tiering.clause_vocab_bits if buf is not None else \
+    cbits = buf.tiering.clause_vocab_bits if use_t1 else \
         np.zeros((0, max(1, -(-vocab_size // 32))), np.uint32)
     return MeshRouteTable(
         clause_bits=jnp.asarray(cbits),
         t1=jnp.asarray(np.stack(t1_l)), t2=jnp.asarray(np.stack(t2_l)),
         off=jnp.asarray(off, jnp.int32), wid=jnp.asarray(wid, jnp.int32),
         t1w=jnp.asarray(t1w, jnp.int32),
-        w_total=n_docs_words, wmax=wmax, vocab_size=vocab_size)
+        w_total=buf.w_total, wmax=wmax, vocab_size=vocab_size)
 
 
 _PROGRAMS: dict = {}

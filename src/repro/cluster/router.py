@@ -2,23 +2,28 @@
 
 Per batch, the `ClusterRouter`:
 
-  1. picks the newest COMPLETE Tier-1 generation (every shard with a
-     non-empty local D₁ has a live, non-draining replica at that generation);
+  1. picks the newest COMPLETE generation (every shard with a non-empty
+     local D₁ has a live, non-draining Tier-1 replica at that generation's
+     content, AND every shard has a Tier-2 replica at that generation's
+     corpus version);
   2. runs ψ^clause ONCE for the whole batch through the packed
      clause-subset-test kernel (`kernels.ops.clause_match`) with that
      generation's clause set;
   3. scatters eligible queries to one Tier-1 replica per (non-empty) shard
      and the rest to one Tier-2 replica per shard, round-robin within each
-     replica group;
+     replica group — replicas are picked by CONTENT, so a batch is served
+     entirely at one corpus version;
   4. gathers by OR-merging the per-shard packed match bitsets — shards own
      disjoint word ranges, so the merge is a word-slice placement and the
-     result is bit-identical to single-tier matching.
+     result is bit-identical to single-tier matching at that version.
 
-The (ψ, Tier-1) pairing invariant: classification and Tier-1 serving always
-use the SAME generation, per batch, by construction — `BatchTrace` records
-both so tests can assert no window ever observed a mixed pair. If a rolling
-swap leaves no complete generation (single-replica groups mid-swap), the
-whole batch is served from Tier 2, which is exact for any query.
+The (ψ, Tier-1, Tier-2) pairing invariant: classification and both serving
+tiers always use the SAME generation's contents, per batch, by construction —
+`BatchTrace` records all three (plus the corpus version) so tests can assert
+no window ever observed a mixed triple. If a rolling swap leaves no complete
+generation (single-replica groups mid-swap), the whole batch is served from
+the newest corpus version with full Tier-2 cover, which is exact for any
+query at that version.
 """
 from __future__ import annotations
 
@@ -28,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster import shard as shard_mod
-from repro.cluster.rollout import ClusterTieringBuffer, RollingSwap
+from repro.cluster.rollout import (ClusterTieringBuffer, RollingSwap,
+                                   StaleCorpusError)
 from repro.core import bitset
 from repro.core.tiering import ClauseTiering
 from repro.serve import matching
@@ -39,10 +45,10 @@ class ShardReplica:
     """One serving unit: a (tier, shard) sub-index plus its own counters.
 
     `content` identifies the sub-index BITS the replica holds (see
-    `ClusterTieringBuffer.shard_content`); `generation` is the newest
-    generation it has acknowledged. The two differ exactly when a rollout
-    carried the replica's content forward (its shard didn't change), which
-    is what lets per-shard generations roll independently.
+    `ClusterTieringBuffer.shard_content` / `t2_content`); `generation` is
+    the newest generation it has acknowledged. The two differ exactly when
+    a rollout carried the replica's content forward (its shard didn't
+    change), which is what lets per-shard generations roll independently.
     """
 
     def __init__(self, tier: int, shard: shard_mod.DocShard,
@@ -61,11 +67,13 @@ class ShardReplica:
         self.n_installs = 0          # real sub-index installs (not carries)
 
     def commit(self, postings, words_per_query: int, generation: int,
-               content: int | None = None) -> None:
+               content: int | None = None, shard=None) -> None:
         """Install a new generation and rejoin the rotation (rollout phase 2).
 
         When `content` matches what the replica already holds, the commit is
-        metadata-only: no device buffer moves (a carried shard costs nothing).
+        metadata-only: no device buffer moves (a carried shard costs
+        nothing). `shard` updates the replica's DocShard when a corpus
+        append grew its word range (repro.ingest grow mode).
         """
         if content is None or content != self.content:
             self.postings = jnp.asarray(postings)
@@ -74,6 +82,8 @@ class ShardReplica:
         self.generation = generation
         if content is not None:
             self.content = content
+        if shard is not None:
+            self.shard = shard
         self.draining = False
 
     def match(self, tokens: jnp.ndarray) -> np.ndarray:
@@ -97,9 +107,10 @@ class ShardReplica:
 
 @dataclasses.dataclass(frozen=True)
 class BatchTrace:
-    """What one batch observed: the ψ generation it was classified with and,
-    per served shard, the CONTENT each Tier-1 replica held vs the content
-    that ψ's generation prescribes for that shard."""
+    """What one batch observed: the ψ generation it was classified with, the
+    corpus version it was served at, and per served shard the CONTENT each
+    replica held vs the content that generation prescribes — for BOTH
+    tiers, so a mixed (ψ, Tier-1, Tier-2) triple is disprovable per batch."""
     psi_generation: int          # -1 = Tier-2 fallback (no ψ consulted)
     t1_generations: tuple[int, ...]
     n_tier1: int
@@ -107,13 +118,18 @@ class BatchTrace:
     t1_shards: tuple[int, ...] = ()         # shard index per Tier-1 server
     t1_contents: tuple[int, ...] = ()       # content each server held
     expected_contents: tuple[int, ...] = ()  # ψ generation's per-shard content
+    corpus_version: int = 0                 # version the batch was served at
+    t2_contents: tuple[int, ...] = ()       # Tier-2 content each server held
+    expected_t2_contents: tuple[int, ...] = ()  # version's per-shard slices
 
     @property
     def consistent(self) -> bool:
-        """No mixed (ψ, Tier-1) pair, PER SHARD: every Tier-1 server held
-        exactly the sub-index content the ψ generation prescribes for its
-        shard (generation numbers may differ across shards mid-roll — only
-        content equality is what Theorem 3.1 needs)."""
+        """No mixed (ψ, Tier-1, Tier-2) triple, PER SHARD: every server held
+        exactly the sub-index content the served generation prescribes for
+        its shard and tier (generation numbers may differ across shards
+        mid-roll — only content equality is what Theorem 3.1 needs)."""
+        if self.t2_contents != self.expected_t2_contents:
+            return False
         if self.t1_contents or self.expected_contents:
             return self.t1_contents == self.expected_contents
         return all(g == self.psi_generation for g in self.t1_generations)
@@ -124,7 +140,7 @@ class ClusterRouter:
                  t1_groups: list[list[ShardReplica]],
                  t2_groups: list[list[ShardReplica]],
                  buffer0: ClusterTieringBuffer, n_docs: int):
-        self.shards = shards
+        self.shards = shards            # current target plan (grows in place)
         self.t1 = t1_groups
         self.t2 = t2_groups
         self.n_docs = n_docs
@@ -135,7 +151,8 @@ class ClusterRouter:
         self._mesh_tables: dict = {}     # fused-serve operands per generation
         self.trace: list[BatchTrace] = []
         self.stats = ServeStats(
-            full_words_per_query=sum(s.n_words for s in shards))
+            full_words_per_query=buffer0.w_total
+            or sum(s.n_words for s in shards))
 
     # -- generations ----------------------------------------------------------
     @property
@@ -149,29 +166,62 @@ class ClusterRouter:
     def live_generations(self) -> set[int]:
         return {r.generation for group in self.t1 for r in group}
 
+    def _t2_covered(self, buf: ClusterTieringBuffer, *,
+                    allow_draining: bool) -> bool:
+        """Every shard has a Tier-2 replica at the buffer's corpus version.
+
+        `allow_draining=True` is the fallback relaxation: a draining replica
+        still physically holds its slice (drain only quiesces new batches
+        ahead of an install), so reading it keeps the batch exact."""
+        if not buf.t2_content:
+            return True                  # legacy hand-built buffer: unversioned
+        return all(any(r.content == buf.t2_content[s.index]
+                       and (allow_draining or not r.draining)
+                       for r in self.t2[s.index])
+                   for s in (buf.shards or self.shards))
+
     def complete_generations(self) -> list[int]:
-        """Generations with a routable Tier-1 replica on every shard whose
-        local D₁ is non-empty under that generation, oldest first.
+        """Generations servable end to end, oldest first: a routable Tier-1
+        replica on every shard whose local D₁ is non-empty under that
+        generation, AND full Tier-2 cover at that generation's corpus
+        version.
 
         Routable means holding the generation's CONTENT for that shard — a
         replica whose shard was carried across generations serves both, so
         scoped rollouts never open a fallback gap on untouched shards."""
         out = []
         for g, buf in sorted(self._buffers.items()):
-            if all(not buf.shard_nonempty(s.index)
-                   or any(r.content == buf.shard_content[s.index]
-                          and not r.draining
-                          for r in self.t1[s.index])
-                   for s in self.shards):
+            t1_ok = all(not buf.shard_nonempty(s.index)
+                        or any(r.content == buf.shard_content[s.index]
+                               and not r.draining
+                               for r in self.t1[s.index])
+                        for s in (buf.shards or self.shards))
+            if t1_ok and self._t2_covered(buf, allow_draining=False):
                 out.append(g)
         return out
 
+    def _fallback_buffer(self) -> ClusterTieringBuffer:
+        """Newest corpus snapshot with full (possibly draining) Tier-2 cover
+        — the version the mid-rollout gap serves entirely from Tier 2."""
+        for g in sorted(self._buffers, reverse=True):
+            if self._t2_covered(self._buffers[g], allow_draining=True):
+                return self._buffers[g]
+        raise RuntimeError(            # unreachable: rollouts keep old buffers
+            "no live corpus version has full Tier-2 cover")
+
     # -- rolling swaps --------------------------------------------------------
     def begin_rollout(self, buffer: ClusterTieringBuffer) -> None:
+        cur = self._buffers[self.target_generation]
+        if buffer.corpus_version < cur.corpus_version:
+            raise StaleCorpusError(
+                f"rollout buffer was prepared at corpus version "
+                f"{buffer.corpus_version} but the fleet has rolled to "
+                f"{cur.corpus_version}; rebuild it from the appended data "
+                "(prepare_tiering after the corpus swap)")
         if self.rollout is not None:        # supersede: finish the old roll
             self.rollout.run_to_completion()
         self._buffers[buffer.generation] = buffer
-        self.rollout = RollingSwap(buffer, self.t1)
+        self.rollout = RollingSwap(buffer, self.t1, self.t2)
 
     def advance_rollout(self, steps: int = 1) -> None:
         if self.rollout is None:
@@ -188,8 +238,9 @@ class ClusterRouter:
 
     # -- routing --------------------------------------------------------------
     def _pick(self, group: list[ShardReplica], tier: int, shard_idx: int,
-              content: int | None = None) -> ShardReplica:
-        ready = [r for r in group if not r.draining
+              content: int | None = None,
+              draining_ok: bool = False) -> ShardReplica:
+        ready = [r for r in group if (draining_ok or not r.draining)
                  and (content is None or r.content == content)]
         key = (tier, shard_idx)
         i = self._rr.get(key, 0)
@@ -204,7 +255,8 @@ class ClusterRouter:
             buf.tiering.clause_vocab_bits, queries, buf.tiering.vocab_size)
 
     def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
-        """Exact global match sets (sorted doc ids) per query.
+        """Exact global match sets (sorted doc ids) per query, at the served
+        buffer's corpus version.
 
         Two dispatch layouts, bit-identical by construction and pinned by
         tests/test_mesh.py: one host `match_batch` call per shard (the
@@ -220,24 +272,32 @@ class ClusterRouter:
         complete = self.complete_generations()
         if complete:
             gen = complete[-1]              # newest fully-covered generation
-            buf = self._buffers[gen]
+            buf, use_t1 = self._buffers[gen], True
         else:                               # mid-rollout gap: Tier 2 is exact
-            gen, buf = -1, None
+            gen, buf, use_t1 = -1, self._fallback_buffer(), False
+        if buf.w_total and self.stats.full_words_per_query != buf.w_total:
+            # corpus grew (or the served version moved): the saving
+            # denominator follows the version this batch is served at
+            self.stats.full_words_per_query = buf.w_total
         from repro import distributed
         plan = distributed.current_plan()
         if plan.shard_fused:
-            out, elig = self._match_mesh(queries, buf, plan)
+            out, elig = self._match_mesh(queries, buf, use_t1, plan)
         else:
-            out, elig = self._match_host(queries, buf)
-        self._account(buf, gen, elig)
+            out, elig = self._match_host(queries, buf, use_t1)
+        self._account(buf, gen, elig, use_t1)
         self.stats.n_queries += b
-        return [bitset.np_to_indices(row, self.n_docs) for row in out]
+        return [bitset.np_to_indices(row, buf.n_docs or self.n_docs)
+                for row in out]
 
-    def _match_host(self, queries, buf) -> tuple[np.ndarray, np.ndarray]:
+    def _match_host(self, queries, buf, use_t1
+                    ) -> tuple[np.ndarray, np.ndarray]:
         """Sequential per-shard host dispatch; returns (words [B, W], elig)."""
         b = len(queries)
-        out = np.zeros((b, self.stats.full_words_per_query), np.uint32)
-        if buf is not None:
+        shards = buf.shards or self.shards
+        out = np.zeros((b, buf.w_total or self.stats.full_words_per_query),
+                       np.uint32)
+        if use_t1:
             elig = matching.classify_batch(
                 buf.tiering.clause_vocab_bits, queries,
                 buf.tiering.vocab_size)
@@ -247,7 +307,7 @@ class ClusterRouter:
         idx1 = np.nonzero(elig)[0]
         if len(idx1):
             sub = jnp.asarray(toks[idx1])
-            for s in self.shards:
+            for s in shards:
                 if not buf.shard_nonempty(s.index):
                     continue                # D₁ misses this shard: no matches
                 rep = self._served(1, s.index, buf)
@@ -255,48 +315,54 @@ class ClusterRouter:
         idx2 = np.nonzero(~elig)[0]
         if len(idx2):
             sub = jnp.asarray(toks[idx2])
-            for s in self.shards:
-                out[idx2, s.word_lo:s.word_hi] = \
-                    self._served(2, s.index, buf).match(sub)
+            for s in shards:
+                rep = self._served(2, s.index, buf, draining_ok=not use_t1)
+                out[idx2, s.word_lo:s.word_hi] = rep.match(sub)
         return out, np.asarray(elig, bool)
 
-    def _match_mesh(self, queries, buf, plan) -> tuple[np.ndarray, np.ndarray]:
+    def _match_mesh(self, queries, buf, use_t1, plan
+                    ) -> tuple[np.ndarray, np.ndarray]:
         """One fused shard_map program for the whole batch; the replica this
         batch rotates onto still pays the (virtual) scan accounting, so
         observability matches the host path exactly."""
         from repro.cluster import mesh_serve
         # generation identifies the ψ clause set: two generations can share
         # every shard's Tier-1 CONTENT (doc sets equal, clauses not), so
-        # shard_content alone would serve a stale clause_bits table
-        key = ((buf.generation, buf.shard_content) if buf is not None
-               else None, plan.mesh, len(self.shards))
+        # contents alone would serve a stale clause_bits table; the corpus
+        # version + t2 contents invalidate the table across appends
+        key = (buf.generation, buf.corpus_version, buf.shard_content,
+               buf.t2_content, use_t1, plan.mesh,
+               len(buf.shards or self.shards))
         table = self._mesh_tables.get(key)
         if table is None:
-            table = mesh_serve.build_table(
-                self.shards, [g[0].postings for g in self.t2], buf,
-                self.stats.full_words_per_query,
-                self._buffers[self.target_generation].tiering.vocab_size,
-                plan.n_shard_devices)
+            table = mesh_serve.build_table(buf, plan.n_shard_devices,
+                                           use_t1=use_t1)
             if len(self._mesh_tables) > 8:
                 self._mesh_tables.clear()
             self._mesh_tables[key] = table
         out, elig = mesh_serve.serve_fused(table, queries, plan)
         n1 = int(elig.sum())
-        for s in self.shards:
-            if n1 and buf is not None and buf.shard_nonempty(s.index):
+        for s in (buf.shards or self.shards):
+            if n1 and use_t1 and buf.shard_nonempty(s.index):
                 self._served(1, s.index, buf).account(n1)
             if n1 < len(queries):
-                self._served(2, s.index, buf).account(len(queries) - n1)
+                self._served(2, s.index, buf,
+                             draining_ok=not use_t1).account(len(queries) - n1)
         return out, elig
 
-    def _served(self, tier: int, shard_idx: int, buf) -> ShardReplica:
-        """Rotate the replica group and return the serving replica."""
+    def _served(self, tier: int, shard_idx: int, buf,
+                draining_ok: bool = False) -> ShardReplica:
+        """Rotate the replica group and return the serving replica — picked
+        by the BUFFER's content for that tier/shard, so every server this
+        batch touches holds the same corpus version."""
         if tier == 1:
             return self._pick(self.t1[shard_idx], 1, shard_idx,
                               content=buf.shard_content[shard_idx])
-        return self._pick(self.t2[shard_idx], 2, shard_idx)
+        want = buf.t2_content[shard_idx] if buf.t2_content else None
+        return self._pick(self.t2[shard_idx], 2, shard_idx, content=want,
+                          draining_ok=draining_ok)
 
-    def _account(self, buf, gen: int, elig: np.ndarray) -> None:
+    def _account(self, buf, gen: int, elig: np.ndarray, use_t1: bool) -> None:
         """Stats + BatchTrace from the replicas this batch was served by (or
         accounted against, on the fused path) — `_rr` already rotated, so
         `_pick` with a rewound rotation would misattribute; instead the
@@ -304,9 +370,11 @@ class ClusterRouter:
         the groups' current content directly."""
         n1 = int(elig.sum())
         n2 = len(elig) - n1
+        shards = buf.shards or self.shards
         t1_gens, t1_shards, t1_contents, expected = [], [], [], []
+        t2_contents, expected_t2 = [], []
         if n1:
-            for s in self.shards:
+            for s in shards:
                 if not buf.shard_nonempty(s.index):
                     continue
                 want = buf.shard_content[s.index]
@@ -319,13 +387,22 @@ class ClusterRouter:
                 self.stats.tier1_words += n1 * rep.words_per_query
             self.stats.n_tier1 += n1
         if n2:
-            for s in self.shards:
-                self.stats.tier2_words += n2 * self.t2[s.index][0].words_per_query
+            for s in shards:
+                want = buf.t2_content[s.index] if buf.t2_content else None
+                rep = next(r for r in self.t2[s.index]
+                           if (want is None or r.content == want)
+                           and (not use_t1 or not r.draining))
+                self.stats.tier2_words += n2 * rep.words_per_query
+                t2_contents.append(rep.content)
+                expected_t2.append(want if want is not None else rep.content)
         self.trace.append(BatchTrace(
             psi_generation=gen, t1_generations=tuple(t1_gens),
             n_tier1=n1, n_tier2=n2,
             t1_shards=tuple(t1_shards), t1_contents=tuple(t1_contents),
-            expected_contents=tuple(expected)))
+            expected_contents=tuple(expected),
+            corpus_version=buf.corpus_version,
+            t2_contents=tuple(t2_contents),
+            expected_t2_contents=tuple(expected_t2)))
 
 
 class TieredCluster:
@@ -333,9 +410,10 @@ class TieredCluster:
 
     Duck-types the `serve.TieredEngine` surface (`serve`, `classify`,
     `serve_reference`, `stats`, `tiering`, `generation`, `prepare_tiering`,
-    `swap_tiering`) so `stream.RetieringController` drives a whole cluster
-    exactly as it drives one engine — except `swap_tiering` here starts a
-    ROLLING swap that progresses one replica phase per served batch.
+    `swap_tiering`, `swap_corpus`) so `stream.RetieringController` and the
+    ingest loop drive a whole cluster exactly as they drive one engine —
+    except swaps here start ROLLING rollouts that progress one replica phase
+    per served batch.
     """
 
     def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
@@ -344,19 +422,27 @@ class TieredCluster:
         if t1_replicas < 1 or t2_replicas < 1:
             raise ValueError("each replica group needs >= 1 replica")
         self.n_docs = n_docs
+        self.corpus_version = 0
         self._postings_host = np.asarray(postings)
         self.postings_t2 = jnp.asarray(postings)          # oracle index
         self.shards, self._slices = shard_mod.shard_postings(
             self._postings_host, n_docs, n_shards)
         self._content_seq = 0
+        self._t2_dev = [jnp.asarray(sl) for sl in self._slices]
+        self._t2_content = tuple(self._next_content() for _ in self.shards)
         buf0 = self._build_buffer(tiering, generation=0)
         t1 = [[ShardReplica(1, s, buf0.shard_postings[s.index],
                             buf0.shard_words[s.index],
                             content=buf0.shard_content[s.index])
                for _ in range(t1_replicas)] for s in self.shards]
-        t2 = [[ShardReplica(2, s, self._slices[s.index], s.n_words)
+        t2 = [[ShardReplica(2, s, self._t2_dev[s.index], s.n_words,
+                            content=self._t2_content[s.index])
                for _ in range(t2_replicas)] for s in self.shards]
         self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs)
+
+    def _next_content(self) -> int:
+        self._content_seq += 1
+        return self._content_seq
 
     def _shard_t1(self, tiering: ClauseTiering, s) -> np.ndarray:
         return np.asarray(tiering.tier1_docs[s.doc_lo:s.doc_lo + s.n_docs],
@@ -364,11 +450,16 @@ class TieredCluster:
 
     def _build_buffer(self, tiering: ClauseTiering,
                       generation: int) -> ClusterTieringBuffer:
-        """Per-shard sub-indexes + content ids. A shard whose local D₁ slice
-        equals the live target's carries that content id forward (its
-        replicas won't drain during the rollout); changed shards get fresh
-        ids. So a shard-scoped re-tiering builds a buffer that only rolls
-        the shards it touched."""
+        """Per-shard sub-indexes + content ids, pinned to the CURRENT corpus
+        snapshot. A shard whose local D₁ slice equals the live target's
+        carries that content id forward (its replicas won't drain during
+        the rollout); changed shards get fresh ids. So a shard-scoped
+        re-tiering builds a buffer that only rolls the shards it touched."""
+        if len(tiering.tier1_docs) != self.n_docs:
+            raise StaleCorpusError(
+                f"tiering was built for {len(tiering.tier1_docs)} docs but "
+                f"the corpus is at version {self.corpus_version} with "
+                f"{self.n_docs}; rebuild it from the appended data")
         prev = None
         if hasattr(self, "router"):
             prev = self.router._buffers[self.router.target_generation]
@@ -383,11 +474,13 @@ class TieredCluster:
                     self._shard_t1(prev.tiering, s)):
                 contents.append(prev.shard_content[s.index])
             else:
-                self._content_seq += 1
-                contents.append(self._content_seq)
-        return ClusterTieringBuffer(tiering=tiering, shard_postings=posts,
-                                    shard_words=words, generation=generation,
-                                    shard_content=tuple(contents))
+                contents.append(self._next_content())
+        return ClusterTieringBuffer(
+            tiering=tiering, shard_postings=posts, shard_words=words,
+            generation=generation, shard_content=tuple(contents),
+            corpus_version=self.corpus_version, shards=tuple(self.shards),
+            t2_postings=tuple(self._t2_dev), t2_content=self._t2_content,
+            n_docs=self.n_docs, w_total=int(self._postings_host.shape[1]))
 
     # -- engine-compatible surface -------------------------------------------
     @property
@@ -413,12 +506,38 @@ class TieredCluster:
     def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
         return self.router.serve(queries)
 
-    def serve_reference(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
-        """Single-tier, single-shard oracle for correctness tests."""
+    def serve_reference(self, queries: list[tuple[int, ...]], *,
+                        generation: int | None = None,
+                        corpus_version: int | None = None
+                        ) -> list[np.ndarray]:
+        """Single-tier, single-shard oracle for correctness tests.
+
+        By default matches against the NEWEST corpus; pass `corpus_version=`
+        (e.g. `trace[-1].corpus_version`) or `generation=` to reference a
+        batch served mid-ingest-rollout at an older version — the oracle is
+        then the concatenation of that buffer's pinned Tier-2 slices.
+        """
+        if generation is not None and corpus_version is not None:
+            raise ValueError("pass generation= or corpus_version=, not both")
+        postings, n_docs = self.postings_t2, self.n_docs
+        if generation is not None or corpus_version is not None:
+            bufs = self.router._buffers
+            if generation is not None:
+                buf = bufs[generation]
+            else:
+                cands = [b for b in bufs.values()
+                         if b.corpus_version == corpus_version]
+                if not cands:
+                    raise KeyError(
+                        f"no live buffer at corpus version {corpus_version}; "
+                        f"live: {sorted({b.corpus_version for b in bufs.values()})}")
+                buf = max(cands, key=lambda b: b.generation)
+            postings = buf.t2_postings[0] if len(buf.t2_postings) == 1 \
+                else jnp.concatenate(buf.t2_postings, axis=1)
+            n_docs = buf.n_docs
         toks = matching.pad_token_batch(queries)
-        m = np.asarray(matching.match_batch(self.postings_t2,
-                                            jnp.asarray(toks)))
-        return [bitset.np_to_indices(r, self.n_docs) for r in m]
+        m = np.asarray(matching.match_batch(postings, jnp.asarray(toks)))
+        return [bitset.np_to_indices(r, n_docs) for r in m]
 
     def prepare_tiering(self, tiering: ClauseTiering) -> ClusterTieringBuffer:
         """Build every shard's next Tier-1 sub-index OFF the request path."""
@@ -431,6 +550,8 @@ class TieredCluster:
         The rollout advances one drain/swap phase per served batch; pass
         `immediate=True` (or call `drain_rollout`) to complete it with no
         traffic in between. Serving stays exact throughout either way.
+        Raises `StaleCorpusError` for a tiering or prepared buffer built
+        against an older corpus version than the fleet's.
         """
         buf = tiering if isinstance(tiering, ClusterTieringBuffer) \
             else self.prepare_tiering(tiering)
@@ -440,6 +561,53 @@ class TieredCluster:
         if immediate:
             self.drain_rollout()
         return buf.generation
+
+    def swap_corpus(self, postings: np.ndarray, n_docs: int,
+                    tiering: ClauseTiering, *,
+                    immediate: bool = False) -> int:
+        """Roll the fleet to an appended corpus snapshot (repro.ingest).
+
+        Grow mode: the shard plan keeps every existing word range and the
+        LAST shard absorbs the appended words (`shard.grow_shards`), so
+        untouched Tier-2 slices — bit-identical by the append-only layout —
+        carry their content ids and never drain. The new tiering (rebuilt
+        against the appended data, e.g. after mandatory/secretary admission)
+        rides the same rollout, so ψ, Tier-1 and Tier-2 arrive as one
+        generation. `immediate=True` is the stop-the-world rebuild: the
+        whole fleet jumps versions with no traffic in between — the
+        comparator arm for the rolling path's parity tests and benchmarks.
+        """
+        postings = np.asarray(postings)
+        if n_docs < self.n_docs or \
+                postings.shape[1] < self._postings_host.shape[1]:
+            raise ValueError(
+                f"corpus swaps are append-only: got {n_docs} docs x "
+                f"{postings.shape[1]} words, have {self.n_docs} x "
+                f"{self._postings_host.shape[1]}")
+        old_shards = self.shards
+        new_shards = shard_mod.grow_shards(old_shards, n_docs)
+        new_slices = [postings[:, s.word_lo:s.word_hi] for s in new_shards]
+        contents, dev = [], []
+        for s, old in zip(new_shards, old_shards):
+            if s == old:
+                # append-only invariant: same word range => identical bits,
+                # so the resident device slice is reused as-is
+                contents.append(self._t2_content[s.index])
+                dev.append(self._t2_dev[s.index])
+            else:
+                contents.append(self._next_content())
+                dev.append(jnp.asarray(new_slices[s.index]))
+        self._postings_host = postings
+        self.postings_t2 = jnp.asarray(postings)
+        self.shards = new_shards
+        self._slices = new_slices
+        self._t2_dev = dev
+        self._t2_content = tuple(contents)
+        self.n_docs = n_docs
+        self.corpus_version += 1
+        self.router.shards = new_shards
+        self.router.n_docs = n_docs
+        return self.swap_tiering(tiering, immediate=immediate)
 
     def drain_rollout(self) -> None:
         """Finish any in-progress rollout without serving traffic."""
@@ -452,12 +620,13 @@ class TieredCluster:
         return self.router.trace
 
     def consistency_ok(self) -> bool:
-        """True iff no served batch ever saw a mixed (ψ, Tier-1) pair."""
+        """True iff no served batch ever saw a mixed (ψ, Tier-1, Tier-2)
+        triple."""
         return all(t.consistent for t in self.router.trace)
 
     def describe(self) -> str:
         t1n = sum(len(g) for g in self.router.t1)
         t2n = sum(len(g) for g in self.router.t2)
         return (f"{len(self.shards)} shards x ({t1n} t1 + {t2n} t2 replicas)"
-                f"  gen={self.generation}"
+                f"  gen={self.generation}  v{self.corpus_version}"
                 f"  live={sorted(self.router.live_generations())}")

@@ -67,6 +67,15 @@ class SCSKProblem:
 
         Weights may be length `n_queries` (zero-padded here, like
         `from_data`) or already padded to `wq * 32`.
+
+        Corpus appends (repro.ingest) never change the query universe, so a
+        reweighted problem stays valid across `with_doc_block` growth — but
+        the DOC side does change width: a `SolverState` captured before an
+        append has `covered_d` at the old `wd` and cannot seed a post-append
+        solve (old clauses may match appended docs, so zero-padding the
+        bitset would under-count g). Re-derive it at the new width with
+        `state_for(np.nonzero(selected)[0])`; `stream.prune_state` raises a
+        `ValueError` naming the widths if handed a stale-width state.
         """
         def pad(w) -> jax.Array:
             w = np.asarray(w, np.float32)
@@ -85,6 +94,32 @@ class SCSKProblem:
             query_weights=pad(train_weights),
             test_weights=self.test_weights if test_weights is None
             else pad(test_weights),
+        )
+
+    def with_doc_block(self, clause_cols, n_docs: int) -> "SCSKProblem":
+        """Grown copy for an appended word-aligned doc block (repro.ingest).
+
+        `clause_cols` is the uint32 [C, wb] clause×block incidence from
+        `data.incidence.append_docs` (`AppendDelta.clause_cols`); the block's
+        columns are concatenated onto `clause_doc_bits` and `n_docs` becomes
+        the post-append count. The query side (bitsets and weights) is
+        shared with `self` untouched — documents never change the query
+        universe. States captured against `self` are stale at the new width;
+        see `with_weights` notes.
+        """
+        cols = jnp.asarray(np.asarray(clause_cols, np.uint32))
+        if cols.shape[0] != self.n_clauses:
+            raise ValueError(
+                f"clause_cols must have {self.n_clauses} rows, "
+                f"got {cols.shape[0]}")
+        if n_docs < self.n_docs:
+            raise ValueError("doc blocks are append-only: n_docs "
+                             f"{n_docs} < current {self.n_docs}")
+        return dataclasses.replace(
+            self,
+            clause_doc_bits=jnp.concatenate(
+                [self.clause_doc_bits, cols], axis=1),
+            n_docs=n_docs,
         )
 
     # -- shapes ---------------------------------------------------------------

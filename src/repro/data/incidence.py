@@ -8,6 +8,11 @@ engine consumes:
   clause_query_bits uint32 [C, Wq]   {q : c ⊆ q} per clause
   query_doc_bits    uint32 [Nq, Wd]  m(q) per unique query (flow baselines)
   clause_doc_ids    int32  [C, M]    padded+sorted m(c) id lists (sparse path)
+
+`append_docs` grows every one of those structures in place by a whole-word
+document block (repro.ingest): existing words are NEVER rewritten, so any
+column slice taken before the append stays bit-identical afterwards — the
+invariant the cluster's content-carried rolling postings swaps rely on.
 """
 from __future__ import annotations
 
@@ -99,6 +104,84 @@ class TieringData:
     @property
     def n_queries(self) -> int:
         return self.log.n_queries
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendDelta:
+    """What one `append_docs` call added, in block coordinates.
+
+    The block is word-aligned: it starts at word `word_lo` (doc id
+    `doc_lo = word_lo * 32`), which means up to 31 hole slots pad the
+    previous tail word first. Holes are permanent empty documents — `()`
+    token sets with zero bits in every incidence structure — so no existing
+    postings word is ever rewritten and they can never match any clause or
+    query. `clause_cols` is the appended clause×block incidence, ready for
+    `SCSKProblem.with_doc_block`.
+    """
+    doc_lo: int                # global id of the first appended slot (hole or doc)
+    n_holes: int               # alignment padding slots before the real docs
+    n_new: int                 # real documents appended
+    word_lo: int               # first appended postings word (inclusive)
+    word_hi: int               # one past the last appended word == new Wd
+    clause_cols: np.ndarray    # uint32 [C, word_hi - word_lo] block m(c) columns
+    n_docs: int                # corpus.n_docs after the append (incl. holes)
+
+
+def append_docs(data: "TieringData", docs: list[tuple[int, ...]]) -> AppendDelta:
+    """Append a word-aligned document block to every incidence structure.
+
+    Mutates `data` (corpus, postings, clause_doc_bits, query_doc_bits) in
+    place and returns the `AppendDelta` describing the block. Append-only in
+    whole words: the block starts at the next word boundary (hole slots fill
+    the tail partial word), new columns are computed only over the block —
+    O((V + C + Nq) · block_words) — and concatenated, so every pre-existing
+    word keeps its exact bits. Clause/query *vocab*-side structures are
+    untouched: documents don't change the query universe.
+    """
+    if not docs:
+        raise ValueError("append_docs needs at least one document")
+    corpus = data.corpus
+    word_lo = data.postings.shape[1]
+    doc_lo = word_lo * bitset.WORD
+    n_holes = doc_lo - corpus.n_docs
+    n_new = len(docs)
+    n_docs_new = doc_lo + n_new
+    word_hi = bitset.n_words(n_docs_new)
+
+    for t in docs:
+        bad = [v for v in t if not 0 <= int(v) < corpus.vocab_size]
+        if bad:
+            raise ValueError(f"document tokens {bad} outside vocab "
+                             f"[0, {corpus.vocab_size})")
+    corpus.doc_tokens.extend([()] * n_holes)
+    corpus.doc_tokens.extend(tuple(sorted(set(int(v) for v in t)))
+                             for t in docs)
+
+    # block postings [V, wb]: bit (d - doc_lo) of row v set iff v ∈ doc d
+    wb = word_hi - word_lo
+    blk = np.zeros((corpus.vocab_size, n_new), dtype=bool)
+    for j, toks in enumerate(corpus.doc_tokens[doc_lo:]):
+        blk[list(toks), j] = True
+    blk_postings = bitset.np_pack(blk)       # [V, wb]: doc_lo is word-aligned
+
+    # corpus doc_bits rows: holes are all-zero rows, then the packed docs
+    hole_rows = np.zeros((n_holes, corpus.doc_bits.shape[1]), np.uint32)
+    doc_rows = bitset.np_pack(blk.T)
+    corpus.doc_bits = np.concatenate([corpus.doc_bits, hole_rows, doc_rows])
+
+    # incidence columns over the block only (block doc ids are local)
+    clause_cols = clause_doc_incidence(blk_postings, data.clauses, n_new)
+    query_cols = query_doc_incidence(blk_postings, data.log, n_new) \
+        if data.log.queries else np.zeros((0, wb), np.uint32)
+
+    data.postings = np.concatenate([data.postings, blk_postings], axis=1)
+    data.clause_doc_bits = np.concatenate(
+        [data.clause_doc_bits, clause_cols], axis=1)
+    data.query_doc_bits = np.concatenate(
+        [data.query_doc_bits, query_cols], axis=1)
+    return AppendDelta(doc_lo=doc_lo - n_holes, n_holes=n_holes, n_new=n_new,
+                       word_lo=word_lo, word_hi=word_hi,
+                       clause_cols=clause_cols, n_docs=corpus.n_docs)
 
 
 def build_tiering_data(corpus: Corpus, log: QueryLog, *, min_support: float,

@@ -1,0 +1,75 @@
+"""Seeded live-document feeds for the ingest loop.
+
+A `DocumentFeed` produces per-window batches of new documents whose token
+content is CORRELATED with the window's query traffic: with probability
+`correlation`, a new document is seeded from a traffic-sampled query's token
+set (it will therefore match the clauses that query satisfies — the arrivals
+the admission policy should care about), plus zipf-sampled filler tokens;
+otherwise it is pure background (zipf tokens only). Drifting traffic thus
+drags the DOCUMENT distribution along with it, which is what makes streaming
+Tier-1 admission a live decision rather than a warm-refit afterthought.
+
+Determinism contract: `window(t, probs)` derives its rng from
+`(seed, t)` alone — NOT from call order — so two controller arms (admission
+on/off, rolling/stop-the-world) replaying the same scenario observe
+bit-identical document arrivals, and A/B deltas are attributable to the
+policy, not the feed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DocumentFeed:
+    """Poisson document arrivals correlated with window traffic.
+
+    rate             : mean arrivals per window (Poisson)
+    correlation      : P[a new doc is seeded from a traffic-sampled query]
+    extra_tokens_mean: mean zipf filler tokens added per document
+    """
+    log: object                   # QueryLog: queries + probs universe
+    vocab_size: int
+    rate: float = 32.0
+    correlation: float = 0.6
+    extra_tokens_mean: float = 3.0
+    zipf_a: float = 1.1
+    seed: int = 0
+
+    def __post_init__(self):
+        ranks = np.arange(1, self.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks ** self.zipf_a
+        self._zipf = p / p.sum()
+        self.n_emitted = 0
+
+    def window(self, t: int, probs: np.ndarray | None = None
+               ) -> list[tuple[int, ...]]:
+        """The documents arriving during window `t`.
+
+        `probs` is the window's query-traffic distribution (e.g.
+        `TrafficWindow.probs`); None falls back to the log's base weights.
+        Deterministic in `(seed, t)` regardless of call order or arm.
+        """
+        rng = np.random.default_rng((self.seed, 9173, t))
+        n = int(rng.poisson(self.rate))
+        if probs is None:
+            probs = np.asarray(self.log.train_weights, np.float64)
+        probs = np.asarray(probs, np.float64)
+        probs = probs / max(probs.sum(), 1e-30)
+        docs = []
+        for _ in range(n):
+            toks: set[int] = set()
+            if rng.random() < self.correlation:
+                qi = int(rng.choice(len(probs), p=probs))
+                toks |= set(self.log.queries[qi])
+            k = int(rng.poisson(self.extra_tokens_mean))
+            if k:
+                toks |= set(int(v) for v in
+                            rng.choice(self.vocab_size, size=k, p=self._zipf))
+            if not toks:
+                toks = {int(rng.choice(self.vocab_size, p=self._zipf))}
+            docs.append(tuple(sorted(toks)))
+        self.n_emitted += len(docs)
+        return docs

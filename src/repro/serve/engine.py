@@ -83,6 +83,7 @@ class TieredEngine:
     def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
                  n_docs: int):
         self.n_docs = n_docs
+        self.corpus_version = 0
         self._postings_host = np.asarray(postings)   # for re-tiering builds
         self.postings_t2 = jnp.asarray(postings)
         self._live = self.prepare_tiering(tiering)   # generation 0
@@ -138,6 +139,32 @@ class TieredEngine:
         self._live = dataclasses.replace(
             buf, generation=self._live.generation + 1)
         return self._live.generation
+
+    def swap_corpus(self, postings: np.ndarray, n_docs: int,
+                    tiering: ClauseTiering, *,
+                    immediate: bool = True) -> int:
+        """Swap to an appended corpus snapshot (repro.ingest).
+
+        A single engine has one copy of each tier, so the swap is
+        stop-the-world by nature: both tiers and ψ move in one reference
+        store between batches (`immediate` is accepted for cluster-facade
+        parity but a single engine cannot roll). Append-only growth means
+        every already-served match set stays valid at the new version.
+        """
+        del immediate                    # single engine: always atomic
+        postings = np.asarray(postings)
+        if n_docs < self.n_docs or \
+                postings.shape[1] < self._postings_host.shape[1]:
+            raise ValueError(
+                f"corpus swaps are append-only: got {n_docs} docs x "
+                f"{postings.shape[1]} words, have {self.n_docs} x "
+                f"{self._postings_host.shape[1]}")
+        self._postings_host = postings
+        self.postings_t2 = jnp.asarray(postings)
+        self.n_docs = n_docs
+        self.corpus_version += 1
+        self.stats.full_words_per_query = int(postings.shape[1])
+        return self.swap_tiering(tiering)
 
     @staticmethod
     def _classify(tiering: ClauseTiering,

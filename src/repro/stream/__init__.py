@@ -35,11 +35,13 @@ from repro.stream.detector import (                         # noqa: F401
 from repro.stream.drift import (                            # noqa: F401
     SCENARIOS, TrafficSimulator, TrafficWindow, list_scenarios)
 from repro.stream.window import (                            # noqa: F401
-    LogAccumulator, prune_partitions, prune_state, rebuild_state)
+    LogAccumulator, check_state_width, prune_partitions, prune_state,
+    rebuild_state)
 
 __all__ = [
     "DriftDetector", "DriftSignal", "LogAccumulator", "RetieringController",
     "SCENARIOS", "StreamReport", "TrafficSimulator", "TrafficWindow",
-    "WindowReport", "list_scenarios", "prune_partitions", "prune_state",
-    "rebuild_state", "run_stream", "tv_distance",
+    "WindowReport", "check_state_width", "list_scenarios",
+    "prune_partitions", "prune_state", "rebuild_state", "run_stream",
+    "tv_distance",
 ]

@@ -114,8 +114,12 @@ class RetieringController:
                  prune_below: float = 2e-3, cold_fallback: bool = True,
                  blend_prior: float = 0.35, verify_swaps: bool = False,
                  scoped: bool = True, shard_tv_threshold: float = 0.15,
-                 scope_frac: float = 0.5):
+                 scope_frac: float = 0.5, serve_batch: int | None = None):
         self.pipe = pipe
+        # serve a window in chunks of this many queries (None = one batch);
+        # the ingest loop uses small chunks so rolling swaps interleave with
+        # traffic the way a live fleet would see them
+        self.serve_batch = serve_batch
         self.engine = engine if engine is not None else pipe.deploy()
         self.queries = pipe.log.queries
         nq = pipe.log.n_queries
@@ -202,11 +206,22 @@ class RetieringController:
         return 0.5 * np.abs(cur - self._shard_ref).sum(axis=0)
 
     # -- the loop -------------------------------------------------------------
-    def step(self, window: TrafficWindow) -> WindowReport:
+    def _serve_window(self, window: TrafficWindow):
+        """Serve + observe one window; returns (report, weights, signal,
+        queries) so subclasses can splice work (e.g. ingest) between the
+        serve and the refit decision."""
         self.engine.stats.reset()
         queries = [self.queries[i] for i in window.query_ids]
-        self.engine.serve(queries)
+        bsz = self.serve_batch or len(queries) or 1
+        for lo in range(0, len(queries), bsz):
+            self.engine.serve(queries[lo:lo + bsz])
         wstats = self.engine.stats.snapshot()
+        if self.cumulative.full_words_per_query not in \
+                (0, wstats.full_words_per_query):
+            # corpus grew since the last window: the cumulative saving
+            # denominator follows the live width (merge pins equality)
+            self.cumulative.full_words_per_query = \
+                wstats.full_words_per_query
         self.cumulative.merge(wstats)
 
         self.accumulator.observe(window.query_ids)
@@ -219,12 +234,20 @@ class RetieringController:
             coverage=wstats.tier1_fraction, cost_saving=wstats.cost_saving,
             tv_distance=signal.tv_distance, generation=self.engine.generation,
             shard_tv=tuple(float(t) for t in self.shard_drift(weights)))
+        return report, weights, signal, queries
+
+    def _refit_window(self, report: WindowReport, weights: np.ndarray,
+                      queries: list[tuple[int, ...]]) -> None:
+        lam = self.blend_prior
+        solve_w = (1.0 - lam) * weights + lam * self._prior
+        self._refit(solve_w, weights, report)
+        if self.verify_swaps:
+            report.parity_ok = self._check_parity(queries)
+
+    def step(self, window: TrafficWindow) -> WindowReport:
+        report, weights, signal, queries = self._serve_window(window)
         if signal.triggered and self.enable_refit:
-            lam = self.blend_prior
-            solve_w = (1.0 - lam) * weights + lam * self._prior
-            self._refit(solve_w, weights, report)
-            if self.verify_swaps:
-                report.parity_ok = self._check_parity(queries)
+            self._refit_window(report, weights, queries)
         return report
 
     def run(self, simulator: TrafficSimulator) -> StreamReport:

@@ -71,6 +71,27 @@ class LogAccumulator:
         return float(self.counts.sum())
 
 
+def check_state_width(problem: SCSKProblem, state: SolverState) -> None:
+    """Reject a `SolverState` whose doc bitset width doesn't match `problem`.
+
+    Raised instead of silently zero-padding because the pad would be WRONG:
+    after `append_docs` + `with_doc_block`, already-selected clauses may
+    match the appended documents, so the only exact post-append state is a
+    re-derivation (`problem.state_for`) over the grown incidence.
+    """
+    wd = int(np.asarray(state.covered_d).shape[0])
+    if wd != problem.wd:
+        raise ValueError(
+            f"stale SolverState: covered_d has {wd} words but the problem "
+            f"has wd={problem.wd} (corpus appended since the state was "
+            "captured?); re-derive it with "
+            "problem.state_for(np.nonzero(state.selected)[0])")
+    if int(np.asarray(state.selected).shape[0]) != problem.n_clauses:
+        raise ValueError(
+            f"stale SolverState: {np.asarray(state.selected).shape[0]} "
+            f"selection slots vs {problem.n_clauses} clauses")
+
+
 def prune_state(problem: SCSKProblem, state: SolverState, *,
                 min_unique_mass: float = 0.0,
                 weights: np.ndarray | None = None,
@@ -92,7 +113,15 @@ def prune_state(problem: SCSKProblem, state: SolverState, *,
     per-clause unique mass is one fused `f_gains` (bit-matvec) call with
     that mask folded into the weights — no dense [K, n_queries] incidence
     is ever materialized.
+
+    Width contract (repro.ingest): a state captured BEFORE a corpus append
+    is stale — its `covered_d` is narrower than the grown `problem.wd`, and
+    zero-padding it would under-count g (old clauses can match appended
+    docs). Such a state is rejected with a `ValueError` naming both widths;
+    re-derive it at the new width with `rebuild_state(problem, kept)`
+    (= `problem.state_for`) before warm-starting a post-append refit.
     """
+    check_state_width(problem, state)
     selected = np.asarray(state.selected)
     idx = np.nonzero(selected)[0]
     empty = np.empty(0, np.int64)
@@ -145,8 +174,10 @@ def prune_partitions(problem: SCSKProblem, state: SolverState,
     `scope_frac` of its total mass; returns (state, kept, dropped) like
     `prune_state`. The kept clauses stay a frozen warm prefix, so a re-solve
     from the returned state only spends budget re-tiering the drifted
-    shards (plus whatever slack the caps leave elsewhere).
+    shards (plus whatever slack the caps leave elsewhere). Like
+    `prune_state`, a stale-width state (pre-append) raises `ValueError`.
     """
+    check_state_width(problem, state)
     selected = np.asarray(state.selected)
     idx = np.nonzero(selected)[0].astype(np.int64)
     parts = sorted(set(int(p) for p in parts))

@@ -336,3 +336,58 @@ def test_pipeline_traffic_split_solve_and_refit(tiny_data):
     # explicitly dropping back to a global budget works
     pipe.refit(w, state=None, budget_split=None)
     assert "caps" not in pipe.result.extra
+
+
+# -- admission at the cap boundary (repro.ingest's feasibility gate) ----------
+
+def test_partitioned_admission_fills_shard_to_exact_cap():
+    """A clause that fills a partition to EXACTLY B_k must be admitted
+    (feasibility is <=, not <), the partition must then mask every further
+    clause touching it, and docs straddling the word-aligned boundary must
+    bill to the right partition — the calls are exactly the ones
+    `ingest.IngestController._admit` makes."""
+    # 2 partitions x 1 word; docs 24..31 sit at the TOP of word 0 (adjacent
+    # to the boundary), doc 32 is bit 0 of word 1 (just past it)
+    cq = np.zeros((3, 1), np.uint32)
+    cq[0, 0] = 0b0001
+    cq[1, 0] = 0b0010
+    cq[2, 0] = 0b0100
+    cd = np.zeros((3, 2), np.uint32)
+    cd[0, 0] = np.uint32(0xFF000000)   # 8 docs at word-0's top: partition 0
+    cd[1, 1] = np.uint32(0x00000001)   # doc 32, first past the boundary
+    cd[2, 0] = np.uint32(0x00000001)   # one more partition-0 doc
+    w = np.zeros(32, np.float32)
+    w[:3] = [0.5, 0.3, 0.4]
+    problem = SCSKProblem(
+        clause_query_bits=jnp.asarray(cq), clause_doc_bits=jnp.asarray(cd),
+        query_weights=jnp.asarray(w), test_weights=jnp.asarray(w),
+        n_queries=3, n_docs=64)
+    constraint = PartitionedBudget(caps=jnp.asarray([8.0, 4.0]),
+                                   bounds=(0, 1, 2))
+    state = problem.init_state()
+
+    def offer(j):
+        rows = problem.clause_doc_bits[j:j + 1]
+        _, g_part = constraint.gains(problem, state.covered_d, rows=rows)
+        used = constraint.used(problem, state)
+        return bool(np.asarray(constraint.feasible(used, g_part))[0]), g_part
+
+    # boundary docs bill to partition 0 only
+    ok, g_part = offer(0)
+    np.testing.assert_array_equal(np.asarray(g_part)[0], [8.0, 0.0])
+    assert ok                           # fills partition 0 to exactly B_0
+    state = problem.apply(state, 0)
+    np.testing.assert_array_equal(
+        np.asarray(constraint.used(problem, state)), [8.0, 0.0])
+    np.testing.assert_array_equal(
+        constraint.np_value(np.asarray(state.covered_d)), [8.0, 0.0])
+
+    ok2, g2 = offer(2)                  # ANY partition-0 doc now overflows
+    np.testing.assert_array_equal(np.asarray(g2)[0], [1.0, 0.0])
+    assert not ok2
+    ok1, g1 = offer(1)                  # the doc just PAST the boundary fits
+    np.testing.assert_array_equal(np.asarray(g1)[0], [0.0, 1.0])
+    assert ok1
+    state = problem.apply(state, 1)
+    np.testing.assert_array_equal(
+        np.asarray(constraint.used(problem, state)), [8.0, 1.0])

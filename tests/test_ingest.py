@@ -1,0 +1,387 @@
+"""repro.ingest: live corpus growth must stay EXACT — append-only block
+appends bit-identical to a from-scratch rebuild, stale pre-append states
+rejected by name, mandatory Theorem-3.1 admission of fresh docs, secretary
+admission policy mechanics, versioned serving parity through rolling corpus
+swaps, and (in a 4-fake-device subprocess) a rolling fleet mid-ingest-rollout
+bit-identical to a stop-the-world fleet at the same corpus version."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import cluster, ingest, stream
+from repro.core import bitset
+from repro.data import incidence, synthetic
+
+
+def _fresh_data(seed=0, min_support=1e-3):
+    # append_docs mutates TieringData in place — never use session fixtures
+    corpus, log = synthetic.make_tiering_dataset(seed, "tiny")
+    return incidence.build_tiering_data(corpus, log, min_support=min_support)
+
+
+def _fresh_pipe(data=None, **solve_kw):
+    from repro import api
+    kw = dict(budget_frac=0.5)
+    kw.update(solve_kw)
+    return api.TieringPipeline.from_data(
+        data if data is not None else _fresh_data()).solve("greedy", **kw)
+
+
+def _feed_docs(data, t=0, rate=48.0, seed=7):
+    feed = ingest.DocumentFeed(log=data.log,
+                               vocab_size=data.corpus.vocab_size,
+                               rate=rate, seed=seed)
+    return list(feed.window(t))
+
+
+# -- append-only block appends ------------------------------------------------
+
+def test_append_docs_existing_words_never_move():
+    data = _fresh_data()
+    before = data.postings.copy()
+    before_cd = data.clause_doc_bits.copy()
+    before_qd = data.query_doc_bits.copy()
+    delta = incidence.append_docs(data, _feed_docs(data))
+    assert delta.word_lo == before.shape[1]
+    np.testing.assert_array_equal(data.postings[:, :delta.word_lo], before)
+    np.testing.assert_array_equal(
+        data.clause_doc_bits[:, :delta.word_lo], before_cd)
+    np.testing.assert_array_equal(
+        data.query_doc_bits[:, :delta.word_lo], before_qd)
+    assert delta.n_holes == delta.word_lo * 32 - delta.doc_lo
+    assert 0 <= delta.n_holes < 32
+    assert delta.n_docs == delta.word_lo * 32 + delta.n_new
+
+
+def test_append_docs_bit_identical_to_scratch_rebuild():
+    """The appended incidence must equal a full rebuild over the grown
+    corpus — clauses are mined from the (unchanged) log, so every structure
+    is directly comparable."""
+    data = _fresh_data()
+    incidence.append_docs(data, _feed_docs(data))
+    scratch = incidence.build_tiering_data(data.corpus, data.log,
+                                           min_support=1e-3)
+    assert scratch.clauses == data.clauses
+    np.testing.assert_array_equal(scratch.postings, data.postings)
+    np.testing.assert_array_equal(scratch.clause_doc_bits,
+                                  data.clause_doc_bits)
+    np.testing.assert_array_equal(scratch.query_doc_bits,
+                                  data.query_doc_bits)
+
+
+def test_append_docs_holes_match_nothing():
+    data = _fresh_data()
+    delta = incidence.append_docs(data, _feed_docs(data))
+    for d in range(delta.doc_lo, delta.word_lo * 32):   # the hole slots
+        w, b = d // 32, d % 32
+        assert not (data.postings[:, w] >> b & 1).any()
+        assert not (data.clause_doc_bits[:, w] >> b & 1).any()
+        assert data.corpus.doc_tokens[d] == ()
+
+
+def test_append_docs_rejects_empty_and_bad_tokens():
+    data = _fresh_data()
+    with pytest.raises(ValueError, match="at least one"):
+        incidence.append_docs(data, [])
+    with pytest.raises(ValueError, match="outside vocab"):
+        incidence.append_docs(data, [(0, data.corpus.vocab_size)])
+
+
+# -- stale pre-append states (satellite: with_weights / prune_state) ----------
+
+def test_stale_state_rejected_by_name_and_state_for_rederives():
+    """After append + `with_doc_block`, the pre-append SolverState must be
+    rejected with the named remedy, and `state_for` must re-derive a working
+    warm state over the grown incidence (Theorem 3.1's mandatory leg)."""
+    pipe = _fresh_pipe()
+    prev_state = pipe.result.state
+    delta = incidence.append_docs(pipe.data, _feed_docs(pipe.data))
+    problem = pipe.problem.with_doc_block(delta.clause_cols, delta.n_docs)
+    pipe.problem = problem
+    with pytest.raises(ValueError, match="state_for"):
+        stream.check_state_width(problem, prev_state)
+    with pytest.raises(ValueError, match="stale SolverState"):
+        stream.prune_state(problem, prev_state,
+                           weights=np.asarray(pipe.log.train_weights))
+    with pytest.raises(ValueError, match="stale warm-start state"):
+        pipe.refit(np.asarray(pipe.log.train_weights), state=prev_state)
+    # the remedy works: same selection, grown widths, refit accepts it
+    state = problem.state_for(np.nonzero(np.asarray(prev_state.selected))[0])
+    np.testing.assert_array_equal(np.asarray(state.selected),
+                                  np.asarray(prev_state.selected))
+    assert int(np.asarray(state.covered_d).shape[0]) == problem.wd
+    pipe.adopt_selection(state)
+    pipe.refit(np.asarray(pipe.log.train_weights), state=state)
+
+
+def test_mandatory_admission_covers_appended_docs():
+    """Theorem 3.1 through ingest: every appended doc matched by a SELECTED
+    clause must land in Tier 1 of the re-derived tiering."""
+    pipe = _fresh_pipe()
+    delta = incidence.append_docs(pipe.data, _feed_docs(pipe.data))
+    problem = pipe.problem.with_doc_block(delta.clause_cols, delta.n_docs)
+    pipe.problem = problem
+    sel = np.nonzero(np.asarray(pipe.result.selected))[0]
+    pipe.adopt_selection(problem.state_for(sel))
+    tiering = pipe.tiering()
+    matched_block = bitset.np_unpack(
+        np.bitwise_or.reduce(delta.clause_cols[sel], axis=0),
+        delta.n_docs - delta.word_lo * 32)
+    t1_block = tiering.tier1_docs[delta.word_lo * 32:]
+    assert matched_block.any(), "feed produced no mandatory admissions"
+    assert np.all(t1_block[matched_block]), \
+        "a doc matched by a selected clause is missing from Tier 1"
+
+
+# -- stale corpus versions (satellite: named rollout error) -------------------
+
+def test_swap_with_stale_tiering_raises_named_error():
+    pipe = _fresh_pipe()
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=1)
+    stale = pipe.tiering()                       # pre-append doc count
+    delta = incidence.append_docs(pipe.data, _feed_docs(pipe.data))
+    pipe.problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                               delta.n_docs)
+    pipe.adopt_selection(pipe.problem.state_for(
+        np.nonzero(np.asarray(pipe.result.selected))[0]))
+    fleet.swap_corpus(pipe.data.postings, delta.n_docs, pipe.tiering(),
+                      immediate=True)
+    with pytest.raises(cluster.StaleCorpusError, match="rebuild it"):
+        fleet.swap_tiering(stale)
+
+
+def test_prepared_buffer_from_old_version_raises_named_error():
+    """A buffer prepared BEFORE a corpus swap must not roll out after it."""
+    pipe = _fresh_pipe()
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=1)
+    buf = fleet.prepare_tiering(pipe.tiering())
+    delta = incidence.append_docs(pipe.data, _feed_docs(pipe.data))
+    pipe.problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                               delta.n_docs)
+    pipe.adopt_selection(pipe.problem.state_for(
+        np.nonzero(np.asarray(pipe.result.selected))[0]))
+    fleet.swap_corpus(pipe.data.postings, delta.n_docs, pipe.tiering(),
+                      immediate=True)
+    with pytest.raises(cluster.StaleCorpusError, match="corpus version"):
+        fleet.swap_tiering(buf)
+
+
+def test_engine_swap_corpus_rejects_shrinking():
+    from repro.serve.engine import TieredEngine
+    pipe = _fresh_pipe()
+    engine = TieredEngine(pipe.data.postings, pipe.tiering(),
+                          pipe.data.n_docs)
+    with pytest.raises(ValueError, match="append-only"):
+        engine.swap_corpus(pipe.data.postings[:, :-1],
+                           pipe.data.n_docs - 40, pipe.tiering())
+
+
+# -- the admission policy -----------------------------------------------------
+
+def test_admission_policy_observe_then_accept():
+    policy = ingest.AdmissionPolicy(observe=4, quantile=0.5, window=16)
+    assert policy.threshold() == float("inf")
+    for i in range(4):                            # observe phase: never admit
+        assert not policy.offer(i, ratio=100.0, feasible=True)
+    assert all(d.reason == "observe" for d in policy.decisions)
+    assert policy.threshold() == 100.0            # trailing quantile is live
+    assert not policy.offer(4, ratio=50.0, feasible=True)    # below
+    assert policy.decisions[-1].reason == "below"
+    assert not policy.offer(5, ratio=200.0, feasible=False)  # gate wins
+    assert policy.decisions[-1].reason == "infeasible"
+    assert policy.n_infeasible == 1
+    assert policy.offer(6, ratio=200.0, feasible=True)       # clears
+    assert policy.decisions[-1].reason == "admitted"
+    assert policy.n_admitted == 1 and policy.n_offers == 7
+    assert "admitted=1" in policy.summary()
+
+
+def test_admission_policy_trailing_window_and_floor():
+    policy = ingest.AdmissionPolicy(observe=2, quantile=0.0, window=4,
+                                    min_ratio=10.0)
+    for r in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0):
+        policy.offer(0, ratio=r, feasible=True)
+    # window=4 keeps ratios {3..6}; quantile 0 -> min of window, floored
+    assert policy.threshold() == 10.0
+    assert not policy.offer(0, ratio=9.0, feasible=True)
+    assert policy.offer(0, ratio=10.0, feasible=True)
+    with pytest.raises(ValueError, match="quantile"):
+        ingest.AdmissionPolicy(quantile=1.5)
+
+
+# -- the seeded feed ----------------------------------------------------------
+
+def test_document_feed_deterministic_and_in_vocab():
+    data = _fresh_data()
+    feed_a = ingest.DocumentFeed(log=data.log,
+                                 vocab_size=data.corpus.vocab_size,
+                                 rate=32.0, seed=3)
+    feed_b = ingest.DocumentFeed(log=data.log,
+                                 vocab_size=data.corpus.vocab_size,
+                                 rate=32.0, seed=3)
+    wins_a = [feed_a.window(t) for t in range(4)]
+    wins_b = [feed_b.window(t) for t in range(4)]
+    assert wins_a == wins_b                       # seed-deterministic A/B
+    docs = [d for w in wins_a for d in w]
+    assert docs
+    for d in docs:
+        assert d == tuple(sorted(set(d))) and len(d) >= 1
+        assert all(0 <= t < data.corpus.vocab_size for t in d)
+
+
+# -- end-to-end ingest loops --------------------------------------------------
+
+def test_run_ingest_single_engine_verified():
+    rep = ingest.run_ingest(
+        _fresh_pipe(budget_split="traffic", n_shards=2),
+        scenario="rotate", n_windows=3, queries_per_window=128, seed=0,
+        arrivals_per_window=32.0, verify=True)
+    assert rep.failed_windows() == 0
+    assert rep.n_ingested > 0
+    assert rep.windows[-1].corpus_version == len(rep.windows)
+    assert all(w.ingest_ok for w in rep.windows)
+
+
+def test_run_ingest_rolling_fleet_verified():
+    pipe = _fresh_pipe(budget_split="traffic", n_shards=2)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+    rep = ingest.run_ingest(
+        pipe, engine=fleet, scenario="rotate", n_windows=3,
+        queries_per_window=128, seed=0, arrivals_per_window=32.0,
+        verify=True)
+    assert rep.failed_windows() == 0
+    assert fleet.consistency_ok()
+    assert fleet.corpus_version == len(rep.windows)
+    # every trace entry pinned a consistent (psi, T1, T2) triple
+    assert all(t.consistent for t in fleet.trace)
+    fleet.drain_rollout()
+    sample = pipe.log.queries[:64]
+    got = fleet.serve(sample)
+    want = fleet.serve_reference(
+        sample, corpus_version=fleet.corpus_version)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serve_reference_unknown_version_raises():
+    pipe = _fresh_pipe()
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=1)
+    with pytest.raises(KeyError, match="no live buffer"):
+        fleet.serve_reference(pipe.log.queries[:4], corpus_version=99)
+
+
+# -- loadgen: ingest traffic --------------------------------------------------
+
+def _loadgen_plan():
+    pipe = _fresh_pipe()
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+    return (cluster.ClusterPlan.of_cluster(fleet),
+            fleet.classify(pipe.log.queries[:256]))
+
+
+def test_loadgen_ingest_qps_zero_is_bit_compatible():
+    plan, elig = _loadgen_plan()
+    base = cluster.run_loadgen(plan, elig, n_queries=800, seed=0)
+    zero = cluster.run_loadgen(plan, elig, n_queries=800, seed=0,
+                               ingest_qps=0.0)
+    assert base == zero                 # same rng draws, same report
+    assert base.n_ingest_events == 0 and base.stw_delayed_queries == 0
+
+
+def test_loadgen_stw_outage_delays_queries():
+    plan, elig = _loadgen_plan()
+    kw = dict(n_queries=2000, seed=0, rollout_at_s=0.02, swap_ms=5.0,
+              ingest_qps=100.0)
+    rolling = cluster.run_loadgen(plan, elig, rollout_mode="rolling", **kw)
+    stw = cluster.run_loadgen(plan, elig, rollout_mode="stw", **kw)
+    assert stw.stw_delayed_queries > 0 and rolling.stw_delayed_queries == 0
+    assert stw.p99_ms > rolling.p99_ms  # one fleet-wide stop vs rolling
+    assert stw.n_ingest_events == rolling.n_ingest_events > 0
+    with pytest.raises(ValueError, match="rollout_mode"):
+        cluster.run_loadgen(plan, elig, rollout_mode="bogus")
+
+
+# -- rolling vs stop-the-world mirror parity, 4 fake devices ------------------
+
+MIRROR_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, numpy as np
+from repro import api, distributed as D, ingest
+from repro.data import incidence
+
+assert len(jax.devices()) == 4
+
+pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+        .mine(min_support=1e-3)
+        .solve("greedy", budget_frac=0.5, budget_split="traffic",
+               n_shards=2))
+queries = pipe.log.queries[:64]
+roller = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+mirror = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+feed = ingest.DocumentFeed(log=pipe.log, vocab_size=pipe.corpus.vocab_size,
+                           rate=48.0, seed=7)
+
+snaps = {}          # corpus_version -> (postings, n_docs, tiering)
+applied = 0         # the mirror fleet's stop-the-world corpus version
+mid_rollout = 0     # batches served at an OLDER version than the target
+
+with D.use_mesh(D.shard_mesh()):
+    for t in range(3):
+        delta = incidence.append_docs(pipe.data, list(feed.window(t)))
+        pipe.problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                                   delta.n_docs)
+        pipe.adopt_selection(pipe.problem.state_for(
+            np.nonzero(np.asarray(pipe.result.selected))[0]))
+        tiering = pipe.tiering()
+        roller.swap_corpus(pipe.data.postings, delta.n_docs, tiering)
+        snaps[roller.corpus_version] = (pipe.data.postings.copy(),
+                                        delta.n_docs, tiering)
+        batches = 0
+        while True:
+            got = roller.serve(queries)
+            served_v = roller.trace[-1].corpus_version
+            mid_rollout += served_v < roller.corpus_version
+            # the mirror jumps stop-the-world to the version the roller
+            # SERVED: both fleets are then at the same corpus version and
+            # must be bit-identical
+            while applied < served_v:
+                applied += 1
+                p, n, tg = snaps[applied]
+                mirror.swap_corpus(p, n, tg, immediate=True)
+            want = mirror.serve(queries)
+            for a, b in zip(got, want):
+                np.testing.assert_array_equal(a, b)
+            ref = roller.serve_reference(queries, corpus_version=served_v)
+            for a, b in zip(got, ref):
+                np.testing.assert_array_equal(a, b)
+            batches += 1
+            if roller.router.rollout is None or batches >= 64:
+                break
+        assert roller.router.rollout is None, "rollout never completed"
+
+assert mid_rollout > 0, "never observed a mid-rollout batch"
+assert applied == roller.corpus_version == 3
+assert roller.consistency_ok() and mirror.consistency_ok()
+assert roller.router._mesh_tables, "fused path never engaged"
+print(f"mid_rollout_batches={mid_rollout}")
+print("INGEST-MIRROR-OK")
+"""
+
+
+def test_ingest_mirror_parity_4dev():
+    """Acceptance: a fleet serving MID-INGEST-ROLLOUT is bit-identical to a
+    stop-the-world rebuild at the same corpus version, on a forced 4-device
+    mesh (the CI parity configuration)."""
+    out = subprocess.run(
+        [sys.executable, "-c", MIRROR_SCRIPT], capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get(
+            "PATH", "/usr/bin:/bin"), "HOME": os.environ.get("HOME", "/root")},
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=900)
+    assert "INGEST-MIRROR-OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
