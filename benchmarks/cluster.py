@@ -93,7 +93,8 @@ def run() -> dict:
         emit(f"cluster_shards{n_shards}", 1e6 * dt / len(batch),
              f"per_shard_t2_words={per_shard_words};p50={rep.p50_ms:.4f};"
              f"p95={rep.p95_ms:.4f};p99={rep.p99_ms:.4f};"
-             f"qps={rep.throughput_qps:.0f};fleet_words={rep.fleet_words}")
+             f"qps={rep.throughput_qps:.0f};fleet_words={rep.fleet_words}",
+             data={"latency_hist": rep.latency_hist})
     results["strong_scaling"] = scaling
 
     # -- latency-vs-budget frontier: global vs traffic-split caps -------------
@@ -153,12 +154,14 @@ def run() -> dict:
         emit(f"cluster_ab_{scenario}_static", 0.0,
              f"cov={static.mean_coverage:.4f};"
              f"saving={static.cumulative.cost_saving:.4f};"
-             f"p95={lat_s.p95_ms:.4f}")
+             f"p95={lat_s.p95_ms:.4f}",
+             data={"latency_hist": lat_s.latency_hist})
         emit(f"cluster_ab_{scenario}_retiered", 0.0,
              f"cov={retiered.mean_coverage:.4f};"
              f"saving={retiered.cumulative.cost_saving:.4f};"
              f"p95={lat_r.p95_ms:.4f};refits={retiered.n_refits};"
-             f"consistent={retiered_fleet.consistency_ok()}")
+             f"consistent={retiered_fleet.consistency_ok()}",
+             data={"latency_hist": lat_r.latency_hist})
     results["ab"] = ab
 
     # -- global vs traffic-split budgets under drift (equal total budget) -----
@@ -193,7 +196,8 @@ def run() -> dict:
                  f"cov={rep.mean_coverage:.4f};"
                  f"saving={rep.cumulative.cost_saving:.4f};"
                  f"p95={lat.p95_ms:.4f};fleet_words={lat.fleet_words};"
-                 f"refits={rep.n_refits}")
+                 f"refits={rep.n_refits}",
+                 data={"latency_hist": lat.latency_hist})
         split_ab[scenario] = arms
     results["budget_split_ab"] = split_ab
 

@@ -55,10 +55,17 @@ def _close_section() -> None:
             _SECTION_SECONDS.get(_SECTION, 0.0) + (time.time() - t0)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "",
+         data: dict | None = None) -> None:
+    """Print the CSV line and record the row. `data` attaches a structured
+    payload (e.g. a latency histogram snapshot) to the JSON artifact row —
+    it never appears on the CSV line."""
     print(f"{name},{us_per_call:.1f},{derived}")
-    ROWS.append({"section": _SECTION, "name": name,
-                 "us_per_call": us_per_call, "derived": derived})
+    row = {"section": _SECTION, "name": name,
+           "us_per_call": us_per_call, "derived": derived}
+    if data is not None:
+        row["data"] = data
+    ROWS.append(row)
 
 
 def write_json(out_dir: str = "artifacts/bench") -> list[str]:
@@ -70,7 +77,8 @@ def write_json(out_dir: str = "artifacts/bench") -> list[str]:
     sections: dict[str, list[dict]] = {}
     for row in ROWS:
         sections.setdefault(row["section"], []).append(
-            {k: row[k] for k in ("name", "us_per_call", "derived")})
+            {k: row[k] for k in ("name", "us_per_call", "derived", "data")
+             if k in row})
     paths = []
     for section, rows in sections.items():
         path = os.path.join(out_dir, f"BENCH_{section}.json")

@@ -42,6 +42,44 @@ def run(out_dir: str = "artifacts/bench") -> None:
     emit("kernel_sparse_gain_c4096_m512", dt * 1e6,
          f"gather_GB={4096 * 512 * 4 / 1e9:.3f}")
 
+    obs_overhead()
+
+
+def obs_overhead(iters: int = 20) -> dict:
+    """Disabled-telemetry tax on the serve hot path: `match_batch` bare vs
+    wrapped in a (disabled) span + counter inc, exactly as `serve/engine.py`
+    wraps it. The overhead must stay in the noise — the PR pins <5%."""
+    from repro import obs
+    from repro.serve import matching
+
+    rng = np.random.default_rng(0)
+    postings = jnp.asarray(
+        rng.integers(0, 2 ** 32, (2048, 256), dtype=np.uint32))
+    toks = jnp.asarray(rng.integers(0, 2048 * 32, (256, 8)), jnp.int32)
+    ctr = obs.counter("bench_obs_overhead_total")
+
+    def plain():
+        return matching.match_batch(postings, toks)
+
+    def wrapped():
+        with obs.span("t1_match", n=int(toks.shape[0])) as sp:
+            out = sp.sync(matching.match_batch(postings, toks))
+        ctr.inc(int(toks.shape[0]))
+        return out
+
+    prev = obs.set_enabled(False)
+    try:
+        plain()                                   # compile once, shared
+        t_plain = min(_time(plain, iters=iters) for _ in range(3))
+        t_obs = min(_time(wrapped, iters=iters) for _ in range(3))
+    finally:
+        obs.set_enabled(prev)
+    over = t_obs / t_plain - 1.0
+    emit("kernel_obs_overhead_disabled", t_obs * 1e6,
+         f"plain_us={t_plain * 1e6:.2f};overhead={over * 100:+.2f}%")
+    return {"plain_us": t_plain * 1e6, "obs_us": t_obs * 1e6,
+            "overhead": over}
+
 
 if __name__ == "__main__":
     run()

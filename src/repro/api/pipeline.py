@@ -362,21 +362,27 @@ class TieringPipeline:
                             self.data.n_docs)
 
     def deploy_cluster(self, *, n_shards: int | None = None,
-                       t1_replicas: int = 2, t2_replicas: int = 1):
+                       t1_replicas: int = 2, t2_replicas: int = 1,
+                       trace_capacity: int | None | str = "default"):
         """-> cluster.TieredCluster: the same tiering served by a sharded,
         replicated fleet (scatter-gather + rolling swaps), still exact.
 
         `n_shards` defaults to the solve's partition count when the solve
         used a shard-aware `budget_split` (the fleet's shards then coincide
         with the budget partitions, so each B_k bounds exactly one shard's
-        local Tier-1 sub-index), else 2."""
+        local Tier-1 sub-index), else 2. `trace_capacity` bounds the
+        retained `BatchTrace` history (None = keep every batch)."""
         from repro.cluster import TieredCluster
+        from repro.cluster.router import DEFAULT_TRACE_CAPACITY
         if n_shards is None:
             n_shards = self.n_partitions or 2
+        if trace_capacity == "default":
+            trace_capacity = DEFAULT_TRACE_CAPACITY
         return TieredCluster(self.data.postings, self.tiering(),
                              self.data.n_docs, n_shards=n_shards,
                              t1_replicas=t1_replicas,
-                             t2_replicas=t2_replicas)
+                             t2_replicas=t2_replicas,
+                             trace_capacity=trace_capacity)
 
     def summary(self) -> str:
         parts = [f"{self.corpus.n_docs} docs", f"{self.log.n_queries} queries"]

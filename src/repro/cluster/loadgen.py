@@ -37,6 +37,13 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
+
+# fixed bucket upper bounds (ms) for every loadgen latency histogram — pinned
+# so any two runs' histograms merge bucket-by-bucket in BENCH_cluster.json
+LATENCY_BUCKETS_MS = (0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+                      100.0, 200.0, 500.0, 1000.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterPlan:
@@ -104,6 +111,10 @@ class LoadgenReport:
     n_ingest_events: int = 0
     ingest_words_total: int = 0          # words written fleet-wide
     stw_delayed_queries: int = 0         # arrivals inside the stw outage
+    # full latency distribution over LATENCY_BUCKETS_MS (an obs.Histogram
+    # snapshot dict) — computed UNCONDITIONALLY, so the report is identical
+    # whether or not the telemetry plane is on
+    latency_hist: dict | None = None
 
     def line(self) -> str:
         return (f"qps={self.throughput_qps:,.0f} (offered {self.offered_qps:,.0f})"
@@ -111,6 +122,19 @@ class LoadgenReport:
                 f"p99={self.p99_ms:.3f}ms  t1={self.tier1_fraction:.3f}  "
                 f"fleet_words={self.fleet_words:,}  "
                 f"util={max(self.max_t1_util, self.max_t2_util):.2f}")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["per_shard_t2_words"] = list(self.per_shard_t2_words)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LoadgenReport":
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        if "per_shard_t2_words" in kw:
+            kw["per_shard_t2_words"] = tuple(kw["per_shard_t2_words"])
+        return cls(**kw)
 
 
 def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
@@ -259,6 +283,13 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         max((float(f.max()) for f in free_t1 + free_t2 if f.size), default=0.0)
     ) - float(arrivals[0])
     lat_ms = latencies * 1e3
+    # detached (always-on) histogram: the report's distribution never depends
+    # on the REPRO_OBS switch; the registry copy is the gated fleet view
+    hist = obs.Histogram("loadgen_latency_ms", always=True,
+                         buckets=LATENCY_BUCKETS_MS)
+    hist.observe_many(lat_ms)
+    obs.histogram("loadgen_latency_ms", "end-to-end query latency",
+                  buckets=LATENCY_BUCKETS_MS).observe_many(lat_ms)
     return LoadgenReport(
         n_queries=n_queries,
         offered_qps=rate_qps,
@@ -281,6 +312,7 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         n_ingest_events=n_ingest,
         ingest_words_total=int(ingest_total),
         stw_delayed_queries=stw_delayed,
+        latency_hist=hist.snapshot(),
     )
 
 

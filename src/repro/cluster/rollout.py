@@ -39,6 +39,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.tiering import ClauseTiering
 
 
@@ -125,6 +126,13 @@ class RollingSwap:
         self._pending = [r for i in range(n_replicas)
                          for r in pending if by_rep[id(r)] == i]
         self._draining = None
+        obs.event("rollout_begin", generation=buffer.generation,
+                  corpus_version=buffer.corpus_version,
+                  carried=self.n_carried, pending=len(self._pending))
+        if self.done:                    # all content carried: instant rollout
+            obs.event("rollout_done", generation=buffer.generation,
+                      corpus_version=buffer.corpus_version,
+                      swapped=0, carried=self.n_carried)
 
     def _plan(self, rep):
         """The replica's DocShard under the buffer's plan (grow mode may
@@ -158,12 +166,20 @@ class RollingSwap:
             self._commit(rep)
             self._draining = None
             self.n_swapped += 1
+            obs.event("replica_swap", tier=rep.tier, shard=rep.shard.index,
+                      generation=rep.generation, content=rep.content)
+            if self.done:
+                obs.event("rollout_done", generation=self.buffer.generation,
+                          corpus_version=self.buffer.corpus_version,
+                          swapped=self.n_swapped, carried=self.n_carried)
             return rep
         if not self._pending:
             return None
         rep = self._pending.pop(0)
         rep.draining = True
         self._draining = rep
+        obs.event("replica_drain", tier=rep.tier, shard=rep.shard.index,
+                  generation=rep.generation, content=rep.content)
         return rep
 
     def run_to_completion(self) -> int:

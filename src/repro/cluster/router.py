@@ -32,6 +32,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cluster import shard as shard_mod
 from repro.cluster.rollout import (ClusterTieringBuffer, RollingSwap,
                                    StaleCorpusError)
@@ -39,6 +40,20 @@ from repro.core import bitset
 from repro.core.tiering import ClauseTiering
 from repro.serve import matching
 from repro.serve.engine import ServeStats
+
+# BatchTrace history kept per router; a long run_stream/run_ingest session
+# retains this many batches (explicit capacity=None restores full history
+# for the parity tests that audit every batch ever served)
+DEFAULT_TRACE_CAPACITY = 4096
+
+# per-(tier, shard) word-traffic attribution for the whole fleet
+_CWORDS = obs.counter("cluster_words_total",
+                      "postings words scanned across the fleet",
+                      labels=("tier", "shard"))
+_CQUERIES = obs.counter("cluster_queries_total",
+                        "queries served through the cluster router")
+_FALLBACK = obs.counter("cluster_fallback_batches_total",
+                        "batches served full-Tier-2 (no complete generation)")
 
 
 class ShardReplica:
@@ -139,7 +154,8 @@ class ClusterRouter:
     def __init__(self, shards: list[shard_mod.DocShard],
                  t1_groups: list[list[ShardReplica]],
                  t2_groups: list[list[ShardReplica]],
-                 buffer0: ClusterTieringBuffer, n_docs: int):
+                 buffer0: ClusterTieringBuffer, n_docs: int, *,
+                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY):
         self.shards = shards            # current target plan (grows in place)
         self.t1 = t1_groups
         self.t2 = t2_groups
@@ -149,7 +165,7 @@ class ClusterRouter:
         self.rollout: RollingSwap | None = None
         self._rr: dict[tuple[int, int], int] = {}
         self._mesh_tables: dict = {}     # fused-serve operands per generation
-        self.trace: list[BatchTrace] = []
+        self.trace: obs.Ring = obs.Ring(trace_capacity)
         self.stats = ServeStats(
             full_words_per_query=buffer0.w_total
             or sum(s.n_words for s in shards))
@@ -275,20 +291,28 @@ class ClusterRouter:
             buf, use_t1 = self._buffers[gen], True
         else:                               # mid-rollout gap: Tier 2 is exact
             gen, buf, use_t1 = -1, self._fallback_buffer(), False
+            _FALLBACK.inc()
+            obs.event("t2_fallback", corpus_version=buf.corpus_version,
+                      n_queries=b)
         if buf.w_total and self.stats.full_words_per_query != buf.w_total:
             # corpus grew (or the served version moved): the saving
             # denominator follows the version this batch is served at
             self.stats.full_words_per_query = buf.w_total
         from repro import distributed
         plan = distributed.current_plan()
-        if plan.shard_fused:
-            out, elig = self._match_mesh(queries, buf, use_t1, plan)
-        else:
-            out, elig = self._match_host(queries, buf, use_t1)
-        self._account(buf, gen, elig, use_t1)
-        self.stats.n_queries += b
-        return [bitset.np_to_indices(row, buf.n_docs or self.n_docs)
-                for row in out]
+        with obs.span("serve", n=b, generation=gen,
+                      corpus_version=buf.corpus_version,
+                      fused=bool(plan.shard_fused)):
+            if plan.shard_fused:
+                out, elig = self._match_mesh(queries, buf, use_t1, plan)
+            else:
+                out, elig = self._match_host(queries, buf, use_t1)
+            self._account(buf, gen, elig, use_t1)
+            self.stats.n_queries += b
+            _CQUERIES.inc(b)
+            with obs.span("merge", n=b):
+                return [bitset.np_to_indices(row, buf.n_docs or self.n_docs)
+                        for row in out]
 
     def _match_host(self, queries, buf, use_t1
                     ) -> tuple[np.ndarray, np.ndarray]:
@@ -298,26 +322,30 @@ class ClusterRouter:
         out = np.zeros((b, buf.w_total or self.stats.full_words_per_query),
                        np.uint32)
         if use_t1:
-            elig = matching.classify_batch(
-                buf.tiering.clause_vocab_bits, queries,
-                buf.tiering.vocab_size)
+            with obs.span("classify", n=b):
+                elig = matching.classify_batch(
+                    buf.tiering.clause_vocab_bits, queries,
+                    buf.tiering.vocab_size)
         else:
             elig = np.zeros(b, bool)
         toks = matching.pad_token_batch(queries)
         idx1 = np.nonzero(elig)[0]
         if len(idx1):
             sub = jnp.asarray(toks[idx1])
-            for s in shards:
-                if not buf.shard_nonempty(s.index):
-                    continue                # D₁ misses this shard: no matches
-                rep = self._served(1, s.index, buf)
-                out[idx1, s.word_lo:s.word_hi] = rep.match(sub)
+            with obs.span("t1_match", n=int(len(idx1))) as sp:
+                for s in shards:
+                    if not buf.shard_nonempty(s.index):
+                        continue            # D₁ misses this shard: no matches
+                    rep = self._served(1, s.index, buf)
+                    out[idx1, s.word_lo:s.word_hi] = sp.sync(rep.match(sub))
         idx2 = np.nonzero(~elig)[0]
         if len(idx2):
             sub = jnp.asarray(toks[idx2])
-            for s in shards:
-                rep = self._served(2, s.index, buf, draining_ok=not use_t1)
-                out[idx2, s.word_lo:s.word_hi] = rep.match(sub)
+            with obs.span("t2_match", n=int(len(idx2))) as sp:
+                for s in shards:
+                    rep = self._served(2, s.index, buf,
+                                       draining_ok=not use_t1)
+                    out[idx2, s.word_lo:s.word_hi] = sp.sync(rep.match(sub))
         return out, np.asarray(elig, bool)
 
     def _match_mesh(self, queries, buf, use_t1, plan
@@ -340,7 +368,11 @@ class ClusterRouter:
             if len(self._mesh_tables) > 8:
                 self._mesh_tables.clear()
             self._mesh_tables[key] = table
-        out, elig = mesh_serve.serve_fused(table, queries, plan)
+        # ONE shard_map program: classify/match/merge fuse on-device, so the
+        # fused path gets a single span instead of the host path's nest
+        with obs.span("mesh_fused", n=len(queries)) as sp:
+            out, elig = mesh_serve.serve_fused(table, queries, plan)
+            sp.sync(out)
         n1 = int(elig.sum())
         for s in (buf.shards or self.shards):
             if n1 and use_t1 and buf.shard_nonempty(s.index):
@@ -385,6 +417,8 @@ class ClusterRouter:
                 t1_contents.append(rep.content)
                 expected.append(want)
                 self.stats.tier1_words += n1 * rep.words_per_query
+                _CWORDS.inc(n1 * rep.words_per_query, tier="t1",
+                            shard=s.index)
             self.stats.n_tier1 += n1
         if n2:
             for s in shards:
@@ -393,6 +427,8 @@ class ClusterRouter:
                            if (want is None or r.content == want)
                            and (not use_t1 or not r.draining))
                 self.stats.tier2_words += n2 * rep.words_per_query
+                _CWORDS.inc(n2 * rep.words_per_query, tier="t2",
+                            shard=s.index)
                 t2_contents.append(rep.content)
                 expected_t2.append(want if want is not None else rep.content)
         self.trace.append(BatchTrace(
@@ -418,7 +454,8 @@ class TieredCluster:
 
     def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
                  n_docs: int, *, n_shards: int = 2, t1_replicas: int = 2,
-                 t2_replicas: int = 1):
+                 t2_replicas: int = 1,
+                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY):
         if t1_replicas < 1 or t2_replicas < 1:
             raise ValueError("each replica group needs >= 1 replica")
         self.n_docs = n_docs
@@ -438,7 +475,8 @@ class TieredCluster:
         t2 = [[ShardReplica(2, s, self._t2_dev[s.index], s.n_words,
                             content=self._t2_content[s.index])
                for _ in range(t2_replicas)] for s in self.shards]
-        self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs)
+        self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs,
+                                    trace_capacity=trace_capacity)
 
     def _next_content(self) -> int:
         self._content_seq += 1
@@ -607,6 +645,9 @@ class TieredCluster:
         self.corpus_version += 1
         self.router.shards = new_shards
         self.router.n_docs = n_docs
+        obs.event("corpus_swap", corpus_version=self.corpus_version,
+                  n_docs=n_docs,
+                  mode="immediate" if immediate else "rolling")
         return self.swap_tiering(tiering, immediate=immediate)
 
     def drain_rollout(self) -> None:
@@ -616,7 +657,9 @@ class TieredCluster:
 
     # -- observability --------------------------------------------------------
     @property
-    def trace(self) -> list[BatchTrace]:
+    def trace(self) -> obs.Ring:
+        """Retained `BatchTrace` history (bounded ring; see
+        `trace_capacity`). List-like: iterate, index, `len`, truthiness."""
         return self.router.trace
 
     def consistency_ok(self) -> bool:

@@ -19,9 +19,19 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.config import SolveConfig
 from repro.core.problem import SolverResult
 from repro.core.state import SolverState
+
+_SELECTIONS = obs.counter("solver_selections_total",
+                          "clauses selected across solves",
+                          labels=("solver",))
+_EVALS = obs.counter("solver_evals_total",
+                     "exact (f, g) evaluations across solves",
+                     labels=("solver",))
+_SOLVE_F = obs.gauge("solver_last_f", "last solve's final objective",
+                     labels=("solver",))
 
 
 class Trace:
@@ -36,6 +46,9 @@ class Trace:
         self.last_f = f0
         self.last_g = g0
         self._t0 = time.perf_counter()
+        # label value cached once: solver name is fixed per Trace and the
+        # counters fire on the per-selection hot path
+        self._solver = str(config.solver)
 
     # -- clock ---------------------------------------------------------------
     def elapsed(self) -> float:
@@ -49,6 +62,7 @@ class Trace:
     # -- recording -----------------------------------------------------------
     def add_evals(self, n: int) -> None:
         self.n_exact_evals += n
+        _EVALS.inc(n, solver=self._solver)
 
     def on_select(self, f_val: float, g_val: float) -> None:
         """Call once per selection with the exact post-selection f/g."""
@@ -56,6 +70,7 @@ class Trace:
         if (self.n_selections % self.config.record_every) == 0:
             self.record()
         self.n_selections += 1
+        _SELECTIONS.inc(solver=self._solver)
         if self.config.on_step is not None:
             self.config.on_step(self)
 
@@ -75,11 +90,17 @@ class Trace:
         if self.n_selections and \
                 (self.n_selections - 1) % self.config.record_every != 0:
             self.record()
+        f_final = float(problem.f_value(state.covered_q))
+        _SOLVE_F.set(f_final, solver=self._solver)
+        obs.event("solve_done", solver=name, n_selections=self.n_selections,
+                  n_exact_evals=self.n_exact_evals, f_final=f_final,
+                  g_final=float(state.g_used),
+                  seconds=round(self.elapsed(), 4))
         return SolverResult(
             name=name,
             selected=np.asarray(state.selected),
             order=order,
-            f_final=float(problem.f_value(state.covered_q)),
+            f_final=f_final,
             g_final=float(state.g_used),
             f_history=np.asarray(self.f_history),
             g_history=np.asarray(self.g_history),

@@ -38,7 +38,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitset
+from repro.obs.render import render_line
 from repro.core.constraint import (GlobalBudget, PartitionedBudget,
                                    resolve_constraint)
 from repro.data import incidence
@@ -46,6 +48,12 @@ from repro.ingest.admission import AdmissionPolicy
 from repro.ingest.feed import DocumentFeed
 from repro.serve.engine import ServeStats
 from repro.stream.controller import RetieringController, WindowReport
+
+_ADMISSION = obs.counter("admission_total",
+                         "optional-admission offer decisions",
+                         labels=("decision",))
+_INGESTED = obs.counter("ingest_docs_total", "documents appended")
+_CORPUS_V = obs.gauge("corpus_version", "live corpus version")
 from repro.stream.drift import TrafficSimulator, TrafficWindow
 
 
@@ -64,12 +72,25 @@ class IngestWindowReport:
     ingest_ok: bool | None = None  # served-vs-reference parity (verify only)
 
     def line(self) -> str:
-        adm = f"admit={self.n_admitted}/{self.n_offers}"
-        ok = "" if self.ingest_ok is None else \
-            f"  ingest={'ok' if self.ingest_ok else 'FAIL'}"
-        return (f"{self.serve.line()}  +{self.n_arrived}docs "
-                f"(v{self.corpus_version}, {self.n_docs} total)  {adm}  "
-                f"t1+={self.n_mandatory}{ok}")
+        return render_line(self.serve.line(), [
+            ("@docs", f"+{self.n_arrived}docs "
+                      f"(v{self.corpus_version}, {self.n_docs} total)"),
+            ("admit", f"{self.n_admitted}/{self.n_offers}"),
+            ("t1+", self.n_mandatory),
+            ("ingest", self.ingest_ok)])
+
+    def to_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name != "serve"}
+        d["serve"] = self.serve.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IngestWindowReport":
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        kw["serve"] = WindowReport.from_dict(d.get("serve", {}))
+        return cls(**kw)
 
 
 @dataclasses.dataclass
@@ -114,12 +135,34 @@ class IngestReport:
                    if w.ingest_ok is False or w.serve.parity_ok is False)
 
     def summary(self) -> str:
-        return (f"[{self.scenario}/{self.rollout}] {len(self.windows)} "
-                f"windows  +{self.n_ingested} docs  "
-                f"admitted={self.n_admitted}  "
-                f"mean_cov={self.mean_coverage:.3f}  "
-                f"late_cov={self.late_coverage:.3f}  "
-                f"refits={self.n_refits}  failed={self.failed_windows()}")
+        return render_line(f"[{self.scenario}/{self.rollout}]", [
+            ("@windows", f"{len(self.windows)} windows"),
+            ("@docs", f"+{self.n_ingested} docs"),
+            ("admitted", self.n_admitted),
+            ("mean_cov", self.mean_coverage),
+            ("late_cov", self.late_coverage),
+            ("refits", self.n_refits),
+            ("failed", self.failed_windows())])
+
+    def to_dict(self) -> dict:
+        return {"scenario": self.scenario, "rollout": self.rollout,
+                "admission_summary": self.admission_summary,
+                "windows": [w.to_dict() for w in self.windows],
+                "cumulative": self.cumulative.to_dict(),
+                "mean_coverage": self.mean_coverage,
+                "late_coverage": self.late_coverage,
+                "n_ingested": self.n_ingested, "n_admitted": self.n_admitted,
+                "n_refits": self.n_refits,
+                "failed_windows": self.failed_windows()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IngestReport":
+        return cls(scenario=d["scenario"],
+                   windows=[IngestWindowReport.from_dict(w)
+                            for w in d.get("windows", [])],
+                   cumulative=ServeStats.from_dict(d.get("cumulative", {})),
+                   rollout=d.get("rollout", "rolling"),
+                   admission_summary=d.get("admission_summary", ""))
 
 
 class IngestController(RetieringController):
@@ -158,6 +201,7 @@ class IngestController(RetieringController):
         irep.serve = report
         if signal.triggered and self.enable_refit:
             self._refit_window(report, weights, queries)
+        self._observe_window(irep, serve=report)
         return irep
 
     def run(self, simulator: TrafficSimulator) -> IngestReport:
@@ -179,42 +223,61 @@ class IngestController(RetieringController):
             irep.n_docs = self.pipe.data.n_docs
             irep.corpus_version = getattr(self.engine, "corpus_version", 0)
             return irep
+        with obs.span("ingest", window=window.index, n_docs=len(docs)):
+            self._ingest_inner(window, weights, irep, docs)
+        _INGESTED.inc(irep.n_arrived)
+        _CORPUS_V.set(irep.corpus_version)
+        obs.event("append", window=window.index, n_arrived=irep.n_arrived,
+                  n_docs=irep.n_docs, corpus_version=irep.corpus_version,
+                  n_mandatory=irep.n_mandatory, n_offers=irep.n_offers,
+                  n_admitted=irep.n_admitted)
+        irep.ingest_seconds = time.perf_counter() - t0
+        return irep
+
+    def _ingest_inner(self, window: TrafficWindow, weights: np.ndarray,
+                      irep: IngestWindowReport, docs) -> None:
         pipe = self.pipe
-        delta = incidence.append_docs(pipe.data, docs)
-        problem = pipe.problem.with_doc_block(delta.clause_cols, delta.n_docs)
-        pipe.problem = problem
-        self._grow_budget(delta)
+        with obs.span("append", n_docs=len(docs)):
+            delta = incidence.append_docs(pipe.data, docs)
+            problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                                  delta.n_docs)
+            pipe.problem = problem
+            self._grow_budget(delta)
 
         # mandatory admission (Theorem 3.1): the state re-derived from the
         # FIXED selection against the grown problem folds every new doc a
         # selected clause matches into Tier 1 — overspent caps are shed at
         # the next warm refit, never here
-        selected = np.asarray(pipe.result.selected)
-        t1_before = int(pipe.result.g_final)
-        state = problem.state_for(np.nonzero(selected)[0])
-        constraint = resolve_constraint(problem, pipe.config)
-        if self.admission is not None:
-            state = self._admit(problem, state, constraint, delta, weights,
-                                irep)
-        fills = constraint.np_value(np.asarray(state.covered_d))
-        caps = np.asarray(constraint.caps, np.float64) \
-            if isinstance(constraint, PartitionedBudget) \
-            else np.asarray([constraint.total], np.float64)
-        irep.cap_overflow = float(np.maximum(fills - caps, 0.0).max())
-        pipe.adopt_selection(state)
-        irep.n_mandatory = max(0, int(pipe.result.g_final) - t1_before)
+        with obs.span("admission"):
+            selected = np.asarray(pipe.result.selected)
+            t1_before = int(pipe.result.g_final)
+            state = problem.state_for(np.nonzero(selected)[0])
+            constraint = resolve_constraint(problem, pipe.config)
+            if self.admission is not None:
+                state = self._admit(problem, state, constraint, delta,
+                                    weights, irep)
+            fills = constraint.np_value(np.asarray(state.covered_d))
+            caps = np.asarray(constraint.caps, np.float64) \
+                if isinstance(constraint, PartitionedBudget) \
+                else np.asarray([constraint.total], np.float64)
+            irep.cap_overflow = float(np.maximum(fills - caps, 0.0).max())
+            pipe.adopt_selection(state)
+            irep.n_mandatory = max(0, int(pipe.result.g_final) - t1_before)
+        if irep.n_mandatory:
+            obs.event("mandatory_admission", window=window.index,
+                      n_docs_t1=irep.n_mandatory,
+                      cap_overflow=irep.cap_overflow)
 
-        irep.corpus_version = self.engine.swap_corpus(
-            pipe.data.postings, delta.n_docs, pipe.tiering(),
-            immediate=(self.rollout == "stw"))
-        if hasattr(self.engine, "corpus_version"):
-            irep.corpus_version = self.engine.corpus_version
+        with obs.span("swap", kind="corpus"):
+            irep.corpus_version = self.engine.swap_corpus(
+                pipe.data.postings, delta.n_docs, pipe.tiering(),
+                immediate=(self.rollout == "stw"))
+            if hasattr(self.engine, "corpus_version"):
+                irep.corpus_version = self.engine.corpus_version
         irep.n_docs = delta.n_docs
         if self.verify_ingest:
             irep.ingest_ok = self._check_parity(
                 [self.queries[i] for i in window.query_ids[:64]])
-        irep.ingest_seconds = time.perf_counter() - t0
-        return irep
 
     def _admit(self, problem, state, constraint, delta, weights,
                irep: IngestWindowReport):
@@ -242,7 +305,11 @@ class IngestController(RetieringController):
             g_tot = float(np.asarray(g_part).sum())
             ratio = fg / max(g_tot, 1.0)
             irep.n_offers += 1
-            if self.admission.offer(int(j), ratio, feasible):
+            accepted = self.admission.offer(int(j), ratio, feasible)
+            _ADMISSION.inc(decision="accept" if accepted else "reject")
+            obs.event("admission", clause=int(j), ratio=round(ratio, 6),
+                      feasible=feasible, accepted=accepted)
+            if accepted:
                 state = problem.apply(state, int(j))
                 irep.n_admitted += 1
         return state

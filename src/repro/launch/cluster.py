@@ -67,6 +67,9 @@ def main() -> None:
                     help="skip the single-engine A/B run")
     ap.add_argument("--verify", action="store_true",
                     help="parity after every swap + mixed-pair check")
+    ap.add_argument("--obs-dir", default="artifacts/obs",
+                    help="telemetry snapshot directory ('' disables export; "
+                         "REPRO_OBS=0 disables the whole plane)")
     args = ap.parse_args()
 
     if args.mesh and "jax" not in sys.modules and \
@@ -76,7 +79,10 @@ def main() -> None:
                                    + " --xla_force_host_platform_device_count"
                                      "=4").strip()
 
-    from repro import api, cluster, stream
+    from repro import api, cluster, obs, stream
+
+    if args.obs_dir and obs.enabled():
+        obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="cluster"))
 
     stack = contextlib.ExitStack()
     if args.mesh:
@@ -189,6 +195,11 @@ def main() -> None:
         print(f"[cluster] mean windowed tier-1 coverage: "
               f"single-static={static.mean_coverage:.3f} "
               f"cluster-retiered={report.mean_coverage:.3f} ({delta:+.3f})")
+    if obs.enabled():
+        print(f"[cluster] {obs.dashboard()}")
+        ex = obs.get_exporter()
+        if ex is not None and ex.n_written:
+            print(f"[cluster] obs: {ex.n_written} snapshots -> {ex.path}")
     stack.close()
 
 

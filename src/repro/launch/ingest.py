@@ -60,9 +60,15 @@ def main() -> None:
                          "(corpus swaps are then stop-the-world by nature)")
     ap.add_argument("--verify", action="store_true",
                     help="per-window versioned parity + mixed-triple check")
+    ap.add_argument("--obs-dir", default="artifacts/obs",
+                    help="telemetry snapshot directory ('' disables export; "
+                         "REPRO_OBS=0 disables the whole plane)")
     args = ap.parse_args()
 
-    from repro import api, ingest
+    from repro import api, ingest, obs
+
+    if args.obs_dir and obs.enabled():
+        obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="ingest"))
 
     print(f"[ingest] scale={args.scale} seed={args.seed} "
           f"scenario={args.scenario} windows={args.windows} "
@@ -115,6 +121,11 @@ def main() -> None:
         print(f"[ingest] verified: {checks} versioned parity checks ok"
               + (f", {n_batches} batches triple-consistent" if engine
                  is not None else ""))
+    if obs.enabled():
+        print(f"[ingest] {obs.dashboard()}")
+        ex = obs.get_exporter()
+        if ex is not None and ex.n_written:
+            print(f"[ingest] obs: {ex.n_written} snapshots -> {ex.path}")
 
 
 if __name__ == "__main__":

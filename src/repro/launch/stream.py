@@ -35,9 +35,15 @@ def main() -> None:
                     help="skip the static-tiering A/B run")
     ap.add_argument("--verify", action="store_true",
                     help="Theorem-3.1 parity spot check after every swap")
+    ap.add_argument("--obs-dir", default="artifacts/obs",
+                    help="telemetry snapshot directory ('' disables export; "
+                         "REPRO_OBS=0 disables the whole plane)")
     args = ap.parse_args()
 
-    from repro import api
+    from repro import api, obs
+
+    if args.obs_dir and obs.enabled():
+        obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="stream"))
 
     def offline_pipe():
         return (api.TieringPipeline.from_synthetic(seed=args.seed,
@@ -91,6 +97,11 @@ def main() -> None:
         print(f"[stream] mean windowed tier-1 coverage: "
               f"static={static.mean_coverage:.3f} "
               f"retiered={report.mean_coverage:.3f} ({delta:+.3f})")
+    if obs.enabled():
+        print(f"[stream] {obs.dashboard()}")
+        ex = obs.get_exporter()
+        if ex is not None and ex.n_written:
+            print(f"[stream] obs: {ex.n_written} snapshots -> {ex.path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,185 @@
+"""repro.obs — the fleet-wide telemetry plane.
+
+Zero-dependency (numpy + stdlib) observability for every layer of the
+system: a process-global `MetricsRegistry` of typed instruments, a
+`SpanRecorder` for nested request/control-path traces, an `EventLog` for
+discrete control-plane occurrences, and a per-window JSONL exporter.
+
+The module-level singletons (`REGISTRY`, `SPANS`, `EVENTS`) are what the
+instrumented call sites use, via the shortcuts below:
+
+    words = obs.counter("cluster_words_total", labels=("tier", "shard"))
+    words.inc(n, tier="t1", shard=k)
+
+    with obs.span("t1_match", shard=k) as sp:
+        hits = sp.sync(match_batch(...))
+
+    obs.event("drift_detected", window=i, tv=signal.tv_distance)
+
+Everything is gated on one switch: `REPRO_OBS=0` in the environment (or
+`obs.disable()` at runtime) turns the whole plane into no-ops — counters
+skip, `span()` returns the shared `NULL_SPAN`, events drop — and serve
+results stay bit-identical (pinned by tests/test_obs.py and the
+`obs_overhead` micro-bench). Instruments built directly with
+`always=True` (e.g. the loadgen latency histogram) bypass the switch so
+simulation OUTPUTS never depend on it.
+"""
+from __future__ import annotations
+
+from repro.obs import _state
+from repro.obs.events import DEFAULT_EVENT_CAPACITY, EventLog
+from repro.obs.export import DEFAULT_DIR, JsonlExporter, load_dir, read_jsonl
+from repro.obs.registry import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                                MetricsRegistry)
+from repro.obs.render import fmt_value, render_line
+from repro.obs.ring import Ring
+from repro.obs.spans import (DEFAULT_SPAN_CAPACITY, NULL_SPAN, Span,
+                             SpanRecorder)
+
+__all__ = [
+    "REGISTRY", "SPANS", "EVENTS",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ring",
+    "SpanRecorder", "Span", "NULL_SPAN", "EventLog", "JsonlExporter",
+    "counter", "gauge", "histogram", "span", "event",
+    "enabled", "disabled", "enable", "disable", "set_enabled",
+    "set_exporter", "get_exporter", "export_window", "dashboard", "reset",
+    "read_jsonl", "load_dir", "render_line", "fmt_value",
+    "DEFAULT_BUCKETS", "DEFAULT_DIR",
+    "DEFAULT_SPAN_CAPACITY", "DEFAULT_EVENT_CAPACITY",
+]
+
+REGISTRY = MetricsRegistry()
+SPANS = SpanRecorder()
+EVENTS = EventLog()
+
+_exporter: JsonlExporter | None = None
+_span_cursor = 0
+_event_cursor = 0
+
+
+# -- the switch ----------------------------------------------------------------
+def enabled() -> bool:
+    return _state.on
+
+
+def disabled() -> bool:
+    return not _state.on
+
+
+def enable() -> bool:
+    """Turn collection on process-wide; returns the previous setting."""
+    return _state.enable()
+
+
+def disable() -> bool:
+    """Turn collection off process-wide; returns the previous setting."""
+    return _state.disable()
+
+
+def set_enabled(value: bool) -> bool:
+    """Set the switch to `value`; returns the previous setting (so callers
+    can save/restore around a scoped section)."""
+    return _state.set_enabled(value)
+
+
+# -- instruments ---------------------------------------------------------------
+def counter(name: str, help: str = "",  # noqa: A002
+            labels: tuple[str, ...] = ()) -> Counter:
+    return REGISTRY.counter(name, help, labels)
+
+
+def gauge(name: str, help: str = "",  # noqa: A002
+          labels: tuple[str, ...] = ()) -> Gauge:
+    return REGISTRY.gauge(name, help, labels)
+
+
+def histogram(name: str, help: str = "",  # noqa: A002
+              labels: tuple[str, ...] = (),
+              buckets: tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+    return REGISTRY.histogram(name, help, labels, buckets)
+
+
+def span(name: str, **attrs):
+    """A context-managed `Span` — or the no-op `NULL_SPAN` when disabled,
+    so the hot path never allocates."""
+    if not _state.on:
+        return NULL_SPAN
+    return SPANS.span(name, **attrs)
+
+
+def event(kind: str, **fields) -> dict | None:
+    if not _state.on:
+        return None
+    return EVENTS.emit(kind, **fields)
+
+
+# -- export --------------------------------------------------------------------
+def set_exporter(exporter: JsonlExporter | None) -> JsonlExporter | None:
+    """Install (or clear, with None) the process exporter. Controllers call
+    `export_window` unconditionally; without an installed exporter it is a
+    no-op, so test runs don't spray snapshot files."""
+    global _exporter, _span_cursor, _event_cursor
+    prev, _exporter = _exporter, exporter
+    _span_cursor = SPANS.seq
+    _event_cursor = EVENTS.seq
+    return prev
+
+
+def get_exporter() -> JsonlExporter | None:
+    return _exporter
+
+
+def snapshot_window(index: int, **extra) -> dict:
+    """Build (without writing) one window snapshot; advances the span and
+    event cursors so the next snapshot carries only new activity."""
+    global _span_cursor, _event_cursor
+    import time
+    snap = {
+        "window": index,
+        "ts": time.time(),
+        "metrics": REGISTRY.collect(),
+        "spans": SPANS.since(_span_cursor),
+        "events": EVENTS.since(_event_cursor),
+    }
+    snap.update(extra)
+    _span_cursor = SPANS.seq
+    _event_cursor = EVENTS.seq
+    return snap
+
+
+def export_window(index: int, **extra) -> dict | None:
+    """Snapshot + write one window to the installed exporter. No-op (returns
+    None) when the plane is disabled or no exporter is installed."""
+    if not _state.on or _exporter is None:
+        return None
+    snap = snapshot_window(index, **extra)
+    _exporter.export(snap)
+    return snap
+
+
+def dashboard() -> str:
+    """One human line over the whole registry — the launchers print this."""
+    pairs = [
+        ("queries", int(REGISTRY.total("serve_queries_total"))
+         or int(REGISTRY.total("cluster_queries_total"))),
+        ("t1_hits", int(REGISTRY.total("serve_tier1_hits_total"))),
+        ("words", int(REGISTRY.total("serve_words_total"))
+         or int(REGISTRY.total("cluster_words_total"))),
+        ("refits", int(REGISTRY.total("refits_total")) or None),
+        ("swaps", int(REGISTRY.total("swaps_total")) or None),
+        ("admitted", int(REGISTRY.total("admission_total")) or None),
+        ("events", len(EVENTS) or None),
+        ("spans", len(SPANS.ring) or None),
+    ]
+    return render_line("obs:", [(k, v) for k, v in pairs if v is not None])
+
+
+def reset() -> None:
+    """Zero every series and drop spans/events/cursors (tests, A/B arms).
+    Instrument registrations and the installed exporter survive."""
+    global _span_cursor, _event_cursor
+    REGISTRY.reset()
+    SPANS.reset()
+    EVENTS.reset()
+    _span_cursor = 0
+    _event_cursor = 0

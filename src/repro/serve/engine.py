@@ -20,9 +20,19 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitset
 from repro.core.tiering import ClauseTiering
 from repro.serve import matching
+
+# registry instruments the engine publishes into (self-gating: these are
+# no-ops under REPRO_OBS=0, and ServeStats stays the source of truth either
+# way — the counters are a fleet-aggregated VIEW, never an input)
+_QUERIES = obs.counter("serve_queries_total", "queries served")
+_T1_HITS = obs.counter("serve_tier1_hits_total",
+                       "queries answered entirely from Tier 1")
+_WORDS = obs.counter("serve_words_total",
+                     "postings words scanned", labels=("tier",))
 
 
 @dataclasses.dataclass
@@ -68,6 +78,19 @@ class ServeStats:
     def snapshot(self) -> "ServeStats":
         """Detached copy (per-window reporting while counters keep running)."""
         return dataclasses.replace(self)
+
+    def to_dict(self) -> dict:
+        """JSON-ready dict: raw counters + the derived ratios (the uniform
+        exporter payload; `from_dict` ignores the derived keys)."""
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["tier1_fraction"] = self.tier1_fraction
+        d["cost_saving"] = self.cost_saving
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeStats":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +161,8 @@ class TieredEngine:
             else self.prepare_tiering(tiering)
         self._live = dataclasses.replace(
             buf, generation=self._live.generation + 1)
+        obs.event("tiering_swap", generation=self._live.generation,
+                  corpus_version=self.corpus_version)
         return self._live.generation
 
     def swap_corpus(self, postings: np.ndarray, n_docs: int,
@@ -164,6 +189,8 @@ class TieredEngine:
         self.n_docs = n_docs
         self.corpus_version += 1
         self.stats.full_words_per_query = int(postings.shape[1])
+        obs.event("corpus_swap", corpus_version=self.corpus_version,
+                  n_docs=self.n_docs, mode="immediate")
         return self.swap_tiering(tiering)
 
     @staticmethod
@@ -181,24 +208,39 @@ class TieredEngine:
     def serve(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:
         """Returns the match set (sorted doc ids) per query."""
         live = self._live                    # one read: a consistent generation
-        elig = self._classify(live.tiering, queries)
-        toks = matching.pad_token_batch(queries)
-        out: list[np.ndarray | None] = [None] * len(queries)
-        w = self.postings_t2.shape[1]
-        for tier, sel in ((1, elig), (2, ~elig)):
-            idx = np.nonzero(sel)[0]
-            if len(idx) == 0:
-                continue
-            postings = live.postings_t1 if tier == 1 else self.postings_t2
-            m = np.asarray(matching.match_batch(postings, jnp.asarray(toks[idx])))
-            for row, qi in enumerate(idx):
-                out[qi] = bitset.np_to_indices(m[row], self.n_docs)
-            if tier == 1:
-                self.stats.n_tier1 += len(idx)
-                self.stats.tier1_words += len(idx) * live.tier1_words_per_query
-            else:
-                self.stats.tier2_words += len(idx) * w
-        self.stats.n_queries += len(queries)
+        with obs.span("serve", n=len(queries), generation=live.generation):
+            with obs.span("classify"):
+                elig = self._classify(live.tiering, queries)
+            toks = matching.pad_token_batch(queries)
+            out: list[np.ndarray | None] = [None] * len(queries)
+            w = self.postings_t2.shape[1]
+            matched: list[tuple[np.ndarray, np.ndarray]] = []
+            for tier, sel in ((1, elig), (2, ~elig)):
+                idx = np.nonzero(sel)[0]
+                if len(idx) == 0:
+                    continue
+                postings = live.postings_t1 if tier == 1 else self.postings_t2
+                with obs.span("t1_match" if tier == 1 else "t2_match",
+                              n=int(len(idx))) as sp:
+                    m = np.asarray(sp.sync(
+                        matching.match_batch(postings, jnp.asarray(toks[idx]))))
+                matched.append((idx, m))
+                if tier == 1:
+                    self.stats.n_tier1 += len(idx)
+                    self.stats.tier1_words += \
+                        len(idx) * live.tier1_words_per_query
+                    _WORDS.inc(len(idx) * live.tier1_words_per_query,
+                               tier="t1")
+                else:
+                    self.stats.tier2_words += len(idx) * w
+                    _WORDS.inc(len(idx) * w, tier="t2")
+            with obs.span("merge"):
+                for idx, m in matched:
+                    for row, qi in enumerate(idx):
+                        out[qi] = bitset.np_to_indices(m[row], self.n_docs)
+            self.stats.n_queries += len(queries)
+            _QUERIES.inc(len(queries))
+            _T1_HITS.inc(int(np.count_nonzero(elig)))
         return [o if o is not None else np.empty(0, np.int64) for o in out]
 
     def serve_reference(self, queries: list[tuple[int, ...]]) -> list[np.ndarray]:

@@ -23,11 +23,19 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import bitset
+from repro.obs.render import render_line
 from repro.serve.engine import ServeStats, TieredEngine
 from repro.stream.detector import DriftDetector
 from repro.stream.drift import TrafficSimulator, TrafficWindow
 from repro.stream.window import LogAccumulator, prune_partitions, prune_state
+
+_REFITS = obs.counter("refits_total", "re-solves shipped", labels=("kind",))
+_W_COV = obs.gauge("window_coverage", "last window's Tier-1 eligible fraction")
+_W_SAVING = obs.gauge("window_cost_saving", "last window's word-traffic saving")
+_W_TV = obs.gauge("window_tv_distance", "drift signal vs last refit")
+_GEN = obs.gauge("live_generation", "tiering generation serving traffic")
 
 
 @dataclasses.dataclass
@@ -48,15 +56,32 @@ class WindowReport:
     scope: tuple[int, ...] = ()  # shards a scoped warm refit re-tiered
 
     def line(self) -> str:
-        refit = f"refit={self.refit}({self.refit_steps} steps, " \
+        refit = f"{self.refit}({self.refit_steps} steps, " \
                 f"{self.refit_seconds:.2f}s, -{self.pruned})" if self.refit \
-                else "refit=-"
-        parity = "" if self.parity_ok is None else \
-            f"  parity={'ok' if self.parity_ok else 'FAIL'}"
-        scope = f"  scope={list(self.scope)}" if self.scope else ""
-        return (f"window {self.index:3d}  cov={self.coverage:.3f}  "
-                f"saving={self.cost_saving:.3f}  tv={self.tv_distance:.3f}  "
-                f"{refit}  gen={self.generation}{scope}{parity}")
+                else "-"
+        return render_line(f"window {self.index:3d}", [
+            ("cov", self.coverage), ("saving", self.cost_saving),
+            ("tv", self.tv_distance), ("refit", refit),
+            ("gen", self.generation),
+            ("scope", list(self.scope) if self.scope else None),
+            ("parity", self.parity_ok)])
+
+    def to_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name != "stats"}
+        d["stats"] = self.stats.to_dict()
+        d["shard_tv"] = list(self.shard_tv)
+        d["scope"] = list(self.scope)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WindowReport":
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        kw["stats"] = ServeStats.from_dict(d.get("stats", {}))
+        kw["shard_tv"] = tuple(kw.get("shard_tv", ()))
+        kw["scope"] = tuple(kw.get("scope", ()))
+        return cls(**kw)
 
 
 @dataclasses.dataclass
@@ -90,10 +115,25 @@ class StreamReport:
                    if w.parity_ok is not None)
 
     def summary(self) -> str:
-        return (f"[{self.scenario}] {len(self.windows)} windows  "
-                f"mean_cov={self.mean_coverage:.3f}  "
-                f"cum_saving={self.cumulative.cost_saving:.3f}  "
-                f"refits={self.n_refits} ({self.n_warm} warm)")
+        return render_line(f"[{self.scenario}]", [
+            ("@windows", f"{len(self.windows)} windows"),
+            ("mean_cov", self.mean_coverage),
+            ("cum_saving", self.cumulative.cost_saving),
+            ("refits", f"{self.n_refits} ({self.n_warm} warm)")])
+
+    def to_dict(self) -> dict:
+        return {"scenario": self.scenario,
+                "windows": [w.to_dict() for w in self.windows],
+                "cumulative": self.cumulative.to_dict(),
+                "mean_coverage": self.mean_coverage,
+                "n_refits": self.n_refits, "n_warm": self.n_warm}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StreamReport":
+        return cls(scenario=d["scenario"],
+                   windows=[WindowReport.from_dict(w)
+                            for w in d.get("windows", [])],
+                   cumulative=ServeStats.from_dict(d.get("cumulative", {})))
 
 
 class RetieringController:
@@ -234,6 +274,11 @@ class RetieringController:
             coverage=wstats.tier1_fraction, cost_saving=wstats.cost_saving,
             tv_distance=signal.tv_distance, generation=self.engine.generation,
             shard_tv=tuple(float(t) for t in self.shard_drift(weights)))
+        if signal.triggered:
+            obs.event("drift_detected", window=window.index,
+                      tv=float(signal.tv_distance),
+                      coverage=float(wstats.tier1_fraction),
+                      will_refit=bool(self.enable_refit))
         return report, weights, signal, queries
 
     def _refit_window(self, report: WindowReport, weights: np.ndarray,
@@ -248,7 +293,21 @@ class RetieringController:
         report, weights, signal, queries = self._serve_window(window)
         if signal.triggered and self.enable_refit:
             self._refit_window(report, weights, queries)
+        self._observe_window(report)
         return report
+
+    def _observe_window(self, report, serve: WindowReport | None = None
+                        ) -> None:
+        """Publish window gauges and (when an exporter is installed) one
+        JSONL snapshot. `report` is what gets exported; `serve` points at
+        its WindowReport leg when they differ (the ingest loop)."""
+        s = serve if serve is not None else report
+        _W_COV.set(s.coverage)
+        _W_SAVING.set(s.cost_saving)
+        _W_TV.set(s.tv_distance)
+        _GEN.set(s.generation)
+        if obs.enabled() and obs.get_exporter() is not None:
+            obs.export_window(s.index, report=report.to_dict())
 
     def run(self, simulator: TrafficSimulator) -> StreamReport:
         reports = [self.step(w) for w in simulator.windows()]
@@ -258,6 +317,17 @@ class RetieringController:
     # -- refit ----------------------------------------------------------------
     def _refit(self, solve_w: np.ndarray, raw_w: np.ndarray,
                report: WindowReport) -> None:
+        with obs.span("refit", window=report.index):
+            self._refit_inner(solve_w, raw_w, report)
+        _REFITS.inc(kind=report.refit)
+        obs.event("refit", window=report.index, mode=report.refit,
+                  steps=report.refit_steps, pruned=report.pruned,
+                  seconds=round(report.refit_seconds, 4),
+                  generation=report.generation,
+                  scope=list(report.scope))
+
+    def _refit_inner(self, solve_w: np.ndarray, raw_w: np.ndarray,
+                     report: WindowReport) -> None:
         t0 = time.perf_counter()
         prev = self.pipe.result
         deployed_cov = self.predicted_coverage(solve_w)
@@ -294,8 +364,9 @@ class RetieringController:
                 report.scope = ()          # ... and aren't scoped
         else:
             self.pipe.refit(solve_w, state=None)
-        buf = self.engine.prepare_tiering(self.pipe.tiering())  # off-path
-        report.generation = self.engine.swap_tiering(buf)       # atomic
+        with obs.span("swap"):
+            buf = self.engine.prepare_tiering(self.pipe.tiering())  # off-path
+            report.generation = self.engine.swap_tiering(buf)       # atomic
         self.detector.rebase(raw_w, self.predicted_coverage(raw_w))
         if self._bounds is not None:
             self._shard_ref = self._shard_dists(raw_w)
