@@ -1,0 +1,301 @@
+"""Perf/behaviour regression gate over BENCH_*.json and obs JSONL trees.
+
+    python -m benchmarks.compare --baseline benchmarks/baselines/tiny \
+        --tolerance-file benchmarks/tolerances.json
+
+Loads every `BENCH_<section>.json` (and any `<run>.jsonl` telemetry
+snapshot file) under two directories, flattens each into metric keys
+
+    SECTION/ROW_NAME:metric      e.g. cluster/cluster_shards2:p95
+    obs.RUN:metric_name          (JSONL trees: final-snapshot totals)
+
+and diffs baseline vs candidate under per-metric tolerance rules. Rules
+live in a JSON file — a `default` plus an ordered `rules` list of
+`{"pattern": fnmatch, ...}` entries, FIRST match wins:
+
+    {"pattern": "*:us_per_call", "skip": true}          never compared
+    {"pattern": "*:p95*", "rel": 0.5, "direction": "high_bad"}
+    {"pattern": "*:cov*", "rel": 0.1, "abs": 0.02, "direction": "low_bad"}
+
+`direction` says which way is a regression: "high_bad" (latency-like),
+"low_bad" (coverage-like), or "both". A value is regressed when it moves
+past `base ± (rel * |base| + abs)` in a bad direction. Wall-clock numbers
+must be skipped by rule — only the seeded, simulated metrics are stable
+across machines, which is what makes a checked-in baseline meaningful.
+
+Only sections present in BOTH trees are compared (the baseline may cover a
+subset of what a full bench run emits); within a common section, a metric
+present in the baseline but gone from the candidate is itself a failure.
+Exit status: 0 clean, 1 on any regression or disappearance — CI gates on
+it, and `launch.obs --diff` reuses `run_gate` for telemetry trees.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_TOLERANCE = {"rel": 0.25, "abs": 1e-9, "direction": "both"}
+
+
+# -- tree loading --------------------------------------------------------------
+
+def _num(text: str):
+    """Numeric value of a derived-string token; booleans count as 0/1 so a
+    parity/consistency flip is a comparable (and gateable) metric."""
+    t = text.strip().rstrip("%")
+    if t in ("True", "true"):
+        return 1.0
+    if t in ("False", "false"):
+        return 0.0
+    try:
+        return float(t)
+    except ValueError:
+        return None
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """The `k=v;k=v` payload of a BENCH row, numeric entries only."""
+    out = {}
+    for part in derived.split(";"):
+        k, sep, v = part.partition("=")
+        if not sep:
+            continue
+        val = _num(v)
+        if val is not None:
+            out[k.strip()] = val
+    return out
+
+
+def _flatten_data(prefix: str, obj, out: dict[str, float]) -> None:
+    """Scalar numeric leaves of a row's `data` payload; lists (bucket
+    arrays etc.) are deliberately not exploded."""
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            _flatten_data(f"{prefix}.{k}", v, out)
+    elif isinstance(obj, bool):
+        out[prefix] = float(obj)
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+
+
+def _load_bench(path: str, section: str, metrics: dict[str, float]) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "rows" not in doc:
+        return          # e.g. BENCH_roofline.json is a bare row list
+    if "seconds" in doc:
+        metrics[f"{section}:seconds"] = float(doc["seconds"])
+    for row in doc["rows"]:
+        key = f"{section}/{row['name']}"
+        if "us_per_call" in row:
+            metrics[f"{key}:us_per_call"] = float(row["us_per_call"])
+        for k, v in parse_derived(row.get("derived", "")).items():
+            metrics[f"{key}:{k}"] = v
+        if "data" in row:
+            flat: dict[str, float] = {}
+            _flatten_data("data", row["data"], flat)
+            for k, v in flat.items():
+                metrics[f"{key}:{k}"] = v
+
+
+def _load_jsonl(path: str, section: str, metrics: dict[str, float]) -> None:
+    """Final-snapshot registry totals of one obs run: counters sum their
+    series, gauges average theirs, histograms contribute count and sum."""
+    from repro.obs import read_jsonl
+    snaps = read_jsonl(path)
+    if not snaps:
+        return
+    metrics[f"{section}:n_snapshots"] = float(len(snaps))
+    for name, inst in sorted(snaps[-1].get("metrics", {}).items()):
+        series = inst.get("series", [])
+        kind = inst.get("type")
+        if not series:
+            continue
+        if kind == "counter":
+            metrics[f"{section}:{name}"] = float(
+                sum(s["value"] for s in series))
+        elif kind == "gauge":
+            metrics[f"{section}:{name}"] = float(
+                sum(s["value"] for s in series) / len(series))
+        elif kind == "histogram":
+            metrics[f"{section}:{name}.count"] = float(
+                sum(s["value"]["count"] for s in series))
+            metrics[f"{section}:{name}.sum"] = float(
+                sum(s["value"]["sum"] for s in series))
+
+
+def load_tree(root: str) -> dict[str, dict[str, float]]:
+    """{section: {metric_key: value}} over one artifact directory."""
+    sections: dict[str, dict[str, float]] = {}
+    if not os.path.isdir(root):
+        return sections
+    for entry in sorted(os.listdir(root)):
+        path = os.path.join(root, entry)
+        if not os.path.isfile(path):
+            continue
+        if entry.startswith("BENCH_") and entry.endswith(".json"):
+            section = entry[len("BENCH_"):-len(".json")]
+            metrics: dict[str, float] = {}
+            _load_bench(path, section, metrics)
+            if metrics:
+                sections[section] = metrics
+        elif entry.endswith(".jsonl"):
+            section = f"obs.{entry[:-len('.jsonl')]}"
+            metrics = {}
+            _load_jsonl(path, section, metrics)
+            if metrics:
+                sections[section] = metrics
+    return sections
+
+
+# -- tolerance rules -----------------------------------------------------------
+
+def load_tolerances(path: str | None) -> tuple[dict, list[dict]]:
+    if not path:
+        return dict(DEFAULT_TOLERANCE), []
+    with open(path) as f:
+        doc = json.load(f)
+    default = {**DEFAULT_TOLERANCE, **doc.get("default", {})}
+    rules = doc.get("rules", [])
+    for r in rules:
+        if "pattern" not in r:
+            raise ValueError(f"tolerance rule without a pattern: {r!r}")
+    return default, rules
+
+
+def rule_for(key: str, default: dict, rules: list[dict]) -> dict:
+    for r in rules:
+        if fnmatch.fnmatch(key, r["pattern"]):
+            return {**default, **r}
+    return default
+
+
+# -- the diff ------------------------------------------------------------------
+
+def compare_metric(key: str, base: float, new: float,
+                   rule: dict) -> tuple[str, str]:
+    """(status, note). Status: ok | skipped | REGRESSED."""
+    if rule.get("skip"):
+        return "skipped", rule.get("reason", "")
+    tol = rule["rel"] * abs(base) + rule["abs"]
+    delta = new - base
+    direction = rule.get("direction", "both")
+    bad = (delta > tol and direction in ("high_bad", "both")) or \
+          (delta < -tol and direction in ("low_bad", "both"))
+    note = f"Δ={delta:+.6g} tol=±{tol:.6g} ({direction})"
+    return ("REGRESSED" if bad else "ok"), note
+
+
+def diff_trees(base_tree: dict, new_tree: dict, default: dict,
+               rules: list[dict]) -> list[dict]:
+    """One finding per metric of every section common to both trees."""
+    findings = []
+    common = sorted(set(base_tree) & set(new_tree))
+    for section in sorted(set(base_tree) | set(new_tree)):
+        if section not in common:
+            where = "baseline" if section in base_tree else "candidate"
+            findings.append({"key": section, "status": "section-only-in-"
+                             + where, "base": None, "new": None, "note": ""})
+    for section in common:
+        b, n = base_tree[section], new_tree[section]
+        for key in sorted(set(b) | set(n)):
+            rule = rule_for(key, default, rules)
+            if key not in n:
+                status = "skipped" if rule.get("skip") else "MISSING"
+                findings.append({"key": key, "base": b[key], "new": None,
+                                 "status": status,
+                                 "note": "metric disappeared"})
+            elif key not in b:
+                findings.append({"key": key, "base": None, "new": n[key],
+                                 "status": "new", "note": ""})
+            else:
+                status, note = compare_metric(key, b[key], n[key], rule)
+                findings.append({"key": key, "base": b[key], "new": n[key],
+                                 "status": status, "note": note})
+    return findings
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def print_table(findings: list[dict], *, verbose: bool = False) -> None:
+    shown = [f for f in findings if verbose
+             or f["status"] not in ("ok", "skipped")]
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f["status"]] = counts.get(f["status"], 0) + 1
+    if shown:
+        w = max(len(f["key"]) for f in shown)
+        print(f"{'metric':<{w}}  {'baseline':>14}  {'candidate':>14}  "
+              f"status")
+        for f in shown:
+            print(f"{f['key']:<{w}}  {_fmt(f['base']):>14}  "
+                  f"{_fmt(f['new']):>14}  {f['status']}"
+                  + (f"  {f['note']}" if f["note"] else ""))
+    print("[compare] " + "  ".join(
+        f"{k}={counts[k]}" for k in sorted(counts)))
+
+
+def gate(findings: list[dict]) -> int:
+    """Exit status for a findings list: 1 on regression/disappearance."""
+    return int(any(f["status"] in ("REGRESSED", "MISSING")
+                   for f in findings))
+
+
+def run_gate(baseline: str, candidate: str, *,
+             tolerance_file: str | None = None,
+             verbose: bool = False) -> int:
+    base_tree = load_tree(baseline)
+    new_tree = load_tree(candidate)
+    if not base_tree:
+        print(f"[compare] no BENCH_*.json / *.jsonl under baseline "
+              f"{baseline!r}")
+        return 1
+    if not new_tree:
+        print(f"[compare] no BENCH_*.json / *.jsonl under candidate "
+              f"{candidate!r}")
+        return 1
+    common = set(base_tree) & set(new_tree)
+    if not common:
+        print(f"[compare] no common sections between {baseline!r} "
+              f"({sorted(base_tree)}) and {candidate!r} "
+              f"({sorted(new_tree)})")
+        return 1
+    default, rules = load_tolerances(tolerance_file)
+    findings = diff_trees(base_tree, new_tree, default, rules)
+    print(f"[compare] {baseline} vs {candidate}: "
+          f"{len(common)} common section(s) {sorted(common)}")
+    print_table(findings, verbose=verbose)
+    code = gate(findings)
+    print(f"[compare] {'REGRESSION — failing the gate' if code else 'ok'}")
+    return code
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="baseline artifact directory (checked-in)")
+    ap.add_argument("--new", default="artifacts/bench", dest="candidate",
+                    help="candidate artifact directory (this run's output)")
+    ap.add_argument("--tolerance-file", default="",
+                    help="per-metric tolerance rules JSON")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print ok/skipped rows too")
+    args = ap.parse_args()
+    raise SystemExit(run_gate(args.baseline, args.candidate,
+                              tolerance_file=args.tolerance_file or None,
+                              verbose=args.verbose))
+
+
+if __name__ == "__main__":
+    main()

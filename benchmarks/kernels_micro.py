@@ -1,7 +1,14 @@
 """Kernel microbenchmarks: XLA path wall-time (CPU host) + the VMEM/HBM
-traffic model for the TPU kernels (the quantity the Pallas tiling targets)."""
+traffic model for the TPU kernels (the quantity the Pallas tiling targets),
+plus the per-kernel achieved-vs-roofline profile (`repro.obs.profile`) on
+the host path AND the forced-4-device mesh path (fresh subprocess: XLA
+fixes the device count at init)."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -42,7 +49,95 @@ def run(out_dir: str = "artifacts/bench") -> None:
     emit("kernel_sparse_gain_c4096_m512", dt * 1e6,
          f"gather_GB={4096 * 512 * 4 / 1e9:.3f}")
 
+    profile()
+    profile_mesh()
     obs_overhead()
+
+
+def _profile_body(reps: int = 5) -> list[dict]:
+    """Drive clause_match / bit_matvec / partition_gain under the process
+    profiler's measuring scope; returns `PROFILER.summary()` rows. Shapes
+    are fixed, so words_scanned/bytes_moved are machine-independent (the
+    regression gate compares them tightly); sync timing is wall-clock."""
+    from repro import obs
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    c, w = 4096, 512
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (c, w), dtype=np.uint32))
+    x = jnp.asarray(rng.standard_normal((w * 32, 1)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, w, dtype=np.uint32))
+    q = jnp.asarray(rng.integers(0, 2 ** 32, (512, 64), dtype=np.uint32))
+    cl = jnp.asarray(rng.integers(0, 2 ** 32, (128, 64), dtype=np.uint32))
+    bounds = tuple(int(b) for b in np.linspace(0, w, 5).astype(int))
+
+    prev = obs.set_enabled(True)
+    try:
+        # warm outside the measuring scope so compile time is never counted
+        jax.block_until_ready(ops.clause_match(q, cl))
+        jax.block_until_ready(ops.bit_matvec(a, x))
+        jax.block_until_ready(ops.partition_gain(a, mask, bounds))
+        obs.PROFILER.reset()
+        with obs.PROFILER.measuring():
+            for _ in range(reps):
+                ops.clause_match(q, cl)
+                ops.bit_matvec(a, x)
+                ops.partition_gain(a, mask, bounds)
+        return obs.PROFILER.summary()
+    finally:
+        obs.set_enabled(prev)
+
+
+def profile() -> list[dict]:
+    """Host-path roofline profile rows -> BENCH_kernels.json."""
+    rows = _profile_body()
+    for r in rows:
+        emit(f"profile_host_{r['op']}", r["us_per_call"],
+             f"path={r['path']};words_scanned={r['words_scanned']};"
+             f"bytes_moved={r['bytes_moved']};"
+             f"achieved_gbps={r['achieved_gbps']};"
+             f"roofline_frac={r['roofline_frac']}", data=r)
+    return rows
+
+
+_MESH_PROFILE_PROBE = r"""
+import json
+import repro.distributed as D
+from benchmarks import kernels_micro
+
+with D.use_mesh(D.shard_mesh()):
+    rows = kernels_micro._profile_body()
+print(json.dumps(rows))
+"""
+
+
+def profile_mesh(ndev: int = 4) -> list[dict]:
+    """The same profile inside a forced-`ndev`-device mesh subprocess —
+    partition_gain resolves to the owner-local shard_map fusion there, so
+    its rows land under path="mesh"."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               JAX_PLATFORMS="cpu", REPRO_OBS="1",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(root, "src"), root]
+                   + ([os.environ["PYTHONPATH"]]
+                      if os.environ.get("PYTHONPATH") else [])))
+    proc = subprocess.run([sys.executable, "-c", _MESH_PROFILE_PROBE],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    if proc.returncode != 0:
+        emit("profile_mesh_error", 0.0,
+             f"exit={proc.returncode}", data={"stderr": proc.stderr[-500:]})
+        return []
+    rows = json.loads(proc.stdout.strip().splitlines()[-1])
+    for r in rows:
+        emit(f"profile_mesh_{r['op']}", r["us_per_call"],
+             f"path={r['path']};words_scanned={r['words_scanned']};"
+             f"bytes_moved={r['bytes_moved']};"
+             f"achieved_gbps={r['achieved_gbps']};"
+             f"roofline_frac={r['roofline_frac']}", data=r)
+    return rows
 
 
 def obs_overhead(iters: int = 20) -> dict:

@@ -35,7 +35,7 @@ def dryrun_table() -> str:
 
 
 def roofline_table() -> str:
-    with open("artifacts/bench/roofline.json") as f:
+    with open("artifacts/bench/BENCH_roofline.json") as f:
         rows = json.load(f)
     cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
             "dominant", "model_flops_ratio", "roofline_frac", "cost_src"]

@@ -18,9 +18,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# single source for the peak numbers: the live kernel profiler shares them
+from repro.obs.profile import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 # tokens per step for MODEL_FLOPS = 6·N_active·D
 LM_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
@@ -123,7 +122,7 @@ def analyze(rec: dict) -> dict | None:
 
 
 def run(art_dir: str = "artifacts/dryrun",
-        out_path: str = "artifacts/bench/roofline.json") -> list[dict]:
+        out_path: str = "artifacts/bench/BENCH_roofline.json") -> list[dict]:
     rows = [a for a in (analyze(r) for r in load_records(art_dir)) if a]
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:

@@ -54,7 +54,7 @@ def main() -> None:
         try:
             rows = roofline.run()
             common.emit("roofline_rows", len(rows),
-                        "see artifacts/bench/roofline.json")
+                        "see artifacts/bench/BENCH_roofline.json")
         except Exception as e:  # noqa: BLE001
             common.emit("roofline_rows", 0, f"unavailable: {e}")
 

@@ -290,6 +290,12 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
     hist.observe_many(lat_ms)
     obs.histogram("loadgen_latency_ms", "end-to-end query latency",
                   buckets=LATENCY_BUCKETS_MS).observe_many(lat_ms)
+    # registry-gated tail gauges for the SLO engine; the report percentiles
+    # above stay the unconditional source of truth
+    obs.gauge("loadgen_p95_ms", "last loadgen run's p95 latency").set(
+        round(float(np.percentile(lat_ms, 95)), 6))
+    obs.gauge("loadgen_p99_ms", "last loadgen run's p99 latency").set(
+        round(float(np.percentile(lat_ms, 99)), 6))
     return LoadgenReport(
         n_queries=n_queries,
         offered_qps=rate_qps,

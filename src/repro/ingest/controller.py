@@ -54,6 +54,8 @@ _ADMISSION = obs.counter("admission_total",
                          labels=("decision",))
 _INGESTED = obs.counter("ingest_docs_total", "documents appended")
 _CORPUS_V = obs.gauge("corpus_version", "live corpus version")
+_REJECT_FRAC = obs.gauge("admission_reject_frac",
+                         "rejected fraction of this window's offers")
 from repro.stream.drift import TrafficSimulator, TrafficWindow
 
 
@@ -312,6 +314,9 @@ class IngestController(RetieringController):
             if accepted:
                 state = problem.apply(state, int(j))
                 irep.n_admitted += 1
+        if irep.n_offers:
+            _REJECT_FRAC.set(round(
+                1.0 - irep.n_admitted / irep.n_offers, 6))
         return state
 
     def _grow_budget(self, delta) -> None:

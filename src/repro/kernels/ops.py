@@ -22,11 +22,13 @@ crossing the wire) — integer-exact, bit-identical to the xla reference.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed import plan as _plan
+from repro.obs import _state as _obs_state
 from repro.kernels import bit_matvec as _bm
 from repro.kernels import clause_match as _cm
 from repro.kernels import coverage_gain as _cg
@@ -137,16 +139,80 @@ def _impl(op: str, backend: str | None):
     return _IMPLS[op][_plan.current_plan().placement(op, backend)]
 
 
+# -- dispatch cost accounting (repro.obs.profile) ------------------------------
+# Shape-derived models: uint32 postings words READ per call, plus modelled
+# HBM bytes (uint32/f32 operands + result). Reported to the process profiler
+# on every dispatch while the telemetry plane is on — one `_state.on` check
+# is the only cost when it is off (REPRO_OBS=0: complete no-op).
+
+def _cost_bit_matvec(a_bits, x):
+    c, w = a_bits.shape
+    r = int(x.shape[-1])
+    return c * w, 4 * (c * w + w * WORD * r + c * r)
+
+
+def _cost_coverage_gain(a_bits, mask):
+    c, w = a_bits.shape
+    return c * w, 4 * (c * w + w + c)
+
+
+def _cost_clause_match(query_bits, clause_bits):
+    b, wv = query_bits.shape
+    k = clause_bits.shape[0]
+    return (b + k) * wv, 4 * (b + k) * wv + b
+
+
+def _cost_partition_gain(a_bits, mask, bounds):
+    c, w = a_bits.shape
+    p = len(bounds) - 1
+    return c * w + w, 4 * (c * w + w + c * p)
+
+
+def _cost_sparse_gain(doc_ids, mask):
+    c, m = doc_ids.shape
+    return c * m, 4 * (2 * c * m + c)
+
+
+_PROF = None
+
+
+def _profiler():
+    global _PROF
+    if _PROF is None:                # bind late: repro.obs owns the singleton
+        from repro import obs
+        _PROF = obs.PROFILER
+    return _PROF
+
+
+def _profiled(op: str, path: str, fn, cost, *args):
+    """Dispatch `fn(*args)` with cost accounting (plane known to be on)."""
+    prof = _profiler()
+    words, nbytes = cost(*args)
+    t0 = time.perf_counter() if prof.active else 0.0
+    out = fn(*args)
+    prof.record(op, path, words, nbytes,
+                out=out if prof.active else None, t0=t0)
+    return out
+
+
+def _run(op: str, backend: str | None, cost, *args):
+    path = _plan.current_plan().placement(op, backend)
+    fn = _IMPLS[op][path]
+    if not _obs_state.on:
+        return fn(*args)
+    return _profiled(op, path, fn, cost, *args)
+
+
 # -- public ops ----------------------------------------------------------------
 
 def bit_matvec(a_bits: jnp.ndarray, x: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
     """gains [C, R] = unpack(a_bits [C, W]) @ x [W*32, R]."""
-    return _impl("bit_matvec", backend)(a_bits, x)
+    return _run("bit_matvec", backend, _cost_bit_matvec, a_bits, x)
 
 
 def coverage_gain(a_bits: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
     """gains [C] = popcount(a_bits & ~mask)."""
-    return _impl("coverage_gain", backend)(a_bits, mask)
+    return _run("coverage_gain", backend, _cost_coverage_gain, a_bits, mask)
 
 
 def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
@@ -158,7 +224,8 @@ def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
     """
     if clause_bits.shape[0] == 0 or query_bits.shape[0] == 0:
         return jnp.zeros((query_bits.shape[0],), bool)
-    return _impl("clause_match", backend)(query_bits, clause_bits)
+    return _run("clause_match", backend, _cost_clause_match,
+                query_bits, clause_bits)
 
 
 def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
@@ -177,16 +244,33 @@ def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
     """
     bounds = tuple(int(b) for b in bounds)
     plan = _plan.current_plan()
+
+    def cost(a, m):
+        return _cost_partition_gain(a, m, bounds)
+
     # an explicitly pinned path (backend= arg or per-op env placement) wins
     # over the mesh fusion — pinning exists to exercise a specific kernel
     if plan.shard_fused and not plan.pinned("partition_gain", backend):
-        return _partition_gain_mesh(a_bits, mask, bounds, plan)
-    return _impl("partition_gain", backend)(a_bits, mask, bounds)
+        def fused(a, m):
+            return _partition_gain_mesh(a, m, bounds, plan)
+        if not _obs_state.on:
+            return fused(a_bits, mask)
+        return _profiled("partition_gain", "mesh", fused, cost, a_bits, mask)
+
+    impl = _impl("partition_gain", backend)
+
+    def host(a, m):
+        return impl(a, m, bounds)
+
+    if not _obs_state.on:
+        return host(a_bits, mask)
+    path = plan.placement("partition_gain", backend)
+    return _profiled("partition_gain", path, host, cost, a_bits, mask)
 
 
 def sparse_gain(doc_ids: jnp.ndarray, mask: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
     """gains [C] over padded id lists."""
-    return _impl("sparse_gain", backend)(doc_ids, mask)
+    return _run("sparse_gain", backend, _cost_sparse_gain, doc_ids, mask)
 
 
 # -- owner-local partitioned gains over the "shard" mesh axis ------------------

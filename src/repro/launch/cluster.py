@@ -83,6 +83,8 @@ def main() -> None:
 
     if args.obs_dir and obs.enabled():
         obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="cluster"))
+    if obs.enabled():
+        obs.SLO.set_rules(obs.default_slo_rules())
 
     stack = contextlib.ExitStack()
     if args.mesh:

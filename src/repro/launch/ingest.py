@@ -69,6 +69,8 @@ def main() -> None:
 
     if args.obs_dir and obs.enabled():
         obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="ingest"))
+    if obs.enabled():
+        obs.SLO.set_rules(obs.default_slo_rules())
 
     print(f"[ingest] scale={args.scale} seed={args.seed} "
           f"scenario={args.scenario} windows={args.windows} "

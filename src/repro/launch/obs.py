@@ -5,11 +5,19 @@
     python -m repro.launch.obs --spans --events     # include span/event detail
     python -m repro.launch.obs --check \
         --require-metric cluster_words_total        # CI gate (exit 1 on miss)
+    python -m repro.launch.obs --diff artifacts/obs.baseline \
+        --tolerance-file benchmarks/tolerances.json # regression diff
 
 `--check` asserts every run has at least one snapshot, every snapshot has the
 required keys (window/ts/metrics/spans/events), and each `--require-metric`
 name appears with a non-empty series in at least one snapshot — the CI
-telemetry smoke gates on this.
+telemetry smoke gates on this. `--max-dropped-frac F` additionally gates on
+span/event ring retention: any run whose final snapshot reports a dropped
+fraction above F (or lacks the `rings` block entirely) fails the check.
+
+`--diff BASE_DIR` compares this tree's snapshots against a baseline obs
+directory through `benchmarks.compare` (same tolerance machinery as the
+BENCH_*.json perf gate) and exits nonzero on regression.
 """
 from __future__ import annotations
 
@@ -66,7 +74,8 @@ def summarize_run(name: str, snaps: list[dict], *, show_spans: bool,
             print(render_line(f"  event {e.get('kind', '?')}:", fields))
 
 
-def check(runs: dict[str, list[dict]], require_metrics: list[str]) -> int:
+def check(runs: dict[str, list[dict]], require_metrics: list[str],
+          max_dropped_frac: float | None = None) -> int:
     """Returns the number of failures (0 = pass), printing each one."""
     failures = 0
     if not runs:
@@ -83,6 +92,24 @@ def check(runs: dict[str, list[dict]], require_metrics: list[str]) -> int:
                 print(f"[obs] CHECK FAIL: run {name!r} snapshot {i} is "
                       f"missing keys {missing}")
                 failures += 1
+        if max_dropped_frac is not None:
+            rings = snaps[-1].get("rings")
+            if not isinstance(rings, dict):
+                print(f"[obs] CHECK FAIL: run {name!r} has no 'rings' "
+                      f"retention block (needed for --max-dropped-frac)")
+                failures += 1
+            else:
+                for ring_name, ring in sorted(rings.items()):
+                    seen = int(ring.get("n_seen", 0))
+                    dropped = int(ring.get("n_dropped", 0))
+                    frac = dropped / max(seen, 1)
+                    if frac > max_dropped_frac:
+                        print(f"[obs] CHECK FAIL: run {name!r} dropped "
+                              f"{frac:.1%} of {ring_name} "
+                              f"({dropped}/{seen}) > "
+                              f"{max_dropped_frac:.1%} — raise the ring "
+                              f"capacity or export more often")
+                        failures += 1
     for metric in require_metrics:
         found = any(
             snap.get("metrics", {}).get(metric, {}).get("series")
@@ -113,13 +140,33 @@ def main() -> None:
     ap.add_argument("--require-metric", action="append", default=[],
                     help="with --check: metric name that must have a "
                          "non-empty series (repeatable)")
+    ap.add_argument("--max-dropped-frac", type=float, default=None,
+                    help="with --check: fail any run whose final snapshot "
+                         "reports a span/event ring dropped fraction above "
+                         "this")
+    ap.add_argument("--diff", default="", metavar="BASE_DIR",
+                    help="diff this tree's snapshots against a baseline obs "
+                         "directory via benchmarks.compare (exit 1 on "
+                         "regression)")
+    ap.add_argument("--tolerance-file", default="",
+                    help="with --diff: per-metric tolerance rules JSON")
     args = ap.parse_args()
+
+    if args.diff:
+        try:
+            from benchmarks import compare as _compare
+        except ImportError:
+            raise SystemExit("[obs] --diff needs the benchmarks/ package on "
+                             "sys.path (run from the repo root)")
+        raise SystemExit(_compare.run_gate(
+            args.diff, args.dir, tolerance_file=args.tolerance_file or None))
 
     runs = load_dir(args.dir)
     if args.run:
         runs = {k: v for k, v in runs.items() if k == args.run}
     if args.check:
-        raise SystemExit(1 if check(runs, args.require_metric) else 0)
+        raise SystemExit(1 if check(runs, args.require_metric,
+                                    args.max_dropped_frac) else 0)
     if not runs:
         print(f"[obs] no snapshots under {args.dir}")
         return

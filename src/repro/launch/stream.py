@@ -44,6 +44,8 @@ def main() -> None:
 
     if args.obs_dir and obs.enabled():
         obs.set_exporter(obs.JsonlExporter(args.obs_dir, run="stream"))
+    if obs.enabled():
+        obs.SLO.set_rules(obs.default_slo_rules())
 
     def offline_pipe():
         return (api.TieringPipeline.from_synthetic(seed=args.seed,

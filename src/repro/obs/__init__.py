@@ -16,41 +16,54 @@ instrumented call sites use, via the shortcuts below:
 
     obs.event("drift_detected", window=i, tv=signal.tv_distance)
 
+On top of the raw plane sit two judgment layers: `SLO` (repro.obs.slo) —
+declarative SLO rules with multi-window burn-rate alerting, evaluated once
+per exported window — and `PROFILER` (repro.obs.profile) — the
+per-dispatch kernel cost accountant behind `kernel_words_scanned_total`
+and the achieved-vs-roofline rows in BENCH_kernels.json.
+
 Everything is gated on one switch: `REPRO_OBS=0` in the environment (or
 `obs.disable()` at runtime) turns the whole plane into no-ops — counters
-skip, `span()` returns the shared `NULL_SPAN`, events drop — and serve
-results stay bit-identical (pinned by tests/test_obs.py and the
-`obs_overhead` micro-bench). Instruments built directly with
-`always=True` (e.g. the loadgen latency histogram) bypass the switch so
-simulation OUTPUTS never depend on it.
+skip, `span()` returns the shared `NULL_SPAN`, events drop, SLO
+evaluation and kernel profiling never run — and serve results stay
+bit-identical (pinned by tests/test_obs.py and the `obs_overhead`
+micro-bench). Instruments built directly with `always=True` (e.g. the
+loadgen latency histogram) bypass the switch so simulation OUTPUTS never
+depend on it.
 """
 from __future__ import annotations
 
 from repro.obs import _state
 from repro.obs.events import DEFAULT_EVENT_CAPACITY, EventLog
 from repro.obs.export import DEFAULT_DIR, JsonlExporter, load_dir, read_jsonl
+from repro.obs.profile import HBM_BW, ICI_BW, PEAK_FLOPS, KernelProfiler
 from repro.obs.registry import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
                                 MetricsRegistry)
 from repro.obs.render import fmt_value, render_line
 from repro.obs.ring import Ring
+from repro.obs.slo import SLOEngine, SLORule, default_slo_rules
 from repro.obs.spans import (DEFAULT_SPAN_CAPACITY, NULL_SPAN, Span,
                              SpanRecorder)
 
 __all__ = [
-    "REGISTRY", "SPANS", "EVENTS",
+    "REGISTRY", "SPANS", "EVENTS", "SLO", "PROFILER",
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ring",
     "SpanRecorder", "Span", "NULL_SPAN", "EventLog", "JsonlExporter",
+    "SLOEngine", "SLORule", "default_slo_rules", "KernelProfiler",
     "counter", "gauge", "histogram", "span", "event",
     "enabled", "disabled", "enable", "disable", "set_enabled",
     "set_exporter", "get_exporter", "export_window", "dashboard", "reset",
     "read_jsonl", "load_dir", "render_line", "fmt_value",
     "DEFAULT_BUCKETS", "DEFAULT_DIR",
     "DEFAULT_SPAN_CAPACITY", "DEFAULT_EVENT_CAPACITY",
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
 ]
 
 REGISTRY = MetricsRegistry()
 SPANS = SpanRecorder()
 EVENTS = EventLog()
+SLO = SLOEngine(REGISTRY, EVENTS)
+PROFILER = KernelProfiler(REGISTRY)
 
 _exporter: JsonlExporter | None = None
 _span_cursor = 0
@@ -131,15 +144,29 @@ def get_exporter() -> JsonlExporter | None:
 
 def snapshot_window(index: int, **extra) -> dict:
     """Build (without writing) one window snapshot; advances the span and
-    event cursors so the next snapshot carries only new activity."""
+    event cursors so the next snapshot carries only new activity.
+
+    SLO rules are evaluated FIRST, so a breach/recovery transition lands in
+    this window's `events` delta and the primed `slo_breaches_total` series
+    in its `metrics`. The `rings` block surfaces span/event retention
+    (`n_seen`/`n_dropped`) so silent truncation never reads as coverage —
+    `launch.obs --check --max-dropped-frac` gates on it."""
     global _span_cursor, _event_cursor
     import time
+    slo = SLO.evaluate(index)
     snap = {
         "window": index,
         "ts": time.time(),
         "metrics": REGISTRY.collect(),
         "spans": SPANS.since(_span_cursor),
         "events": EVENTS.since(_event_cursor),
+        "slo": slo,
+        "rings": {
+            "spans": {"n_seen": SPANS.ring.n_seen,
+                      "n_dropped": SPANS.ring.n_dropped},
+            "events": {"n_seen": EVENTS.ring.n_seen,
+                       "n_dropped": EVENTS.ring.n_dropped},
+        },
     }
     snap.update(extra)
     _span_cursor = SPANS.seq
@@ -168,18 +195,24 @@ def dashboard() -> str:
         ("refits", int(REGISTRY.total("refits_total")) or None),
         ("swaps", int(REGISTRY.total("swaps_total")) or None),
         ("admitted", int(REGISTRY.total("admission_total")) or None),
+        ("kernel_words",
+         int(REGISTRY.total("kernel_words_scanned_total")) or None),
         ("events", len(EVENTS) or None),
         ("spans", len(SPANS.ring) or None),
+        ("slo", SLO.segment()),
     ]
     return render_line("obs:", [(k, v) for k, v in pairs if v is not None])
 
 
 def reset() -> None:
-    """Zero every series and drop spans/events/cursors (tests, A/B arms).
-    Instrument registrations and the installed exporter survive."""
+    """Zero every series and drop spans/events/cursors plus SLO burn state
+    and profiler aggregation (tests, A/B arms). Instrument registrations,
+    installed SLO rules and the installed exporter survive."""
     global _span_cursor, _event_cursor
     REGISTRY.reset()
     SPANS.reset()
     EVENTS.reset()
+    SLO.reset()
+    PROFILER.reset()
     _span_cursor = 0
     _event_cursor = 0

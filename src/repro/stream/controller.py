@@ -36,6 +36,7 @@ _W_COV = obs.gauge("window_coverage", "last window's Tier-1 eligible fraction")
 _W_SAVING = obs.gauge("window_cost_saving", "last window's word-traffic saving")
 _W_TV = obs.gauge("window_tv_distance", "drift signal vs last refit")
 _GEN = obs.gauge("live_generation", "tiering generation serving traffic")
+_REFIT_S = obs.gauge("refit_seconds", "last refit wall-clock, seconds")
 
 
 @dataclasses.dataclass
@@ -320,6 +321,7 @@ class RetieringController:
         with obs.span("refit", window=report.index):
             self._refit_inner(solve_w, raw_w, report)
         _REFITS.inc(kind=report.refit)
+        _REFIT_S.set(round(report.refit_seconds, 4))
         obs.event("refit", window=report.index, mode=report.refit,
                   steps=report.refit_steps, pruned=report.pruned,
                   seconds=round(report.refit_seconds, 4),

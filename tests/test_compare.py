@@ -1,0 +1,228 @@
+"""benchmarks.compare: BENCH/JSONL tree loading, tolerance-rule matching,
+direction-aware regression detection, and the run_gate exit contract CI
+leans on."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import compare  # noqa: E402
+
+from repro import obs  # noqa: E402
+
+
+def _bench(tmp_path, name, rows, seconds=1.5):
+    p = tmp_path / f"BENCH_{name}.json"
+    p.write_text(json.dumps({"seconds": seconds, "rows": rows}))
+    return p
+
+
+def _row(name, us=10.0, derived="", data=None):
+    r = {"name": name, "us_per_call": us, "derived": derived}
+    if data is not None:
+        r["data"] = data
+    return r
+
+
+def _tree(tmp_path, sub, p95):
+    d = tmp_path / sub
+    d.mkdir()
+    _bench(d, "cluster", [_row(
+        "serve", us=3.0,
+        derived=f"p95={p95};cov=0.42;consistent=True;note=free_text",
+        data={"latency_hist": {"count": 100, "sum": 12.5,
+                               "buckets": [1, 2, 3]}, "qps": 2000.0})])
+    return str(d)
+
+
+# -- parsing & loading ---------------------------------------------------------
+
+def test_parse_derived_numbers_bools_and_noise():
+    assert compare.parse_derived(
+        "p95=1.5;ok=True;bad=false;pct=12%;label=t2;stray") == \
+        {"p95": 1.5, "ok": 1.0, "bad": 0.0, "pct": 12.0}
+
+
+def test_load_tree_flattens_rows_and_skips_bare_lists(tmp_path):
+    root = _tree(tmp_path, "a", p95=1.5)
+    # roofline-style bare row LIST carries no gateable metrics -> no section
+    (tmp_path / "a" / "BENCH_roofline.json").write_text(
+        json.dumps([{"arch": "x", "roofline_frac": 0.5}]))
+    tree = compare.load_tree(root)
+    assert set(tree) == {"cluster"}
+    m = tree["cluster"]
+    assert m["cluster:seconds"] == 1.5
+    assert m["cluster/serve:us_per_call"] == 3.0
+    assert m["cluster/serve:p95"] == 1.5
+    assert m["cluster/serve:consistent"] == 1.0
+    assert m["cluster/serve:data.qps"] == 2000.0
+    assert m["cluster/serve:data.latency_hist.count"] == 100.0
+    # list leaves (bucket arrays) are deliberately not exploded
+    assert not any("buckets" in k for k in m)
+    assert compare.load_tree(str(tmp_path / "missing")) == {}
+
+
+def test_load_tree_reads_obs_jsonl(tmp_path):
+    d = tmp_path / "o"
+    d.mkdir()
+    prev_on = obs.set_enabled(True)
+    prev_ex = obs.set_exporter(obs.JsonlExporter(str(d), run="run"))
+    obs.reset()
+    try:
+        c = obs.counter("t_cmp_total", labels=("arm",))
+        c.inc(3, arm="a")
+        c.inc(4, arm="b")
+        obs.gauge("t_cmp_g").set(7.5)
+        obs.histogram("t_cmp_h", buckets=(1.0,)).observe_many([0.5, 2.0])
+        obs.export_window(0)
+    finally:
+        obs.reset()
+        obs.set_exporter(prev_ex)
+        obs.set_enabled(prev_on)
+    tree = compare.load_tree(str(d))
+    m = tree["obs.run"]
+    assert m["obs.run:n_snapshots"] == 1.0
+    assert m["obs.run:t_cmp_total"] == 7.0          # counters sum series
+    assert m["obs.run:t_cmp_g"] == 7.5              # gauges average
+    assert m["obs.run:t_cmp_h.count"] == 2.0
+    assert m["obs.run:t_cmp_h.sum"] == 2.5
+
+
+# -- tolerance rules -----------------------------------------------------------
+
+def test_rule_matching_is_ordered_first_wins():
+    rules = [{"pattern": "*:us_per_call", "skip": True},
+             {"pattern": "*:p95*", "rel": 0.5, "direction": "high_bad"},
+             {"pattern": "*:p9*", "rel": 0.01}]
+    d = dict(compare.DEFAULT_TOLERANCE)
+    assert compare.rule_for("x/y:us_per_call", d, rules)["skip"] is True
+    r = compare.rule_for("x/y:p95", d, rules)
+    assert r["rel"] == 0.5 and r["direction"] == "high_bad"
+    assert r["abs"] == d["abs"]                     # default fills the rest
+    assert compare.rule_for("x/y:p99", d, rules)["rel"] == 0.01
+    assert compare.rule_for("x/y:cov", d, rules) == d
+
+
+def test_load_tolerances_validates_patterns(tmp_path):
+    p = tmp_path / "tol.json"
+    p.write_text(json.dumps({"default": {"rel": 0.1},
+                             "rules": [{"rel": 0.5}]}))
+    with pytest.raises(ValueError, match="without a pattern"):
+        compare.load_tolerances(str(p))
+    p.write_text(json.dumps({"default": {"rel": 0.1}, "rules": []}))
+    default, rules = compare.load_tolerances(str(p))
+    assert default["rel"] == 0.1
+    assert default["abs"] == compare.DEFAULT_TOLERANCE["abs"]
+    assert rules == []
+    assert compare.load_tolerances(None)[0] == compare.DEFAULT_TOLERANCE
+
+
+def test_compare_metric_directions():
+    high = {"rel": 0.1, "abs": 0.0, "direction": "high_bad"}
+    low = {"rel": 0.1, "abs": 0.0, "direction": "low_bad"}
+    both = {"rel": 0.1, "abs": 0.0, "direction": "both"}
+    assert compare.compare_metric("k", 100.0, 109.0, high)[0] == "ok"
+    assert compare.compare_metric("k", 100.0, 111.0, high)[0] == "REGRESSED"
+    assert compare.compare_metric("k", 100.0, 50.0, high)[0] == "ok"   # better
+    assert compare.compare_metric("k", 100.0, 50.0, low)[0] == "REGRESSED"
+    assert compare.compare_metric("k", 100.0, 200.0, low)[0] == "ok"
+    assert compare.compare_metric("k", 100.0, 200.0, both)[0] == "REGRESSED"
+    assert compare.compare_metric("k", 100.0, 50.0, both)[0] == "REGRESSED"
+    # abs floor makes zero-baseline metrics gateable
+    tight = {"rel": 0.0, "abs": 0.5, "direction": "both"}
+    assert compare.compare_metric("k", 0.0, 0.4, tight)[0] == "ok"
+    assert compare.compare_metric("k", 0.0, 0.6, tight)[0] == "REGRESSED"
+    assert compare.compare_metric("k", 1.0, 9.0, {"skip": True}) == \
+        ("skipped", "")
+
+
+# -- the gate ------------------------------------------------------------------
+
+RULES = {"default": {"rel": 0.25, "abs": 1e-9, "direction": "both"},
+         "rules": [{"pattern": "*:us_per_call", "skip": True},
+                   {"pattern": "*:seconds", "skip": True},
+                   {"pattern": "*:p95*", "rel": 0.5, "abs": 0.01,
+                    "direction": "high_bad"},
+                   {"pattern": "*cov*", "rel": 0.1, "abs": 0.02,
+                    "direction": "low_bad"}]}
+
+
+def _tol(tmp_path):
+    p = tmp_path / "tol.json"
+    p.write_text(json.dumps(RULES))
+    return str(p)
+
+
+def test_self_diff_is_clean(tmp_path, capsys):
+    base = _tree(tmp_path, "base", p95=1.5)
+    assert compare.run_gate(base, base, tolerance_file=_tol(tmp_path)) == 0
+    out = capsys.readouterr().out
+    assert "REGRESSION" not in out and "ok" in out
+
+
+def test_injected_regression_fails_the_gate(tmp_path, capsys):
+    base = _tree(tmp_path, "base", p95=1.5)
+    cand = _tree(tmp_path, "cand", p95=4.0)     # > 1.5 * (1 + 0.5) + 0.01
+    assert compare.run_gate(base, cand, tolerance_file=_tol(tmp_path)) == 1
+    out = capsys.readouterr().out
+    assert "cluster/serve:p95" in out and "REGRESSED" in out
+    assert "us_per_call" not in out             # skipped rows stay quiet
+    # the same move in the GOOD direction passes: high_bad ignores drops
+    assert compare.run_gate(cand, base, tolerance_file=_tol(tmp_path)) == 0
+
+
+def test_missing_metric_and_new_metric(tmp_path):
+    base = _tree(tmp_path, "base", p95=1.5)
+    d = tmp_path / "cand"
+    d.mkdir()
+    # candidate row lost cov/consistent/data AND the wall-clock fields
+    (d / "BENCH_cluster.json").write_text(json.dumps(
+        {"rows": [{"name": "serve", "derived": "p95=1.5;extra=2"}]}))
+    findings = compare.diff_trees(
+        compare.load_tree(base), compare.load_tree(str(d)),
+        *compare.load_tolerances(_tol(tmp_path)))
+    by = {f["key"]: f["status"] for f in findings}
+    assert by["cluster/serve:cov"] == "MISSING"       # disappeared -> fail
+    assert by["cluster/serve:extra"] == "new"         # appeared -> fine
+    assert by["cluster/serve:data.qps"] == "MISSING"
+    assert compare.gate(findings) == 1
+    # a skip rule also waives disappearance: wall-clock metrics may vanish
+    assert by["cluster:seconds"] == "skipped"
+    assert by["cluster/serve:us_per_call"] == "skipped"
+
+
+def test_sections_only_compared_when_common(tmp_path, capsys):
+    base = _tree(tmp_path, "base", p95=1.5)
+    cand = _tree(tmp_path, "cand", p95=1.5)
+    # candidate grows an extra section: informational, never a failure
+    _bench(tmp_path / "cand", "ingest", [_row("pipe", derived="docs=5")])
+    assert compare.run_gate(base, cand, tolerance_file=_tol(tmp_path)) == 0
+    assert "section-only-in-candidate" in capsys.readouterr().out
+    # disjoint trees cannot vouch for anything -> hard failure
+    d = tmp_path / "other"
+    d.mkdir()
+    _bench(d, "solvers", [_row("x", derived="v=1")])
+    assert compare.run_gate(base, str(d), tolerance_file=_tol(tmp_path)) == 1
+    assert "no common sections" in capsys.readouterr().out
+
+
+def test_empty_trees_fail_closed(tmp_path, capsys):
+    base = _tree(tmp_path, "base", p95=1.5)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert compare.run_gate(str(empty), base) == 1
+    assert "baseline" in capsys.readouterr().out
+    assert compare.run_gate(base, str(empty)) == 1
+    assert "candidate" in capsys.readouterr().out
+
+
+def test_checked_in_tiny_baseline_self_gates():
+    """The CI gate's own baseline must diff clean against itself with the
+    shipped tolerance file — guards both artifact and rule-file syntax."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    baseline = os.path.join(root, "benchmarks", "baselines", "tiny")
+    tol = os.path.join(root, "benchmarks", "tolerances.json")
+    assert compare.run_gate(baseline, baseline, tolerance_file=tol) == 0

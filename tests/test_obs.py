@@ -19,13 +19,15 @@ from repro import obs
 
 @pytest.fixture(autouse=True)
 def _clean_obs():
-    """Every test sees an enabled, empty, exporter-free plane — and leaves
-    the process-global singletons the way it found them."""
+    """Every test sees an enabled, empty, exporter-free, rule-free plane —
+    and leaves the process-global singletons the way it found them."""
     prev_on = obs.set_enabled(True)
     prev_ex = obs.set_exporter(None)
+    obs.SLO.set_rules([])
     obs.reset()
     yield
     obs.reset()
+    obs.SLO.set_rules([])
     obs.set_exporter(prev_ex)
     obs.set_enabled(prev_on)
 
@@ -234,6 +236,49 @@ def test_launch_obs_check_gate():
     assert check({"r": [{"window": 0}]}, []) == 1   # missing required keys
 
 
+def test_launch_obs_check_max_dropped_frac():
+    from repro.launch.obs import check
+
+    def run(spans_seen, spans_dropped):
+        return {"r": [{"window": 0, "ts": 0.0, "events": [], "spans": [],
+                       "metrics": {},
+                       "rings": {"spans": {"n_seen": spans_seen,
+                                           "n_dropped": spans_dropped},
+                                 "events": {"n_seen": 0, "n_dropped": 0}}}]}
+
+    assert check(run(100, 10), [], max_dropped_frac=0.5) == 0
+    assert check(run(100, 60), [], max_dropped_frac=0.5) == 1
+    assert check(run(0, 0), [], max_dropped_frac=0.0) == 0
+    # a snapshot without the rings block can't prove retention: fail
+    legacy = {"r": [{"window": 0, "ts": 0.0, "events": [], "spans": [],
+                     "metrics": {}}]}
+    assert check(legacy, [], max_dropped_frac=0.5) == 1
+    assert check(legacy, []) == 0               # ... unless the flag is off
+
+
+def test_snapshot_rings_and_empty_window(tmp_path):
+    obs.set_exporter(obs.JsonlExporter(tmp_path, run="rings"))
+    empty = obs.export_window(0)                # no activity at all: valid
+    assert empty["spans"] == [] and empty["events"] == []
+    assert empty["slo"] == {}                   # no rules installed
+    assert empty["rings"]["spans"] == {"n_seen": 0, "n_dropped": 0}
+    from repro.obs.events import DEFAULT_EVENT_CAPACITY
+    n = DEFAULT_EVENT_CAPACITY + 50
+    for i in range(n):
+        obs.event("flood", i=i)
+    dropped = obs.export_window(1)
+    assert dropped["rings"]["events"] == {"n_seen": n, "n_dropped": 50}
+    # the payload round-trips through JSONL read/load_dir intact
+    snaps = obs.read_jsonl(obs.get_exporter().path)
+    assert obs.load_dir(tmp_path) == {"rings": snaps}
+    assert [s["window"] for s in snaps] == [0, 1]
+    assert snaps[1]["rings"]["events"]["n_dropped"] == 50
+    assert snaps[0]["rings"] == empty["rings"]
+    for s in snaps:
+        assert {"window", "ts", "metrics", "spans", "events",
+                "slo", "rings"} <= set(s)
+
+
 # -- uniform report dict surface ----------------------------------------------
 
 def test_serve_stats_round_trip():
@@ -367,6 +412,125 @@ def test_solver_trace_emits_solve_event():
     assert ev and ev[-1]["solver"] == "greedy"
     assert ev[-1]["n_selections"] > 0 and ev[-1]["f_final"] > 0
     assert obs.REGISTRY.total("solver_selections_total") > 0
+
+
+# -- kernel profiler (repro.obs.profile) --------------------------------------
+
+def test_kernel_profiler_counters_and_measuring():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (64, 8), dtype=np.uint32))
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    on = np.asarray(ops.coverage_gain(a, mask))
+    assert obs.REGISTRY.total("kernel_words_scanned_total") == 64 * 8
+    assert obs.REGISTRY.total("kernel_bytes_moved_total") > 0
+    assert obs.PROFILER.summary() == []         # not measuring: no sync rows
+    with obs.PROFILER.measuring():
+        ops.coverage_gain(a, mask)
+        ops.coverage_gain(a, mask)
+    rows = obs.PROFILER.summary()
+    assert [(r["op"], r["path"], r["calls"]) for r in rows] == \
+        [("coverage_gain", "xla", 2)]
+    r = rows[0]
+    assert r["words_scanned"] == 2 * 64 * 8
+    assert r["achieved_gbps"] > 0.0 and r["roofline_frac"] > 0.0
+    assert r["roofline_frac"] == pytest.approx(
+        r["achieved_gbps"] / (obs.HBM_BW / 1e9), abs=1e-6)  # 6-dp rounding
+    obs.reset()
+    assert obs.PROFILER.summary() == []         # reset drops the aggregation
+    # disabled: dispatch records nothing and the result stays bit-identical
+    obs.set_enabled(False)
+    off = np.asarray(ops.coverage_gain(a, mask))
+    np.testing.assert_array_equal(on, off)
+    assert obs.REGISTRY.total("kernel_words_scanned_total") == 0
+    with obs.PROFILER.measuring():
+        ops.coverage_gain(a, mask)
+    assert obs.PROFILER.summary() == []
+
+
+def test_kernel_profiler_labels_every_public_op():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (32, 4), dtype=np.uint32))
+    x = jnp.asarray(rng.standard_normal((4 * 32, 2)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, 4, dtype=np.uint32))
+    q = jnp.asarray(rng.integers(0, 2 ** 32, (8, 4), dtype=np.uint32))
+    ids = jnp.asarray(rng.integers(0, 50, (16, 6)), jnp.int32)
+    ops.bit_matvec(a, x)
+    ops.coverage_gain(a, mask)
+    ops.clause_match(q, a[:3])
+    ops.partition_gain(a, mask, (0, 2, 4))
+    ops.sparse_gain(ids, jnp.zeros(50, bool))
+    c = obs.REGISTRY.get("kernel_words_scanned_total")
+    by_op = {s["labels"]["op"]: s["value"] for s in c.to_dict()["series"]}
+    assert set(by_op) == {"bit_matvec", "coverage_gain", "clause_match",
+                          "partition_gain", "sparse_gain"}
+    assert by_op["bit_matvec"] == 32 * 4
+    assert by_op["partition_gain"] == 32 * 4 + 4
+    # the empty-operand clause_match early return never dispatches
+    before = by_op["clause_match"]
+    ops.clause_match(q, a[:0])
+    c2 = {s["labels"]["op"]: s["value"]
+          for s in c.to_dict()["series"]}["clause_match"]
+    assert c2 == before
+
+
+# -- SLO engine over live windows ---------------------------------------------
+
+def test_slo_disabled_is_complete_noop():
+    obs.SLO.set_rules(obs.default_slo_rules())
+    obs.set_enabled(False)
+    assert obs.SLO.evaluate(0) == {}
+    assert obs.SLO.breached() == []
+    assert obs.REGISTRY.total("slo_breaches_total") == 0
+
+
+def test_slo_breach_and_recover_deterministic(tmp_path):
+    """A seeded loadgen overload window against a tightened p95 rule must
+    produce exactly slo_breach -> slo_recovered, in the JSONL payload, the
+    EventLog, the breach counter, and the dashboard segment."""
+    from repro import cluster
+    pipe = _fresh_pipe()
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2)
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    elig = fleet.classify(pipe.log.queries[:256])
+    obs.set_exporter(obs.JsonlExporter(tmp_path, run="slo"))
+    obs.SLO.set_rules([obs.SLORule(
+        "p95_tight", "p95:loadgen_latency_ms", max=1.0,
+        fast_windows=1, slow_windows=4, slow_burn=0.25, clear_windows=2)])
+
+    def window(i, qps):
+        cluster.run_loadgen(plan, elig, rate_qps=qps, n_queries=400, seed=i)
+        return obs.export_window(i)
+
+    s0 = window(0, 1e6)       # open-loop overload: queueing blows the tail
+    assert s0["slo"]["rules"]["p95_tight"]["bad"] is True
+    assert s0["slo"]["breached"] == ["p95_tight"]
+    assert [e["rule"] for e in s0["events"]
+            if e["kind"] == "slo_breach"] == ["p95_tight"]
+    assert "slo=BREACH(p95_tight)" in obs.dashboard()
+    assert obs.REGISTRY.total("slo_breaches_total") == 1
+
+    s1 = window(1, 50.0)      # light load: good, but hysteresis holds
+    assert s1["slo"]["rules"]["p95_tight"]["bad"] is False
+    assert s1["slo"]["breached"] == ["p95_tight"]
+    s2 = window(2, 50.0)      # second consecutive good window: recovered
+    assert s2["slo"]["breached"] == []
+    assert [e["rule"] for e in s2["events"]
+            if e["kind"] == "slo_recovered"] == ["p95_tight"]
+    assert "slo=ok(1)" in obs.dashboard()
+    assert obs.REGISTRY.total("slo_breaches_total") == 1   # transitions only
+
+    snaps = obs.read_jsonl(obs.get_exporter().path)
+    kinds = [(s["window"], e["kind"]) for s in snaps for e in s["events"]
+             if e["kind"].startswith("slo_")]
+    assert kinds == [(0, "slo_breach"), (2, "slo_recovered")]
+    # primed series: the counter exports even for never-breached rules
+    series = snaps[-1]["metrics"]["slo_breaches_total"]["series"]
+    assert {s["labels"]["rule"]: s["value"]
+            for s in series} == {"p95_tight": 1}
 
 
 # -- disabled-path overhead pin ----------------------------------------------

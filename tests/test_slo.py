@@ -1,0 +1,190 @@
+"""repro.obs.slo: rule validation, the metric-spec mini-language (gauge /
+delta / percentile / ratio, label filters, windowed histogram deltas), the
+multi-window burn-rate state machine with recovery hysteresis, `when`
+guards, and the default fleet rule set."""
+import pytest
+
+from repro import obs
+from repro.obs.slo import SLORule, _parse_target, default_slo_rules
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    prev_on = obs.set_enabled(True)
+    prev_ex = obs.set_exporter(None)
+    obs.SLO.set_rules([])
+    obs.reset()
+    yield
+    obs.reset()
+    obs.SLO.set_rules([])
+    obs.set_exporter(prev_ex)
+    obs.set_enabled(prev_on)
+
+
+# -- rule & spec validation ----------------------------------------------------
+
+def test_rule_requires_a_bound_and_sane_windows():
+    with pytest.raises(ValueError, match="max= or min="):
+        SLORule("r", "gauge:x")
+    with pytest.raises(ValueError, match="fast_windows"):
+        SLORule("r", "gauge:x", max=1.0, fast_windows=3, slow_windows=2)
+    with pytest.raises(ValueError, match="fast_windows"):
+        SLORule("r", "gauge:x", max=1.0, fast_windows=0)
+
+
+def test_target_parsing_and_bad_specs():
+    assert _parse_target("name") == ("name", {})
+    assert _parse_target("admission_total{decision=reject, tier=t1}") == \
+        ("admission_total", {"decision": "reject", "tier": "t1"})
+    with pytest.raises(ValueError, match="bad SLO metric target"):
+        _parse_target("1bad{")
+    with pytest.raises(ValueError, match="label filter"):
+        _parse_target("name{oops}")
+    obs.SLO.set_rules([SLORule("r", "nonsense:x", max=1.0)])
+    with pytest.raises(ValueError, match="unknown SLO metric spec kind"):
+        obs.SLO.evaluate(0)
+    obs.SLO.set_rules([SLORule("r", "no_kind_separator", max=1.0)])
+    with pytest.raises(ValueError, match="want KIND"):
+        obs.SLO.evaluate(0)
+    obs.SLO.set_rules([SLORule("r", "p150:h", max=1.0)])
+    with pytest.raises(ValueError, match=r"p\(0,100\]"):
+        obs.SLO.evaluate(0)
+
+
+# -- spec evaluation -----------------------------------------------------------
+
+def test_gauge_spec_with_label_filter():
+    g = obs.gauge("t_slo_g", labels=("arm",))
+    g.set(10.0, arm="a")
+    g.set(30.0, arm="b")
+    obs.SLO.set_rules([SLORule("all", "gauge:t_slo_g", max=100.0),
+                       SLORule("only_b", "gauge:t_slo_g{arm=b}", max=100.0)])
+    out = obs.SLO.evaluate(0)
+    assert out["rules"]["all"]["value"] == pytest.approx(20.0)   # mean
+    assert out["rules"]["only_b"]["value"] == pytest.approx(30.0)
+    # a gauge never written (or a name of the wrong kind) is N/A, not bad
+    obs.SLO.set_rules([SLORule("ghost", "gauge:t_slo_missing", max=1.0)])
+    out = obs.SLO.evaluate(1)
+    assert out["rules"]["ghost"]["value"] is None
+    assert out["rules"]["ghost"]["bad"] is None
+
+
+def test_delta_spec_is_windowed():
+    c = obs.counter("t_slo_c")
+    obs.SLO.set_rules([SLORule("d", "delta:t_slo_c", max=10.0)])
+    c.inc(4)
+    assert obs.SLO.evaluate(0)["rules"]["d"]["value"] == 4.0
+    assert obs.SLO.evaluate(1)["rules"]["d"]["value"] == 0.0   # no new incs
+    c.inc(25)
+    out = obs.SLO.evaluate(2)["rules"]["d"]
+    assert out["value"] == 25.0 and out["bad"] is True
+
+
+def test_ratio_spec_none_while_denominator_flat():
+    num = obs.counter("t_slo_num", labels=("decision",))
+    obs.SLO.set_rules([SLORule(
+        "rej", "ratio:t_slo_num{decision=reject}/t_slo_num", max=0.5)])
+    out = obs.SLO.evaluate(0)["rules"]["rej"]
+    assert out["value"] is None and out["bad"] is None
+    num.inc(3, decision="reject")
+    num.inc(1, decision="accept")
+    out = obs.SLO.evaluate(1)["rules"]["rej"]
+    assert out["value"] == pytest.approx(0.75) and out["bad"] is True
+    num.inc(4, decision="accept")
+    out = obs.SLO.evaluate(2)["rules"]["rej"]
+    assert out["value"] == pytest.approx(0.0)   # windowed: this delta only
+
+
+def test_percentile_spec_uses_bucket_deltas():
+    h = obs.histogram("t_slo_h", buckets=(1.0, 10.0, 100.0))
+    obs.SLO.set_rules([SLORule("p", "p95:t_slo_h", max=50.0)])
+    h.observe_many([0.5] * 100)
+    out = obs.SLO.evaluate(0)["rules"]["p"]
+    assert out["value"] <= 1.0 and out["bad"] is False
+    # cumulative histogram, windowed judgment: only the NEW tail counts
+    h.observe_many([99.0] * 100)
+    out = obs.SLO.evaluate(1)["rules"]["p"]
+    assert out["value"] > 50.0 and out["bad"] is True
+    # no new observations at all: N/A window, burn history untouched
+    out = obs.SLO.evaluate(2)["rules"]["p"]
+    assert out["value"] is None and out["bad"] is None
+
+
+def test_when_guard_skips_inapplicable_windows():
+    g = obs.gauge("t_slo_refit_s")
+    c = obs.counter("t_slo_refits")
+    obs.SLO.set_rules([SLORule("budget", "gauge:t_slo_refit_s", max=10.0,
+                               when="delta:t_slo_refits", when_min=1.0)])
+    g.set(99.0)                                 # stale breach-level gauge...
+    for w in range(4):
+        out = obs.SLO.evaluate(w)["rules"]["budget"]
+        assert out["bad"] is None and out["breached"] is False
+    c.inc()                                     # ...until a refit happens
+    out = obs.SLO.evaluate(4)["rules"]["budget"]
+    assert out["bad"] is True
+
+
+# -- burn-rate state machine ---------------------------------------------------
+
+def test_burn_rate_needs_both_windows_and_recovery_hysteresis():
+    g = obs.gauge("t_slo_v")
+    obs.SLO.set_rules([SLORule("r", "gauge:t_slo_v", max=10.0,
+                               fast_windows=2, slow_windows=4,
+                               fast_burn=1.0, slow_burn=0.5,
+                               clear_windows=2)])
+
+    def step(w, value):
+        g.set(value)
+        return obs.SLO.evaluate(w)["rules"]["r"]
+
+    assert step(0, 0.0)["breached"] is False
+    # one bad window: fast burn is only 1/2 — a blip never pages
+    assert step(1, 99.0)["breached"] is False
+    assert obs.REGISTRY.total("slo_breaches_total") == 0
+    # second consecutive bad: fast=2/2, slow=2/3 >= 0.5 — breach
+    s = step(2, 99.0)
+    assert s["breached"] is True and s["fast_burn"] == 1.0
+    assert obs.EVENTS.of_kind("slo_breach")[-1]["rule"] == "r"
+    assert obs.REGISTRY.total("slo_breaches_total") == 1
+    # one good window is not recovery (clear_windows=2)...
+    assert step(3, 0.0)["breached"] is True
+    assert not obs.EVENTS.of_kind("slo_recovered")
+    # ...two are
+    assert step(4, 0.0)["breached"] is False
+    assert obs.EVENTS.of_kind("slo_recovered")[-1]["window"] == 4
+    # re-breach increments the transition counter again
+    step(5, 99.0)
+    step(6, 99.0)
+    assert obs.REGISTRY.total("slo_breaches_total") == 2
+    assert obs.SLO.breached() == ["r"]
+
+
+def test_segment_and_reset():
+    assert obs.SLO.segment() is None            # no rules: no dashboard slot
+    g = obs.gauge("t_slo_seg")
+    obs.SLO.set_rules([SLORule("a", "gauge:t_slo_seg", max=1.0),
+                       SLORule("b", "gauge:t_slo_seg", min=-1.0)])
+    assert obs.SLO.segment() == "ok(2)"
+    g.set(5.0)
+    obs.SLO.evaluate(0)
+    assert obs.SLO.segment() == "BREACH(a)"
+    obs.SLO.reset()                             # burn state drops...
+    assert obs.SLO.segment() == "ok(2)"
+    assert len(obs.SLO.rules) == 2              # ...the installed rules stay
+
+
+def test_default_rules_cover_the_fleet_objectives():
+    rules = {r.name: r for r in default_slo_rules()}
+    assert {"serve_p95", "serve_p99", "coverage_floor", "t2_fallback_rate",
+            "refit_budget", "admission_reject_rate"} == set(rules)
+    assert rules["serve_p95"].metric == "p95:loadgen_latency_ms"
+    assert rules["coverage_floor"].min is not None
+    assert rules["refit_budget"].when == "delta:refits_total"
+    obs.SLO.set_rules(default_slo_rules())
+    out = obs.SLO.evaluate(0)                   # cold registry: all N/A...
+    assert set(out["rules"]) == set(rules)
+    assert out["breached"] == []                # ...and nothing alarms
+    # the primed breach counter exports a zero series per rule
+    names = {s["labels"]["rule"] for s in
+             obs.REGISTRY.get("slo_breaches_total").to_dict()["series"]}
+    assert names == set(rules)
