@@ -215,6 +215,14 @@ def diff_trees(base_tree: dict, new_tree: dict, default: dict,
                                  "status": "new", "note": ""})
             else:
                 status, note = compare_metric(key, b[key], n[key], rule)
+                if status == "REGRESSED" and key.endswith(":roofline_frac"):
+                    # a profile row regressing is a kernel-bandwidth story:
+                    # surface the sibling achieved-GB/s delta so the CI log
+                    # is diagnosable without rerunning the bench locally
+                    gk = key[: -len("roofline_frac")] + "achieved_gbps"
+                    if gk in b and gk in n:
+                        note += (f"; achieved_gbps {b[gk]:.3f}->{n[gk]:.3f}"
+                                 f" ({n[gk] - b[gk]:+.3f} GB/s)")
                 findings.append({"key": key, "base": b[key], "new": n[key],
                                  "status": status, "note": note})
     return findings

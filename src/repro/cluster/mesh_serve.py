@@ -8,14 +8,21 @@ SPMD program over the `"shard"` axis:
      kernel (`ops.clause_match`) on the full batch, so the ψ^clause decision
      needs no broadcast;
   2. scatter — each query's work lands on the devices that own its doc
-     words: the device holds its shard's RESIDENT Tier-1 and Tier-2 postings
-     slices and AND-matches the batch against the slice ψ prescribes per
-     query (Tier-1 for eligible, Tier-2 for the rest — the same replica
-     content the host router would pick);
-  3. gather — shards own disjoint word ranges, so the OR-merge of per-shard
-     match bitsets is ONE psum: every global word has exactly one owner,
-     non-owners contribute zeros, and an integer sum of disjoint
-     contributions IS the bitwise OR.
+     words: the device holds its shard's RESIDENT postings as ONE stacked
+     tier matrix (`tiers[s, 0]` = Tier-2, `tiers[s, 1]` = Tier-1) and the
+     shared `fused_match.select_rows_match` core turns ψ's per-query tier
+     choice into gather index arithmetic — one postings row fetched per
+     (query, token), half the gather traffic of the old fetch-both-then-
+     `where` schedule;
+  3. gather — shards own disjoint word ranges, so the OR-merge is a
+     `ppermute` ring: each step every device ships only its LOCAL [S_loc, B,
+     wmax] match block to its ring neighbor and ORs the block it received
+     into the owned word range (read-modify-write, so a narrow shard's zero
+     tail never clobbers a neighbor's words). Wire bytes per device-step are
+     `B * wmax * S_loc` — the owned slice — instead of the full-width
+     `B * W_total` the old `psum` shipped, a ~`n_devices`× reduction (see
+     ROADMAP "ring-merge wire model"). OR of disjoint contributions equals
+     the integer psum it replaces, so the output is bit-identical.
 
 Bit-identity with the host path is by construction: the classify kernel, the
 AND-reduce, and the word placement are the same ops on the same bits — only
@@ -30,8 +37,10 @@ touch owned words). Tables are built once per (generation content, CORPUS
 VERSION, topology) — a corpus append invalidates by key, and the table's
 Tier-2 slices come from the buffer's pinned snapshot rather than the live
 replicas, so a mid-roll replica can never leak a mixed-version slice into
-the fused path. Batch shapes are bucketed to powers of two so recompiles
-stay rare.
+the fused path. Batches are bucketed to powers of two and, past
+`_PIPE_CHUNK` queries, split into chunks whose dispatches are all issued
+before any result is awaited — the host packs and classifies chunk i+1
+while the mesh is still AND-matching chunk i.
 """
 from __future__ import annotations
 
@@ -43,6 +52,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import distributed
+from repro.kernels import fused_match
 from repro.kernels import ops
 from repro.serve import matching
 
@@ -55,8 +65,8 @@ class MeshRouteTable:
     (ψ generation, fleet topology) pair. `S'` is the shard count padded to a
     multiple of the `"shard"` axis size; `wmax` the widest shard's words."""
     clause_bits: jnp.ndarray   # uint32 [K, Wv]  ψ clauses (replicated)
-    t1: jnp.ndarray            # uint32 [S', V, wmax]  resident Tier-1 slices
-    t2: jnp.ndarray            # uint32 [S', V, wmax]  resident Tier-2 slices
+    tiers: jnp.ndarray         # uint32 [S', 2, V, wmax]  resident slices
+    #                            (index 0: Tier-2, index 1: Tier-1)
     off: jnp.ndarray           # int32 [S'] owned word_lo (pad rows: w_total)
     wid: jnp.ndarray           # int32 [S'] owned words (pad rows: 0)
     t1w: jnp.ndarray           # int32 [S'] compacted Tier-1 words (0: no D₁)
@@ -81,21 +91,21 @@ def build_table(buf, n_devices: int, *, use_t1: bool = True) -> MeshRouteTable:
     wmax = max(s.n_words for s in shards)
     s_pad = -len(shards) % n_devices
     v = int(np.asarray(buf.t2_postings[0]).shape[0])
-    t1_l, t2_l, off, wid, t1w = [], [], [], [], []
+    tiers_l, off, wid, t1w = [], [], [], []
     for s in shards:
         pad = ((0, 0), (0, wmax - s.n_words))
-        t2_l.append(np.pad(np.asarray(buf.t2_postings[s.index]), pad))
+        t2 = np.pad(np.asarray(buf.t2_postings[s.index]), pad)
         if use_t1:
-            t1_l.append(np.pad(np.asarray(buf.shard_postings[s.index]), pad))
+            t1 = np.pad(np.asarray(buf.shard_postings[s.index]), pad)
             t1w.append(buf.shard_words[s.index])
         else:
-            t1_l.append(np.zeros((v, wmax), np.uint32))
+            t1 = np.zeros((v, wmax), np.uint32)
             t1w.append(0)
+        tiers_l.append(np.stack([t2, t1]))           # [2, V, wmax]
         off.append(s.word_lo)
         wid.append(s.n_words)
     for _ in range(s_pad):          # pad shards: zero words, scratch offset
-        t1_l.append(np.zeros((v, wmax), np.uint32))
-        t2_l.append(np.zeros((v, wmax), np.uint32))
+        tiers_l.append(np.zeros((2, v, wmax), np.uint32))
         off.append(buf.w_total)
         wid.append(0)
         t1w.append(0)
@@ -103,7 +113,7 @@ def build_table(buf, n_devices: int, *, use_t1: bool = True) -> MeshRouteTable:
         np.zeros((0, max(1, -(-vocab_size // 32))), np.uint32)
     return MeshRouteTable(
         clause_bits=jnp.asarray(cbits),
-        t1=jnp.asarray(np.stack(t1_l)), t2=jnp.asarray(np.stack(t2_l)),
+        tiers=jnp.asarray(np.stack(tiers_l)),
         off=jnp.asarray(off, jnp.int32), wid=jnp.asarray(wid, jnp.int32),
         t1w=jnp.asarray(t1w, jnp.int32),
         w_total=buf.w_total, wmax=wmax, vocab_size=vocab_size)
@@ -118,31 +128,53 @@ def _program(mesh, axis: str, w_total: int, wmax: int, n_clauses: int):
     if key in _PROGRAMS:
         return _PROGRAMS[key]
 
-    def body(qbits, cbits, toks, t1, t2, off, wid, t1w):
+    n_dev = mesh.shape[axis]
+
+    def body(qbits, cbits, toks, tiers, off, wid, t1w):
         elig = ops.clause_match(qbits, cbits)              # replicated [B]
-        valid = toks >= 0
-        safe = jnp.where(valid, toks, 0)
         cols = jnp.arange(wmax, dtype=jnp.int32)
-        out = jnp.zeros((toks.shape[0], w_total + wmax), jnp.uint32)
-        for i in range(t1.shape[0]):                       # local shards
-            # owner-local AND-match: ψ picks the resident slice per query
-            rows = jnp.where((elig & (t1w[i] > 0))[:, None, None],
-                             t1[i][safe], t2[i][safe])     # [B, L, wmax]
-            rows = jnp.where(valid[:, :, None], rows, jnp.uint32(ONES))
-            m = jax.lax.reduce(rows, jnp.uint32(ONES),
-                               jax.lax.bitwise_and, (1,))
+        b = toks.shape[0]
+        s_loc, _, v, _ = tiers.shape                       # local shards
+        blocks = []
+        for i in range(s_loc):
+            # owner-local AND-match: ψ picks the resident tier per query via
+            # the stacked-gather core (one row fetch per query token)
+            m = fused_match.select_rows_match(
+                tiers[i].reshape(2 * v, wmax), v,
+                elig & (t1w[i] > 0), toks)
             # host parity: the router never contacts a shard whose local D₁
             # is empty for an eligible query — its words stay zero
             m = jnp.where(elig[:, None] & (t1w[i] == 0), jnp.uint32(0), m)
             m = jnp.where(cols[None, :] < wid[i], m, jnp.uint32(0))
-            out = jax.lax.dynamic_update_slice(out, m, (0, off[i]))
-        # disjoint-word OR-merge: every word has one owner, so + == |
-        return jax.lax.psum(out, axis), elig
+            blocks.append(m)
+        blk = jnp.stack(blocks)                            # [S_loc, B, wmax]
+
+        out = jnp.zeros((b, w_total + wmax), jnp.uint32)
+
+        def scatter(out, blk, offs):
+            # read-OR-write: a narrow shard's zero tail (wid < wmax) lands on
+            # a neighbor's owned words and must not overwrite them
+            for i in range(s_loc):
+                cur = jax.lax.dynamic_slice(out, (0, offs[i]), (b, wmax))
+                out = jax.lax.dynamic_update_slice(out, cur | blk[i],
+                                                   (0, offs[i]))
+            return out
+
+        out = scatter(out, blk, off)
+        # ring OR-merge: circulate each device's owned match block around the
+        # ring; after n_dev-1 hops every device has OR'd every shard's
+        # contribution, replicating the full match set (disjoint OR == the
+        # integer psum this replaces) at 1/n_dev the per-step wire bytes.
+        perm = [(d, (d + 1) % n_dev) for d in range(n_dev)]
+        for _ in range(n_dev - 1):
+            blk = jax.lax.ppermute(blk, axis, perm)
+            off = jax.lax.ppermute(off, axis, perm)
+            out = scatter(out, blk, off)
+        return out, elig
 
     fused = distributed.mesh_fused(
         body,
-        in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis),
-                  P(axis)),
+        in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(), P()), axis=axis, mesh=mesh)
     prog = jax.jit(fused)
     if len(_PROGRAMS) > 32:
@@ -158,6 +190,9 @@ def _bucket(n: int) -> int:
     return b
 
 
+_PIPE_CHUNK = 512
+
+
 def serve_fused(table: MeshRouteTable, queries, plan
                 ) -> tuple[np.ndarray, np.ndarray]:
     """Serve one batch through the fused program.
@@ -166,19 +201,32 @@ def serve_fused(table: MeshRouteTable, queries, plan
     bit-identical to the host router's scatter-gather OR-merge. Batch and
     token dims are bucketed to powers of two (padded queries are empty and
     sliced off) so the program compiles once per bucket, not per batch.
+    Batches past `_PIPE_CHUNK` are split into chunks and every chunk's
+    dispatch is issued before any result is awaited: JAX's async dispatch
+    overlaps the host-side pack+classify of chunk i+1 with the device-side
+    AND-match of chunk i.
     """
     b = len(queries)
-    bb = _bucket(b)
     lb = _bucket(max((len(q) for q in queries), default=1))
-    toks = np.full((bb, lb), -1, np.int32)
-    toks[:b] = matching.pad_token_batch(queries, pad_len=lb)
-    qbits = np.zeros((bb, max(1, -(-table.vocab_size // 32))), np.uint32)
-    if table.clause_bits.shape[0]:
-        qbits[:b] = matching.pack_query_bits(queries, table.vocab_size)
+    wv = max(1, -(-table.vocab_size // 32))
     prog = _program(plan.mesh, plan.shard_axis, table.w_total, table.wmax,
                     int(table.clause_bits.shape[0]))
-    out, elig = prog(jnp.asarray(qbits), table.clause_bits,
-                     jnp.asarray(toks), table.t1, table.t2,
-                     table.off, table.wid, table.t1w)
-    return (np.asarray(out[:b, :table.w_total]),
-            np.asarray(elig[:b]).astype(bool))
+    spans = [(lo, min(lo + _PIPE_CHUNK, b))
+             for lo in range(0, max(b, 1), _PIPE_CHUNK)]
+    pending = []
+    for lo, hi in spans:
+        sub = list(queries[lo:hi])
+        bb = _bucket(hi - lo)
+        toks = np.full((bb, lb), -1, np.int32)
+        toks[:hi - lo] = matching.pad_token_batch(sub, pad_len=lb)
+        qbits = np.zeros((bb, wv), np.uint32)
+        if table.clause_bits.shape[0] and sub:
+            qbits[:hi - lo] = matching.pack_query_bits(sub, table.vocab_size)
+        pending.append(prog(jnp.asarray(qbits), table.clause_bits,
+                            jnp.asarray(toks), table.tiers,
+                            table.off, table.wid, table.t1w))
+    match = np.concatenate([np.asarray(o[:hi - lo, :table.w_total])
+                            for (lo, hi), (o, _) in zip(spans, pending)])
+    elig = np.concatenate([np.asarray(e[:hi - lo]).astype(bool)
+                           for (lo, hi), (_, e) in zip(spans, pending)])
+    return match, elig

@@ -56,7 +56,11 @@ except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _sm_old
 
     def shard_map(f, mesh, in_specs, out_specs, **kw):
-        kw.pop("check_vma", None)
+        # old API spells replication checking `check_rep`; same semantics
+        # (the ring OR-merge's replicated-by-construction outputs defeat the
+        # static inference either way, so the flag must actually map through)
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
         return _sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                        **kw)
 
@@ -160,6 +164,17 @@ class ExecutionPlan:
         if backend is not None and backend != "auto":
             return True
         return op in _env_placements()[1]
+
+    def tile_params(self, op: str, path: str, shape_bucket) -> dict:
+        """Autotuned kernel kwargs for (op, path, shape-bucket) — the tile
+        sibling of `placement`: placement picks WHICH impl runs, this picks
+        HOW it tiles/decomposes. {} (impl defaults) on cache miss, when
+        `shape_bucket` is None (untunable op), or when autotuning is disabled
+        via REPRO_KERNEL_TILES=0."""
+        if shape_bucket is None:
+            return {}
+        from repro.kernels import autotune  # leaf module; lazy to keep plan import-light
+        return autotune.tile_params(op, path, shape_bucket)
 
 
 def current_plan(backend: str | None = None) -> ExecutionPlan:

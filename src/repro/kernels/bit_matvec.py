@@ -7,12 +7,17 @@ this is a direct 32x on the dominant roofline term. Inside the kernel each
 VMEM tile is unpacked to f32 on the fly and fed to the MXU as a [BC, BW*32]
 x [BW*32, R] matmul.
 
-Tiling:
-  grid = (C/BC, W/BW); W is the minor (sequential) axis so the [BC, R] output
-  tile stays resident and accumulates across W-blocks.
-  VMEM per step: BC*BW*4 (packed A) + BW*32*R*4 (x) + BC*BW*32*4 (unpacked
-  scratch, compiler-managed) + BC*R*4 (acc). Defaults BC=128, BW=128 give a
-  working set of ~2.2 MB << 16 MB VMEM and a 4096-wide MXU contraction.
+Schedule:
+  grid = (C/BC,); the word axis is streamed INSIDE the kernel. Both operands
+  stay in HBM (`memory_space=ANY`) and each W-block — the [BC, BW] packed
+  tile plus its [BW*32, R] x slab — is double-buffered into VMEM with
+  `make_async_copy`: block j+1's DMAs are issued before block j's
+  unpack+matmul runs, overlapping the HBM streaming (the roofline term) with
+  MXU work instead of paying copy latency between grid steps. The [BC, R]
+  accumulator is loop-carried and written once.
+  VMEM per step: 2*BC*BW*4 (packed slots) + 2*BW*32*R*4 (x slots) +
+  BC*BW*32*4 (unpacked scratch, compiler-managed) + BC*R*4 (acc). Defaults
+  BC=128, BW=128 give ~2.3 MB << 16 MB VMEM and a 4096-wide MXU contraction.
 """
 from __future__ import annotations
 
@@ -21,25 +26,54 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiles import block_dim
 
 WORD = 32
 
 
-def _kernel(a_ref, x_ref, o_ref):
-    j = pl.program_id(1)
+def _kernel(a_hbm, x_hbm, o_ref, a_buf, x_buf, sem_a, sem_x, *,
+            block_c: int, block_w: int, n_w: int):
+    i = pl.program_id(0)
 
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def copy_a(j, slot):
+        return pltpu.make_async_copy(
+            a_hbm.at[pl.ds(i * block_c, block_c), pl.ds(j * block_w, block_w)],
+            a_buf.at[slot],
+            sem_a.at[slot],
+        )
 
-    a = a_ref[...]                                   # [BC, BW] uint32
-    shifts = jnp.arange(WORD, dtype=jnp.uint32)
-    bits = (a[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
-    bits = bits.reshape(a.shape[0], -1).astype(jnp.float32)   # [BC, BW*32]
-    x = x_ref[...]                                   # [BW*32, R] f32
-    o_ref[...] += jnp.dot(bits, x, preferred_element_type=jnp.float32)
+    def copy_x(j, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(j * block_w * WORD, block_w * WORD), :],
+            x_buf.at[slot],
+            sem_x.at[slot],
+        )
+
+    copy_a(0, 0).start()
+    copy_x(0, 0).start()
+
+    def step(j, acc):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_w)
+        def _prefetch():                             # next block, other slot
+            nxt = jax.lax.rem(j + 1, 2)
+            copy_a(j + 1, nxt).start()
+            copy_x(j + 1, nxt).start()
+
+        copy_a(j, slot).wait()
+        copy_x(j, slot).wait()
+        a = a_buf[slot]                              # [BC, BW] uint32
+        shifts = jnp.arange(WORD, dtype=jnp.uint32)
+        bits = (a[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+        bits = bits.reshape(a.shape[0], -1).astype(jnp.float32)   # [BC, BW*32]
+        return acc + jnp.dot(bits, x_buf[slot],
+                             preferred_element_type=jnp.float32)
+
+    init = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, n_w, step, init)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "block_w", "interpret"))
@@ -60,16 +94,21 @@ def bit_matvec(
     if cp or wp:
         a_bits = jnp.pad(a_bits, ((0, cp), (0, wp)))
         x = jnp.pad(x, ((0, wp * WORD), (0, 0)))
-    grid = (nc, nw)
     out = pl.pallas_call(
-        _kernel,
-        grid=grid,
+        functools.partial(_kernel, block_c=bc, block_w=bw, n_w=nw),
+        grid=(nc,),
         in_specs=[
-            pl.BlockSpec((bc, bw), lambda i, j: (i, j)),
-            pl.BlockSpec((bw * WORD, r), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),    # streamed by the kernel
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
-        out_specs=pl.BlockSpec((bc, r), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((bc, r), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(((c + cp), r), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, bc, bw), jnp.uint32),     # packed A slots
+            pltpu.VMEM((2, bw * WORD, r), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=interpret,
     )(a_bits, x)
     return out[:c]

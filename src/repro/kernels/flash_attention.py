@@ -90,7 +90,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     jax.jit,
     static_argnames=("causal", "window", "softcap", "q_offset",
                      "block_q", "block_k", "interpret"))
-def flash_attention(
+def _flash_attention_impl(
     q: jnp.ndarray,                 # [B, Sq, Hq, D]
     k: jnp.ndarray,                 # [B, Skv, Hkv, D]
     v: jnp.ndarray,                 # [B, Skv, Hkv, D]
@@ -145,3 +145,43 @@ def flash_attention(
     )(qh, kh, vh)
     out = out[:, :, :, :sq, :].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
     return out
+
+
+def _cost(q, k, v):
+    """Cost model in the `ops.py` convention: 32-bit-word-equivalents read
+    (operand bytes / 4, attention has no packed postings) plus modelled HBM
+    bytes for operands + result (the result has q's shape and dtype)."""
+    op_bytes = q.size * q.dtype.itemsize \
+        + (k.size + v.size) * k.dtype.itemsize
+    nbytes = op_bytes + q.size * q.dtype.itemsize
+    return op_bytes // 4, nbytes
+
+
+def flash_attention(
+    q: jnp.ndarray,                 # [B, Sq, Hq, D]
+    k: jnp.ndarray,                 # [B, Skv, Hkv, D]
+    v: jnp.ndarray,                 # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Flash attention with the same `obs.PROFILER` cost accounting every
+    `ops.py` op gets — it is the one Pallas kernel dispatched outside the
+    ops table, so without this wrapper its traffic never lands in
+    `kernel_bytes_moved_total`."""
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              q_offset=q_offset, block_q=block_q, block_k=block_k,
+              interpret=interpret)
+    from repro.obs import _state as _obs_state
+    if not _obs_state.on:
+        return _flash_attention_impl(q, k, v, **kw)
+    from repro.kernels import ops as _ops
+    path = "interpret" if interpret else "pallas"
+    return _ops._profiled("flash_attention", path,
+                          lambda q_, k_, v_: _flash_attention_impl(q_, k_, v_, **kw),
+                          _cost, q, k, v)

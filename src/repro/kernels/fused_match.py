@@ -1,0 +1,117 @@
+"""Fused ψ classify + tier-selected AND-match — one dispatch on the serve path.
+
+The pre-fusion serve path ran two dispatches per batch with the eligibility
+bitset round-tripping between them: `clause_match` produced `eligible [B]`,
+the host picked Tier-1 or Tier-2 postings per query, and a second dispatch
+AND-reduced the selected rows. This module collapses that into one op:
+
+    match, eligible = fused_match(qbits, cbits, tokens, t1, t2)
+
+with the two tiers stacked into a single [2V, W] matrix (rows [0, V) =
+Tier-2, rows [V, 2V) = Tier-1) so tier selection is index arithmetic on the
+gather — `row = tiers[sel * V + token]` — instead of a both-tier double
+gather followed by a `where`. Every path is integer-exact and bit-identical
+to `matching.match_batch` over the per-query-selected tier.
+
+The Pallas path streams postings rows straight from HBM via scalar-prefetch
+(`PrefetchScalarGridSpec`): the (eligibility, token) scalars are prefetched
+ahead of the grid so each (b, l) step's BlockSpec index_map computes the row
+address and the pipeline fetches exactly the rows the batch needs — the
+gather never materializes a [B, L, W] intermediate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import clause_match as _cm
+from repro.kernels import ref as _ref
+
+_ONES = 0xFFFFFFFF
+
+
+def select_rows_match(tiers2v: jnp.ndarray,      # uint32 [2V, W] (t2 ++ t1)
+                      n_vocab_rows: int,         # V (static)
+                      use_t1: jnp.ndarray,       # bool/int [B]
+                      tokens: jnp.ndarray,       # int32 [B, L], -1 padded
+                      ) -> jnp.ndarray:          # uint32 [B, W]
+    """Tier-selected AND-match core (shared by the XLA path and the mesh
+    serve body): one gather per (query, token) against the stacked tiers,
+    padded slots contribute all-ones."""
+    valid = tokens >= 0
+    safe = jnp.where(valid, tokens, 0)
+    idx = safe + jnp.where(use_t1, n_vocab_rows, 0).astype(safe.dtype)[:, None]
+    rows = tiers2v[idx]                                      # [B, L, W]
+    rows = jnp.where(valid[..., None], rows, jnp.uint32(_ONES))
+    return jax.lax.reduce(rows, jnp.uint32(_ONES),
+                          jax.lax.bitwise_and, (1,))
+
+
+@jax.jit
+def fused_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
+                    tokens: jnp.ndarray, t1: jnp.ndarray, t2: jnp.ndarray):
+    if clause_bits.shape[0]:
+        elig = _ref.clause_match(query_bits, clause_bits)
+    else:                       # empty clause set: everyone serves Tier-2
+        elig = jnp.zeros((query_bits.shape[0],), bool)
+    tiers = jnp.concatenate([t2, t1], axis=0)
+    return select_rows_match(tiers, t1.shape[0], elig, tokens), elig
+
+
+def _match_kernel(sel_ref, toks_ref, row_ref, o_ref):
+    del sel_ref
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, _ONES, jnp.uint32)
+
+    @pl.when(toks_ref[b, l] >= 0)
+    def _and():
+        o_ref[...] &= row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_vocab_rows", "interpret"))
+def _tier_match(tiers2v: jnp.ndarray, n_vocab_rows: int, sel: jnp.ndarray,
+                tokens: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    b, l = tokens.shape
+    w = tiers2v.shape[1]
+    v = n_vocab_rows
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, l),
+        in_specs=[
+            # row address = tier select * V + token; padded (-1) slots fetch
+            # row 0 and are dropped by the `toks >= 0` guard in the kernel.
+            pl.BlockSpec((1, w), lambda bi, li, sel_ref, toks_ref:
+                         (sel_ref[bi] * v + jnp.maximum(toks_ref[bi, li], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda bi, li, sel_ref, toks_ref: (bi, 0)),
+    )
+    return pl.pallas_call(
+        _match_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.uint32),
+        interpret=interpret,
+    )(sel, tokens, tiers2v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k", "interpret"))
+def fused_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
+                tokens: jnp.ndarray, t1: jnp.ndarray, t2: jnp.ndarray, *,
+                block_b: int = 64, block_k: int = 64,
+                interpret: bool = False):
+    if clause_bits.shape[0]:
+        elig = _cm.clause_match(query_bits, clause_bits, block_b=block_b,
+                                block_k=block_k, interpret=interpret)
+    else:
+        elig = jnp.zeros((query_bits.shape[0],), bool)
+    tiers = jnp.concatenate([t2, t1], axis=0)
+    match = _tier_match(tiers, t1.shape[0], elig.astype(jnp.int32), tokens,
+                        interpret=interpret)
+    return match, elig

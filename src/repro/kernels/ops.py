@@ -29,9 +29,11 @@ import jax.numpy as jnp
 
 from repro.distributed import plan as _plan
 from repro.obs import _state as _obs_state
+from repro.kernels import autotune as _autotune
 from repro.kernels import bit_matvec as _bm
 from repro.kernels import clause_match as _cm
 from repro.kernels import coverage_gain as _cg
+from repro.kernels import fused_match as _fm
 from repro.kernels import partition_gain as _pg
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_gain as _sg
@@ -46,8 +48,13 @@ def resolve_backend(backend: str | None = None) -> str:
     return _plan.resolve_backend(backend)
 
 
+# -- XLA host strategies -------------------------------------------------------
+# Each op's "xla" path is a small family of integer-exact decompositions; the
+# winner flips with shape (and host), so the tile autotuner picks per bucket
+# (`strategy=` kwarg) and the historical default stays the fallback.
+
 @functools.partial(jax.jit, static_argnames=("chunk_w",))
-def _bit_matvec_xla(a_bits: jnp.ndarray, x: jnp.ndarray, chunk_w: int = 256) -> jnp.ndarray:
+def _bit_matvec_xla_scan(a_bits: jnp.ndarray, x: jnp.ndarray, chunk_w: int = 256) -> jnp.ndarray:
     """Chunked unpack+matmul so the f32 unpack never exceeds ~C*chunk_w*128B."""
     c, w = a_bits.shape
     cw = min(chunk_w, w)
@@ -71,9 +78,56 @@ def _bit_matvec_xla(a_bits: jnp.ndarray, x: jnp.ndarray, chunk_w: int = 256) -> 
     return acc
 
 
+@jax.jit
+def _bit_matvec_xla_unroll(a_bits: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """32 shift-mask matvecs: never materializes an unpacked [C, W*32] plane,
+    so it wins when R is large enough that the f32 unpack dominates."""
+    c, w = a_bits.shape
+    r = x.shape[-1]
+    xr = x.reshape(w, WORD, r)
+    acc = jnp.zeros((c, r), jnp.float32)
+    for bit in range(WORD):
+        lane = ((a_bits >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+        acc = acc + lane @ xr[:, bit, :]
+    return acc
+
+
+@jax.jit
+def _bit_matvec_xla_lut(a_bits: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Byte-LUT gather: precompute each byte position's 256 partial sums
+    (one [256, 8] unpack table against x), then one gather + sum per byte.
+    Trades the per-row unpack for 4 gathers/word — the fastest host path for
+    narrow R at bench shapes. Float sums reassociate vs. the scan path
+    (allclose, not bit-equal), which matters to nobody downstream: match
+    bitsets stay integer ops."""
+    c, w = a_bits.shape
+    r = x.shape[-1]
+    byte_sh = jnp.arange(4, dtype=jnp.uint32) * 8
+    byts = ((a_bits[:, :, None] >> byte_sh) & jnp.uint32(0xFF))
+    byts = byts.astype(jnp.int32).reshape(c, w * 4)              # [C, W*4]
+    tbl = (((jnp.arange(256)[:, None] >> jnp.arange(8)) & 1)
+           ).astype(jnp.float32)                                 # [256, 8]
+    xb = x.reshape(w * 4, 8, r)
+    partial = jnp.einsum("vb,pbr->pvr", tbl, xb)                 # [W*4, 256, R]
+    picked = jnp.take_along_axis(partial, byts.T[:, :, None], axis=1)
+    return jnp.sum(picked, axis=0)                               # [C, R]
+
+
+def _bit_matvec_xla(a_bits: jnp.ndarray, x: jnp.ndarray, *,
+                    strategy: str = "scan", chunk_w: int = 256) -> jnp.ndarray:
+    if strategy == "unroll":
+        return _bit_matvec_xla_unroll(a_bits, x)
+    if strategy == "lut":
+        return _bit_matvec_xla_lut(a_bits, x)
+    return _bit_matvec_xla_scan(a_bits, x, chunk_w=chunk_w)
+
+
+_clause_match_xla_plain = jax.jit(_ref.clause_match)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk_b",))
-def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
-                      chunk_b: int = 1024) -> jnp.ndarray:
+def _clause_match_xla_scan(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
+                           chunk_b: int = 1024) -> jnp.ndarray:
     """Chunked over queries so the [b, K, Wv] subset-test intermediate stays
     bounded regardless of batch size."""
     b = query_bits.shape[0]
@@ -88,6 +142,27 @@ def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
 
     _, out = jax.lax.scan(body, None, chunks)
     return out.reshape(-1)[:b]
+
+
+@jax.jit
+def _clause_match_xla_gemm(query_bits: jnp.ndarray, clause_bits: jnp.ndarray) -> jnp.ndarray:
+    """Subset test as one GEMM: clause k ⊆ query b iff the intersection
+    popcount equals the clause popcount. Exact in f32 up to 2^24 set bits per
+    row — vocab words * 32 is far below that everywhere in this repo."""
+    qf = _ref.unpack_bits_f32(query_bits)                        # [B, Wv*32]
+    cf = _ref.unpack_bits_f32(clause_bits)                       # [K, Wv*32]
+    inter = qf @ cf.T                                            # [B, K]
+    need = jnp.sum(cf, axis=-1)
+    return jnp.any(inter == need[None, :], axis=-1)
+
+
+def _clause_match_xla(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
+                      strategy: str = "scan", chunk_b: int = 1024) -> jnp.ndarray:
+    if strategy == "plain":
+        return _clause_match_xla_plain(query_bits, clause_bits)
+    if strategy == "gemm":
+        return _clause_match_xla_gemm(query_bits, clause_bits)
+    return _clause_match_xla_scan(query_bits, clause_bits, chunk_b=chunk_b)
 
 
 @functools.partial(jax.jit, static_argnames=("bounds",))
@@ -132,6 +207,11 @@ _IMPLS = {
         "interpret": functools.partial(_sg.sparse_gain, interpret=True),
         "xla": _ref.sparse_gain,
     },
+    "fused_match": {
+        "pallas": _fm.fused_match,
+        "interpret": functools.partial(_fm.fused_match, interpret=True),
+        "xla": _fm.fused_match_xla,
+    },
 }
 
 
@@ -173,6 +253,15 @@ def _cost_sparse_gain(doc_ids, mask):
     return c * m, 4 * (2 * c * m + c)
 
 
+def _cost_fused_match(query_bits, clause_bits, tokens, t1, t2):
+    b, wv = query_bits.shape
+    k = clause_bits.shape[0]
+    ell = tokens.shape[1]
+    w = t1.shape[-1]
+    words = (b + k) * wv + b * ell * w          # classify reads + row gathers
+    return words, 4 * words + 4 * b * w + b
+
+
 _PROF = None
 
 
@@ -196,8 +285,14 @@ def _profiled(op: str, path: str, fn, cost, *args):
 
 
 def _run(op: str, backend: str | None, cost, *args):
-    path = _plan.current_plan().placement(op, backend)
+    plan = _plan.current_plan()
+    path = plan.placement(op, backend)
     fn = _IMPLS[op][path]
+    # Measured-best tiles/strategy for this (op, path, shape-bucket), if the
+    # autotune cache has an entry; {} keeps the impl's hardcoded defaults.
+    tiles = plan.tile_params(op, path, _autotune.bucket_from_args(op, args))
+    if tiles:
+        fn = functools.partial(fn, **tiles)
     if not _obs_state.on:
         return fn(*args)
     return _profiled(op, path, fn, cost, *args)
@@ -226,6 +321,22 @@ def clause_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray, *,
         return jnp.zeros((query_bits.shape[0],), bool)
     return _run("clause_match", backend, _cost_clause_match,
                 query_bits, clause_bits)
+
+
+def fused_match(query_bits: jnp.ndarray, clause_bits: jnp.ndarray,
+                tokens: jnp.ndarray, t1: jnp.ndarray, t2: jnp.ndarray, *,
+                backend: str | None = None):
+    """One-dispatch ψ classify + tier-selected AND-match.
+
+    Returns ``(match [B, W] uint32, eligible [B] bool)``: each query's token
+    posting rows are gathered from `t1` when the query is clause-eligible and
+    from `t2` otherwise, then AND-reduced over valid (>= 0) tokens. The old
+    serve path round-tripped `eligible` between two dispatches; this is the
+    fusion that removes that host sync. An empty `clause_bits` ([0, Wv])
+    statically routes everyone to Tier-2.
+    """
+    return _run("fused_match", backend, _cost_fused_match,
+                query_bits, clause_bits, tokens, t1, t2)
 
 
 def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
@@ -257,14 +368,18 @@ def partition_gain(a_bits: jnp.ndarray, mask: jnp.ndarray,
             return fused(a_bits, mask)
         return _profiled("partition_gain", "mesh", fused, cost, a_bits, mask)
 
-    impl = _impl("partition_gain", backend)
+    path = plan.placement("partition_gain", backend)
+    impl = _IMPLS["partition_gain"][path]
+    tiles = plan.tile_params(
+        "partition_gain", path,
+        _autotune.bucket("partition_gain", a_bits.shape[0], a_bits.shape[1],
+                         len(bounds) - 1))
 
     def host(a, m):
-        return impl(a, m, bounds)
+        return impl(a, m, bounds, **tiles)
 
     if not _obs_state.on:
         return host(a_bits, mask)
-    path = plan.placement("partition_gain", backend)
     return _profiled("partition_gain", path, host, cost, a_bits, mask)
 
 

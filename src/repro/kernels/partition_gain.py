@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.tiles import block_dim
@@ -70,7 +71,9 @@ def partition_gain(
     if cp or wp:
         # padded words carry zero incidence bits -> contribute 0 to any column
         a_bits = jnp.pad(a_bits, ((0, cp), (0, wp)))
-        mask = jnp.pad(mask, (0, wp), constant_values=0xFFFFFFFF)
+        # np scalar, not a python int: 0xFFFFFFFF would be weak-typed int32
+        # and overflow abstractification the first time a pad is non-empty
+        mask = jnp.pad(mask, (0, wp), constant_values=np.uint32(0xFFFFFFFF))
     sel = segment_selector(w + wp, bounds, p + pp)
     grid = (nc, nw)
     out = pl.pallas_call(

@@ -19,3 +19,13 @@ def block_dim(n: int, block: int) -> tuple[int, int, int]:
     b = max(1, min(block, n))
     pad = -n % b
     return b, pad, (n + pad) // b
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (>= 1) — the shape-bucketing the tile
+    autotuner keys its cache on, so one tuned entry covers every call shape
+    that rounds to the same bucket."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b

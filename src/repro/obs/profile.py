@@ -78,6 +78,19 @@ class KernelProfiler:
         finally:
             self.active = prev
 
+    @contextlib.contextmanager
+    def scoped(self):
+        """Isolated measured-aggregation scope: enters empty, and whatever
+        was accrued before the scope is restored on exit. Benchmark
+        subsections wrap themselves in this so `profile` / `profile_mesh`
+        rows can never mix counters accumulated by an earlier subsection
+        (or by warmup dispatches) in the same process."""
+        saved, self._agg = self._agg, {}
+        try:
+            yield self
+        finally:
+            self._agg = saved
+
     def summary(self) -> list[dict]:
         """Measured aggregation as JSON-ready rows, one per (op, path):
         totals plus achieved GB/s and the fraction of the HBM roofline."""

@@ -8,10 +8,12 @@ import numpy as np
 import pytest
 
 from repro.core import bitset
+from repro.kernels import fused_match as fm
 from repro.kernels import ops, ref
 from repro.kernels.bit_matvec import bit_matvec
 from repro.kernels.clause_match import clause_match
 from repro.kernels.coverage_gain import coverage_gain
+from repro.kernels.partition_gain import partition_gain
 from repro.kernels.sparse_gain import sparse_gain
 
 SHAPES_CW = [(1, 1), (3, 2), (8, 4), (130, 5), (64, 33), (300, 17)]
@@ -132,6 +134,103 @@ def test_ops_dispatch_consistency():
     np.testing.assert_array_equal(
         ops.clause_match(q, c, backend="xla"),
         ops.clause_match(q, c, backend="interpret"))
+
+
+# -- odd-shape parity sweep ----------------------------------------------------
+# every packed-bit kernel at shapes that are NOT multiples of the block
+# sizes, with deliberately awkward (non-pow2) blocks — the pad/mask logic of
+# the double-buffered streaming kernels is what this pins vs kernels/ref.py
+
+ODD_SHAPES = [(13, 3), (97, 7), (201, 11)]            # (C or B/K axis, words)
+ODD_BLOCKS = [(8, 3), (24, 5), (56, 17)]
+
+
+@pytest.mark.parametrize("c,w", ODD_SHAPES)
+@pytest.mark.parametrize("bc,bw", ODD_BLOCKS)
+def test_odd_shape_parity_sweep(c, w, bc, bw):
+    rng = np.random.default_rng(c * 1000 + w * 10 + bc + bw)
+    a = jnp.asarray(_rand_bits(rng, c, w))
+    x = jnp.asarray(rng.standard_normal((w * 32, 2)), jnp.float32)
+    mask = jnp.asarray(_rand_bits(rng, 1, w)[0])
+    q = jnp.asarray(_rand_bits(rng, c, w))
+    cl = jnp.asarray(bitset.np_pack(rng.random((max(1, c // 3), w * 32)) < 0.04))
+    bounds = tuple(int(v) for v in np.linspace(0, w, min(w, 3) + 1).astype(int))
+
+    np.testing.assert_allclose(
+        bit_matvec(a, x, block_c=bc, block_w=bw, interpret=True),
+        ref.bit_matvec(a, x), rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(
+        coverage_gain(a, mask, block_c=bc, block_w=bw, interpret=True),
+        ref.coverage_gain(a, mask))
+    np.testing.assert_array_equal(
+        clause_match(q, cl, block_b=bc, block_k=bw, interpret=True),
+        ref.clause_match(q, cl))
+    np.testing.assert_array_equal(
+        partition_gain(a, mask, bounds, block_c=bc, block_w=bw,
+                       interpret=True),
+        ops._partition_gain_xla(a, mask, bounds))
+
+
+@pytest.mark.parametrize("strategy", ["plain", "scan", "gemm"])
+@pytest.mark.parametrize("b,k,wv", [(7, 3, 2), (65, 17, 3), (130, 70, 5)])
+def test_clause_match_xla_strategies_exact(strategy, b, k, wv):
+    """Every autotunable host decomposition is integer-exact vs the ref."""
+    rng = np.random.default_rng(b * 31 + k * 7 + wv)
+    q = jnp.asarray(_rand_bits(rng, b, wv))
+    c = jnp.asarray(bitset.np_pack(rng.random((k, wv * 32)) < 0.05))
+    got = ops._clause_match_xla(q, c, strategy=strategy, chunk_b=16)
+    np.testing.assert_array_equal(got, ref.clause_match(q, c))
+
+
+@pytest.mark.parametrize("strategy", ["scan", "unroll", "lut"])
+@pytest.mark.parametrize("c,w,r", [(13, 3, 1), (64, 33, 2), (300, 17, 4)])
+def test_bit_matvec_xla_strategies_allclose(strategy, c, w, r):
+    rng = np.random.default_rng(c + w + r)
+    a = jnp.asarray(_rand_bits(rng, c, w))
+    x = jnp.asarray(rng.standard_normal((w * 32, r)), jnp.float32)
+    got = ops._bit_matvec_xla(a, x, strategy=strategy, chunk_w=5)
+    np.testing.assert_allclose(got, ref.bit_matvec(a, x),
+                               rtol=1e-5, atol=1e-4)
+
+
+# -- fused classify + tier-selected AND-match ----------------------------------
+
+def _fused_case(seed, b=19, l=4, v=37, w=5, wv=3, k=6):
+    rng = np.random.default_rng(seed)
+    t1 = rng.integers(0, 2**32, size=(v, w), dtype=np.uint32)
+    t2 = t1 | rng.integers(0, 2**32, size=(v, w), dtype=np.uint32)
+    toks = rng.integers(-1, v, size=(b, l)).astype(np.int32)
+    q = _rand_bits(rng, b, wv)
+    cl = bitset.np_pack(rng.random((k, wv * 32)) < 0.1)
+    cl[: k // 2] &= q[: k // 2]           # force some eligible queries
+    return tuple(jnp.asarray(z) for z in (q, cl, toks, t1, t2))
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_fused_match_equals_two_step(backend):
+    """fused_match == clause_match + per-query tier pick + match_batch."""
+    from repro.serve import matching
+    q, cl, toks, t1, t2 = _fused_case(0)
+    match, elig = ops.fused_match(q, cl, toks, t1, t2, backend=backend)
+    want_elig = np.asarray(ref.clause_match(q, cl))
+    assert want_elig.any() and not want_elig.all()    # both tiers exercised
+    m1 = np.asarray(matching.match_batch(t1, toks))
+    m2 = np.asarray(matching.match_batch(t2, toks))
+    np.testing.assert_array_equal(np.asarray(elig), want_elig)
+    np.testing.assert_array_equal(
+        np.asarray(match), np.where(want_elig[:, None], m1, m2))
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_fused_match_empty_clause_set_routes_tier2(backend):
+    q, _, toks, t1, t2 = _fused_case(1)
+    from repro.serve import matching
+    match, elig = ops.fused_match(
+        q, jnp.zeros((0, q.shape[1]), jnp.uint32), toks, t1, t2,
+        backend=backend)
+    assert not np.asarray(elig).any()
+    np.testing.assert_array_equal(
+        np.asarray(match), np.asarray(matching.match_batch(t2, toks)))
 
 
 def test_bit_matvec_weighted_gain_semantics():
