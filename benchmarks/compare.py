@@ -23,9 +23,13 @@ past `base ± (rel * |base| + abs)` in a bad direction. Wall-clock numbers
 must be skipped by rule — only the seeded, simulated metrics are stable
 across machines, which is what makes a checked-in baseline meaningful.
 
-Only sections present in BOTH trees are compared (the baseline may cover a
-subset of what a full bench run emits); within a common section, a metric
+Metrics are compared within sections present in BOTH trees; a metric
 present in the baseline but gone from the candidate is itself a failure.
+Whole-section asymmetries are never silent: a section only the candidate
+has (a NEW bench the baseline predates) is reported as
+`skipped-new-section` — a visible notice to regenerate the baseline — and
+a section only the baseline has means the candidate DROPPED it, which
+fails the gate (`SECTION-MISSING`) exactly like a disappeared metric.
 Exit status: 0 clean, 1 on any regression or disappearance — CI gates on
 it, and `launch.obs --diff` reuses `run_gate` for telemetry trees.
 """
@@ -197,10 +201,21 @@ def diff_trees(base_tree: dict, new_tree: dict, default: dict,
     findings = []
     common = sorted(set(base_tree) & set(new_tree))
     for section in sorted(set(base_tree) | set(new_tree)):
-        if section not in common:
-            where = "baseline" if section in base_tree else "candidate"
-            findings.append({"key": section, "status": "section-only-in-"
-                             + where, "base": None, "new": None, "note": ""})
+        if section in common:
+            continue
+        if section in base_tree:
+            # the candidate run dropped a whole section the baseline gates
+            # — exactly the failure a freshly added section must not mask
+            findings.append({
+                "key": section, "status": "SECTION-MISSING",
+                "base": float(len(base_tree[section])), "new": None,
+                "note": "candidate dropped this whole section"})
+        else:
+            findings.append({
+                "key": section, "status": "skipped-new-section",
+                "base": None, "new": float(len(new_tree[section])),
+                "note": "baseline predates this section — regenerate the "
+                        "checked-in baseline to gate it"})
     for section in common:
         b, n = base_tree[section], new_tree[section]
         for key in sorted(set(b) | set(n)):
@@ -255,8 +270,10 @@ def print_table(findings: list[dict], *, verbose: bool = False) -> None:
 
 
 def gate(findings: list[dict]) -> int:
-    """Exit status for a findings list: 1 on regression/disappearance."""
-    return int(any(f["status"] in ("REGRESSED", "MISSING")
+    """Exit status for a findings list: 1 on regression/disappearance —
+    of a metric (MISSING) or of an entire section (SECTION-MISSING)."""
+    return int(any(f["status"] in ("REGRESSED", "MISSING",
+                                   "SECTION-MISSING")
                    for f in findings))
 
 

@@ -1,0 +1,233 @@
+"""Serving front-end section: the classify-keyed result cache, hedged
+dispatch, and overload admission, measured end to end.
+
+Question families (seeded, tiny scale by default so the section stays
+CI-sized; REPRO_BENCH_FRONTEND_SCALE overrides):
+
+  * zipf replay: the SAME Zipf-resampled query stream served through a
+    cache-on and a cache-off fleet — hit rate and fleet postings words per
+    skew. The paper prices every query by words scanned (§2.2), so at
+    web-like repeat traffic (skew ~1.1) the cache must cut fleet words by
+    >= 2x; a spot batch is pinned against `serve_reference` so the saving
+    never comes at the cost of exactness.
+  * loadgen arms: modelled p99 for baseline vs hedged dispatch vs result
+    cache at moderate offered load, on one plan with >= 2 replicas per
+    group, plus an overload PAIR (10x the rate) with and without admission.
+    Hedging must CUT p99 (p99_over_base < 1) and the cache arm must not be
+    slower than baseline; under overload, admission must keep the admitted
+    tail flat while the unprotected arm's queues collapse. Moderate load is
+    the honest operating point for hedging — at saturation backups double
+    load and queueing collapse dominates (measured, not assumed).
+  * parity digest: a cache-on fleet served THROUGH a rolling tiering swap
+    and THROUGH a rolling corpus swap, every batch compared bit-for-bit to
+    the single-tier oracle at the corpus version it was served at, with
+    repeat traffic so hits actually occur mid-roll. `parity` is the gated
+    metric: 1.0 or the section regressed.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+FRONTEND_SCALE = os.environ.get("REPRO_BENCH_FRONTEND_SCALE", "tiny")
+ZIPF_SKEWS = (0.0, 1.1)
+N_REPLAY = int(os.environ.get("REPRO_BENCH_FRONTEND_REPLAY", "2048"))
+N_KEYS = int(os.environ.get("REPRO_BENCH_FRONTEND_KEYS", "256"))
+BATCH = 256
+
+
+def _pipe(data):
+    from repro import api
+    return api.TieringPipeline.from_data(data).solve("greedy",
+                                                     budget_frac=0.5)
+
+
+def _distinct_pool(queries, cap: int) -> list:
+    """First `cap` queries distinct by token SET — the cache-key identity."""
+    seen, pool = set(), []
+    for q in queries:
+        k = frozenset(q)
+        if k not in seen:
+            seen.add(k)
+            pool.append(q)
+            if len(pool) >= cap:
+                break
+    return pool
+
+
+def run() -> dict:
+    from repro import cluster
+    from repro.cluster import frontend
+    from repro.data import incidence, synthetic
+
+    corpus, log = synthetic.make_tiering_dataset(0, FRONTEND_SCALE)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+    pipe = _pipe(data)
+    results: dict[str, dict] = {}
+
+    # -- zipf replay: cache-on vs cache-off fleet words per skew --------------
+    pool = _distinct_pool(log.queries, N_KEYS)
+    replay = {}
+    for skew in ZIPF_SKEWS:
+        idx = frontend.zipf_keys(N_REPLAY, len(pool), skew, seed=0)
+        stream = [pool[i] for i in idx]
+        arms = {}
+        for arm in ("off", "on"):
+            fleet = pipe.deploy_cluster(
+                n_shards=2, t1_replicas=2,
+                cache=frontend.ResultCache(capacity=4096) if arm == "on"
+                else None)
+            t0 = time.perf_counter()
+            got = None
+            for lo in range(0, len(stream), BATCH):
+                got = fleet.serve(stream[lo:lo + BATCH])
+            dt = time.perf_counter() - t0
+            # exactness spot-check on the final (hit-heavy) batch
+            ref = fleet.serve_reference(stream[-len(got):])
+            exact = all(np.array_equal(a, b) for a, b in zip(got, ref))
+            s = fleet.stats
+            arms[arm] = {
+                "fleet_words": s.tier1_words + s.tier2_words,
+                "tier1_fraction": s.tier1_fraction,
+                "hit_rate": fleet.cache.stats.hit_rate if fleet.cache
+                else 0.0,
+                "exact": exact,
+                "us_per_query": 1e6 * dt / len(stream),
+            }
+        ratio = arms["off"]["fleet_words"] / max(1, arms["on"]["fleet_words"])
+        replay[skew] = {**arms, "words_ratio": ratio}
+        emit(f"frontend_zipf{int(10 * skew)}", arms["on"]["us_per_query"],
+             f"hit_rate={arms['on']['hit_rate']:.4f};"
+             f"words_off={arms['off']['fleet_words']};"
+             f"words_on={arms['on']['fleet_words']};"
+             f"words_ratio={ratio:.3f};"
+             f"t1_frac={arms['on']['tier1_fraction']:.4f};"
+             f"exact={arms['on']['exact'] and arms['off']['exact']}")
+    results["zipf_replay"] = replay
+
+    # -- loadgen arms: p99 with and without each front-end layer --------------
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, t2_replicas=2)
+    plan = cluster.ClusterPlan.of_cluster(fleet)
+    sample = log.queries[:min(2048, log.n_queries)]
+    elig = fleet.classify(sample)
+    lg = dict(n_queries=4000, seed=0)
+    base = cluster.run_loadgen(plan, elig, **lg)
+    hedge = cluster.run_loadgen(plan, elig, hedge_ms=0.1, **lg)
+    ck = frontend.zipf_keys(lg["n_queries"], N_KEYS, 1.1, seed=0)
+    cached = cluster.run_loadgen(plan, elig, cache_keys=ck, **lg)
+    # admission only matters under OVERLOAD: 10x the moderate rate, where
+    # the unprotected fleet's queues collapse and shedding keeps the
+    # admitted tail flat
+    ov = dict(lg, rate_qps=200000.0)
+    ov_base = cluster.run_loadgen(plan, elig, **ov)
+    ov_adm = cluster.run_loadgen(
+        plan, elig, admission=frontend.AdmissionPolicy(
+            queue_bound_ms=0.3, deadline_ms=1.0), **ov)
+    arms = {"base": base, "hedge": hedge, "cache": cached,
+            "overload_base": ov_base, "overload_admission": ov_adm}
+    results["loadgen"] = {}
+    for name, rep in arms.items():
+        ref = ov_base if name.startswith("overload") else base
+        over = rep.p99_ms / ref.p99_ms if ref.p99_ms else 1.0
+        results["loadgen"][name] = {**rep.to_dict(),
+                                    "p99_over_base": over}
+        extra = ""
+        if name == "hedge":
+            extra = (f";hedges={rep.n_hedges};hedge_wins={rep.n_hedge_wins}"
+                     f";p99_over_base={over:.4f}")
+        elif name == "overload_admission":
+            extra = (f";shed={rep.n_shed};shed_t2={rep.n_shed_to_t2}"
+                     f";p99_over_base={over:.4f}")
+        elif name == "cache":
+            wr = base.fleet_words / max(1, rep.fleet_words)
+            extra = (f";hit_rate={rep.cache_hit_rate:.4f}"
+                     f";words_ratio={wr:.3f};p99_over_base={over:.4f}")
+        emit(f"frontend_loadgen_{name}", 0.0,
+             f"p50={rep.p50_ms:.4f};p95={rep.p95_ms:.4f};"
+             f"p99={rep.p99_ms:.4f};fleet_words={rep.fleet_words}" + extra,
+             data={"latency_hist": rep.latency_hist})
+    results["hedge_p99_cut_ms"] = base.p99_ms - hedge.p99_ms
+
+    # -- parity digest: cache-on serving through BOTH rolling swap kinds ------
+    results["parity"] = parity_digest(FRONTEND_SCALE)
+    return results
+
+
+def parity_digest(scale: str) -> dict:
+    """Cache-on fleet vs the single-tier oracle, batch by batch, while a
+    rolling tiering swap and then a rolling corpus swap are in flight.
+    Repeat traffic (the same pool served every batch) keeps the cache hot,
+    so mid-roll batches mix cached and fresh answers — the hard case."""
+    from repro import ingest
+    from repro.cluster import frontend
+    from repro.data import incidence, synthetic
+
+    corpus, log = synthetic.make_tiering_dataset(0, scale)
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+    pipe = _pipe(data)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2,
+                                cache=frontend.ResultCache(capacity=4096))
+    queries = _distinct_pool(log.queries, 96)
+    parity = True
+    fleet.serve(queries)                            # warm the cache
+
+    # leg 1: rolling tiering swap (corpus fixed, generation rolls)
+    fleet.swap_tiering(_pipe(data).solve(
+        "greedy", budget_frac=0.25).tiering())
+    tiering_batches = 0
+    while True:
+        got = fleet.serve(queries)
+        ref = fleet.serve_reference(queries)
+        parity &= all(np.array_equal(a, b) for a, b in zip(got, ref))
+        tiering_batches += 1
+        if fleet.router.rollout is None or tiering_batches >= 64:
+            break
+    tiering_ok = parity and fleet.router.rollout is None
+
+    # leg 2: rolling corpus swap (append-only growth, version rolls)
+    feed = ingest.DocumentFeed(log=data.log, vocab_size=data.corpus.vocab_size,
+                               rate=48.0, seed=7)
+    delta = incidence.append_docs(data, list(feed.window(0)))
+    pipe.problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                               delta.n_docs)
+    pipe.adopt_selection(pipe.problem.state_for(
+        np.nonzero(np.asarray(pipe.result.selected))[0]))
+    fleet.swap_corpus(data.postings, delta.n_docs, pipe.tiering())
+    corpus_batches = 0
+    while True:
+        got = fleet.serve(queries)
+        v = fleet.trace[-1].corpus_version
+        ref = fleet.serve_reference(queries, corpus_version=v)
+        parity &= all(np.array_equal(a, b) for a, b in zip(got, ref))
+        corpus_batches += 1
+        if fleet.router.rollout is None or corpus_batches >= 64:
+            break
+    corpus_ok = parity and fleet.router.rollout is None
+
+    snap = fleet.cache.snapshot()
+    out = {"parity": 1.0 if parity else 0.0,
+           "tiering_swap_ok": tiering_ok, "corpus_swap_ok": corpus_ok,
+           "consistent": fleet.consistency_ok(),
+           "tiering_batches": tiering_batches,
+           "corpus_batches": corpus_batches,
+           "cache_hits": snap["hits"],
+           "invalidations": snap["invalidations"]}
+    emit("frontend_parity", 0.0,
+         f"parity={out['parity']:.1f};tiering_swap={tiering_ok};"
+         f"corpus_swap={corpus_ok};consistent={out['consistent']};"
+         f"hits={snap['hits']};invalidations={snap['invalidations']}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    from benchmarks import common
+    common.begin_section("frontend", scale=FRONTEND_SCALE)
+    run()
+    for path in common.write_json():
+        print(f"# wrote {path}", file=sys.stderr)

@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 SECTIONS = ("kernels", "solvers", "parallel", "generalization", "stream",
-            "cluster", "ingest", "roofline")
+            "cluster", "ingest", "frontend", "roofline")
 
 
 def main() -> None:
@@ -37,6 +37,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_STREAM_SCALE"] = args.scale
         os.environ["REPRO_BENCH_CLUSTER_SCALE"] = args.scale
         os.environ["REPRO_BENCH_INGEST_SCALE"] = args.scale
+        os.environ["REPRO_BENCH_FRONTEND_SCALE"] = args.scale
     selected = [s for s in args.sections.split(",") if s] or list(SECTIONS)
     unknown = set(selected) - set(SECTIONS)
     if unknown:
@@ -46,8 +47,8 @@ def main() -> None:
     from benchmarks import common
 
     print("name,us_per_call,derived")
-    from benchmarks import cluster, generalization, ingest, kernels_micro, \
-        parallel_scaling, roofline, solvers, streaming
+    from benchmarks import cluster, frontend, generalization, ingest, \
+        kernels_micro, parallel_scaling, roofline, solvers, streaming
 
     def run_roofline() -> None:
         # roofline summary (only if dry-run artifacts exist)
@@ -66,6 +67,7 @@ def main() -> None:
         "stream": (streaming.run, {"scale": streaming.STREAM_SCALE}),
         "cluster": (cluster.run, {"scale": cluster.CLUSTER_SCALE}),
         "ingest": (ingest.run, {"scale": ingest.INGEST_SCALE}),
+        "frontend": (frontend.run, {"scale": frontend.FRONTEND_SCALE}),
         "roofline": (run_roofline, {}),
     }
     try:

@@ -363,7 +363,8 @@ class TieringPipeline:
 
     def deploy_cluster(self, *, n_shards: int | None = None,
                        t1_replicas: int = 2, t2_replicas: int = 1,
-                       trace_capacity: int | None | str = "default"):
+                       trace_capacity: int | None | str = "default",
+                       cache=None):
         """-> cluster.TieredCluster: the same tiering served by a sharded,
         replicated fleet (scatter-gather + rolling swaps), still exact.
 
@@ -371,7 +372,10 @@ class TieringPipeline:
         used a shard-aware `budget_split` (the fleet's shards then coincide
         with the budget partitions, so each B_k bounds exactly one shard's
         local Tier-1 sub-index), else 2. `trace_capacity` bounds the
-        retained `BatchTrace` history (None = keep every batch)."""
+        retained `BatchTrace` history (None = keep every batch). `cache`
+        attaches a classify-keyed front-end result cache (True = defaults,
+        an int = capacity, or a configured `cluster.ResultCache`) — hits
+        stay bit-identical to fresh matches across rolling swaps."""
         from repro.cluster import TieredCluster
         from repro.cluster.router import DEFAULT_TRACE_CAPACITY
         if n_shards is None:
@@ -382,7 +386,8 @@ class TieringPipeline:
                              self.data.n_docs, n_shards=n_shards,
                              t1_replicas=t1_replicas,
                              t2_replicas=t2_replicas,
-                             trace_capacity=trace_capacity)
+                             trace_capacity=trace_capacity,
+                             cache=cache)
 
     def summary(self) -> str:
         parts = [f"{self.corpus.n_docs} docs", f"{self.log.n_queries} queries"]

@@ -42,6 +42,8 @@ Quickstart:
 
 CLI: `python -m repro.launch.cluster --shards 2 --replicas 2 --windows 2`
 """
+from repro.cluster.frontend import (                   # noqa: F401
+    AdmissionPolicy, CacheStats, ResultCache, keys_of, zipf_keys)
 from repro.cluster.loadgen import (                    # noqa: F401
     ClusterPlan, LoadgenReport, ReplicaSuggestion, fit_service_model,
     run_loadgen, suggest_replicas)
@@ -56,10 +58,11 @@ from repro.cluster.shard import (                      # noqa: F401
     shard_tier_postings)
 
 __all__ = [
-    "BatchTrace", "ClusterPlan", "ClusterRouter", "ClusterTieringBuffer",
-    "DocShard", "LoadgenReport", "MeshRouteTable", "ReplicaSuggestion",
-    "RollingSwap", "ShardReplica", "StaleCorpusError", "TieredCluster",
-    "fit_service_model", "grow_shards", "plan_shards", "run_loadgen",
-    "serve_fused", "shard_postings", "shard_tier_postings",
-    "suggest_replicas",
+    "AdmissionPolicy", "BatchTrace", "CacheStats", "ClusterPlan",
+    "ClusterRouter", "ClusterTieringBuffer", "DocShard", "LoadgenReport",
+    "MeshRouteTable", "ReplicaSuggestion", "ResultCache", "RollingSwap",
+    "ShardReplica", "StaleCorpusError", "TieredCluster",
+    "fit_service_model", "grow_shards", "keys_of", "plan_shards",
+    "run_loadgen", "serve_fused", "shard_postings", "shard_tier_postings",
+    "suggest_replicas", "zipf_keys",
 ]

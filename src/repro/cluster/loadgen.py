@@ -30,14 +30,42 @@ every Tier-2 replica of that shard — writes queue in the same FIFO as reads
 and show up as read-latency pressure, which is exactly the interference the
 ingest benchmarks measure. `ingest_qps=0` draws nothing extra from the rng,
 so query-only runs stay bit-identical to the pre-ingest generator.
+
+Front-end layers (repro.cluster.frontend), each default-off and each drawing
+from a SEPARATE seeded generator so defaults-off runs stay bit-identical to
+the pre-frontend generator:
+
+  * `hedge_ms` — hedged dispatch: when a subquery's predicted completion
+    (queue wait + service) exceeds the hedge delay, a backup fires on the
+    second-least-loaded replica of the same group after the delay;
+    first-response-wins, the loser is CANCELLED (its queue slot rolls back
+    to the work actually done, the extra words it scanned are reported as
+    `hedge_extra_words`) — the classic p99-straggler amputation;
+  * `admission` (an `AdmissionPolicy`) — bounded per-shard queues +
+    deadline-aware shedding: over-bound eligible queries demote to the
+    Tier-2 scatter (`n_shed_to_t2`), and a query the Tier-2 queue can't
+    serve in time gets a DEGRADED immediate answer priced at `t_fixed` only
+    (`n_shed`) — no postings scanned, the load-shed counters tell on it;
+  * `cache_keys` — the front-end result cache in sim form: per-arrival key
+    ids (e.g. `frontend.zipf_keys`), an LRU of `cache_capacity` keys with
+    optional `cache_ttl_s`; a hit costs `t_fixed` and zero words, which is
+    exactly how `ResultCache` prices a hit on the real router.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
 from repro import obs
+from repro.cluster.frontend import AdmissionPolicy
+
+_HEDGES = obs.counter("loadgen_hedges_total",
+                      "backup subqueries fired by hedged dispatch")
+_SHEDS = obs.counter("loadgen_sheds_total",
+                     "queries shed by overload admission",
+                     labels=("kind",))     # degraded | to_t2
 
 # fixed bucket upper bounds (ms) for every loadgen latency histogram — pinned
 # so any two runs' histograms merge bucket-by-bucket in BENCH_cluster.json
@@ -111,17 +139,35 @@ class LoadgenReport:
     n_ingest_events: int = 0
     ingest_words_total: int = 0          # words written fleet-wide
     stw_delayed_queries: int = 0         # arrivals inside the stw outage
+    # front-end layers (repro.cluster.frontend) — all zero when disabled
+    n_hedges: int = 0                    # backup subqueries fired
+    n_hedge_wins: int = 0                # hedges where the backup won
+    n_hedge_cancels: int = 0             # losing legs cancelled mid-flight
+    hedge_extra_words: int = 0           # words the cancelled legs scanned
+    n_shed_to_t2: int = 0                # eligible queries demoted to Tier 2
+    n_shed: int = 0                      # degraded immediate answers
+    shed_frac: float = 0.0               # (n_shed + n_shed_to_t2) / queries
+    n_cache_hits: int = 0                # result-cache hits (zero words)
+    cache_hit_rate: float = 0.0
     # full latency distribution over LATENCY_BUCKETS_MS (an obs.Histogram
     # snapshot dict) — computed UNCONDITIONALLY, so the report is identical
     # whether or not the telemetry plane is on
     latency_hist: dict | None = None
 
     def line(self) -> str:
+        extra = ""
+        if self.n_hedges:
+            extra += f"  hedges={self.n_hedges} ({self.n_hedge_wins} won)"
+        if self.n_shed or self.n_shed_to_t2:
+            extra += f"  shed={self.n_shed}+{self.n_shed_to_t2}->t2"
+        if self.n_cache_hits:
+            extra += f"  cache_hit={self.cache_hit_rate:.3f}"
         return (f"qps={self.throughput_qps:,.0f} (offered {self.offered_qps:,.0f})"
                 f"  p50={self.p50_ms:.3f}ms p95={self.p95_ms:.3f}ms "
                 f"p99={self.p99_ms:.3f}ms  t1={self.tier1_fraction:.3f}  "
                 f"fleet_words={self.fleet_words:,}  "
-                f"util={max(self.max_t1_util, self.max_t2_util):.2f}")
+                f"util={max(self.max_t1_util, self.max_t2_util):.2f}"
+                f"{extra}")
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -144,7 +190,12 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 straggler_x: float = 8.0, rollout_at_s: float | None = None,
                 swap_ms: float = 5.0, rollout_mode: str = "rolling",
                 ingest_qps: float = 0.0,
-                ingest_words: int = 64) -> LoadgenReport:
+                ingest_words: int = 64,
+                hedge_ms: float | None = None,
+                admission: AdmissionPolicy | None = None,
+                cache_keys: np.ndarray | None = None,
+                cache_capacity: int = 4096,
+                cache_ttl_s: float | None = None) -> LoadgenReport:
     """Simulate `n_queries` open-loop arrivals; queries cycle through the
     `eligible` flags (a classified sample of real traffic)."""
     if rollout_mode not in ("rolling", "stw"):
@@ -163,6 +214,30 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         n_ing = max(1, int(round(ingest_qps * float(arrivals[-1]))))
         ingest_times = np.cumsum(
             rng.exponential(1.0 / ingest_qps, size=n_ing))
+    # front-end layers draw from SEPARATE seeded generators, and only when
+    # enabled — defaults-off runs stay bit-identical to the pre-frontend
+    # generator (the checked-in BENCH_cluster tiny baseline pins this)
+    hedge_delay = hstraggle = None
+    if hedge_ms is not None:
+        hedge_delay = hedge_ms * 1e-3
+        hrng = np.random.default_rng([seed, 0x6865646])
+        hstraggle = hrng.random((n_queries, plan.n_shards)) < straggler_p
+    qbound = dl = None
+    if admission is not None:
+        qbound = None if admission.queue_bound_ms is None \
+            else admission.queue_bound_ms * 1e-3
+        dl = None if admission.deadline_ms is None \
+            else admission.deadline_ms * 1e-3
+    admit = qbound is not None or dl is not None
+    sim_cache: OrderedDict | None = None
+    if cache_keys is not None:
+        cache_keys = np.asarray(cache_keys, np.int64)
+        if cache_keys.size == 0:
+            raise ValueError("cache_keys must be non-empty when provided")
+        if cache_capacity < 1:
+            raise ValueError(f"cache_capacity must be >= 1, "
+                             f"got {cache_capacity}")
+        sim_cache = OrderedDict()
 
     # per-replica next-free times, flat-indexed [tier][shard][replica]
     free_t1 = [np.zeros(len(g)) for g in plan.t1_words]
@@ -203,7 +278,36 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
     ingest_total = 0
     stw_delayed = 0
     ing_ptr = 0
+    n_hedges = n_hedge_wins = n_hedge_cancels = 0
+    hedge_extra = 0.0
+    n_shed = n_shed_to_t2 = 0
+    n_cache_hits = 0
     last = plan.n_shards - 1       # grow-mode appends write the LAST shard
+
+    def hedge_leg(free, busy, s, r1, start1, service1, words1, cand,
+                  words_g, i, now):
+        """Fire a backup on the least-loaded other replica of the group;
+        first response wins, the LOSER is cancelled: its queue slot rolls
+        back to the work it actually did and the words it scanned before
+        cancellation are accounted as hedge waste, not shard traffic."""
+        r2 = min(cand, key=lambda r: free[s][r])
+        words2 = words_g[r2]
+        service2 = (t_fixed_us + words2 * t_word_us) * 1e-6
+        if hstraggle[i, s]:            # backup straggles independently
+            service2 *= straggler_x
+        start2 = max(now + hedge_delay, free[s][r2])
+        c1, c2 = start1 + service1, start2 + service2
+        win = min(c1, c2)
+        for r, start, c in ((r1, start1, c1), (r2, start2, c2)):
+            worked_to = min(c, win)    # the loser stops at the winner's done
+            busy[s][r] += max(0.0, worked_to - start)
+            free[s][r] = max(free[s][r], worked_to)
+        backup_won = c2 < c1
+        w_win, w_lose = (words2, words1) if backup_won else (words1, words2)
+        st_l, sv_l, c_l = (start1, service1, c1) if backup_won \
+            else (start2, service2, c2)
+        frac = max(0.0, min(c_l, win) - st_l) / sv_l
+        return win, backup_won, w_win, w_lose * frac
 
     def apply_ingest(until: float) -> None:
         """Queue every ingest write arriving before `until` on the last
@@ -228,6 +332,19 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         if global_outage and global_outage[0] <= t < global_outage[1]:
             stw_delayed += 1
             t = global_outage[1]           # the fleet is down: wait it out
+        if sim_cache is not None:
+            # front-end result cache: a hit answers at the fixed cost with
+            # ZERO postings words — no replica is ever contacted
+            ck = int(cache_keys[i % cache_keys.size])
+            ent = sim_cache.get(ck)
+            if ent is not None and (cache_ttl_s is None
+                                    or t - ent <= cache_ttl_s):
+                sim_cache.move_to_end(ck)
+                n_cache_hits += 1
+                latencies[i] = (t - arrivals[i]) + t_fixed_us * 1e-6
+                continue
+            if ent is not None:            # TTL lapsed
+                del sim_cache[ck]
         elig = bool(eligible[i % eligible.size])
         use_t1 = False
         if elig:
@@ -246,6 +363,19 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                 use_t1 = True
             else:
                 fallbacks += 1
+        if use_t1 and admit:
+            # bounded per-shard queues: an over-bound (or deadline-hopeless)
+            # eligible query demotes to the Tier-2-only scatter
+            worst = pred = 0.0
+            for s, r in picks:
+                worst = max(worst, free_t1[s][r] - t)
+                if dl is not None:
+                    est = (t_fixed_us + plan.t1_words[s][r] * t_word_us) * 1e-6
+                    pred = max(pred, max(t, free_t1[s][r]) + est)
+            if (qbound is not None and worst > qbound) or \
+                    (dl is not None and pred - t > dl):
+                use_t1 = False
+                n_shed_to_t2 += 1
         if use_t1:
             n_t1 += 1
             done = t
@@ -256,26 +386,80 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
                     service *= straggler_x
                 start = max(t, free_t1[s][r])
                 backlog[0] = max(backlog[0], start - t)
-                free_t1[s][r] = start + service
-                busy_t1[s][r] += service
-                done = max(done, free_t1[s][r])
-                fleet_words += words
+                comp = start + service
+                cand = None
+                if hedge_delay is not None and comp - t > hedge_delay:
+                    group = plan.t1_words[s]
+                    cand = [r2 for r2 in range(len(group))
+                            if r2 != r and group[r2] > 0
+                            and available(s, r2, t)]
+                if cand:
+                    comp, backup_won, w_win, w_extra = hedge_leg(
+                        free_t1, busy_t1, s, r, start, service, words,
+                        cand, plan.t1_words[s], i, t)
+                    n_hedges += 1
+                    n_hedge_wins += int(backup_won)
+                    n_hedge_cancels += 1
+                    hedge_extra += w_extra
+                    fleet_words += w_win
+                else:
+                    free_t1[s][r] = comp
+                    busy_t1[s][r] += service
+                    fleet_words += words
+                done = max(done, comp)
         else:
+            t2_picks = [int(np.argmin(free_t2[s]))
+                        for s in range(plan.n_shards)]
+            if admit:
+                # deadline-aware shedding: if even the Tier-2 scatter can't
+                # make it, answer DEGRADED at the fixed cost (no scan)
+                worst = pred = 0.0
+                for s, r in enumerate(t2_picks):
+                    worst = max(worst, free_t2[s][r] - t)
+                    if dl is not None:
+                        est = (t_fixed_us
+                               + plan.t2_words[s][r] * t_word_us) * 1e-6
+                        pred = max(pred, max(t, free_t2[s][r]) + est)
+                if (qbound is not None and worst > qbound) or \
+                        (dl is not None and pred - t > dl):
+                    n_shed += 1
+                    latencies[i] = (t - arrivals[i]) + t_fixed_us * 1e-6
+                    continue               # degraded answers aren't cached
             done = t
             for s, group in enumerate(plan.t2_words):
-                r = int(np.argmin(free_t2[s]))
+                r = t2_picks[s]
                 words = group[r]
                 service = (t_fixed_us + words * t_word_us) * 1e-6
                 if straggle[i, s]:
                     service *= straggler_x
                 start = max(t, free_t2[s][r])
                 backlog[1] = max(backlog[1], start - t)
-                free_t2[s][r] = start + service
-                busy_t2[s][r] += service
-                done = max(done, free_t2[s][r])
-                fleet_words += words
-                per_shard_t2[s] += words
+                comp = start + service
+                cand = None
+                if hedge_delay is not None and comp - t > hedge_delay \
+                        and len(group) > 1:
+                    cand = [r2 for r2 in range(len(group)) if r2 != r]
+                if cand:
+                    comp, backup_won, w_win, w_extra = hedge_leg(
+                        free_t2, busy_t2, s, r, start, service, words,
+                        cand, group, i, t)
+                    n_hedges += 1
+                    n_hedge_wins += int(backup_won)
+                    n_hedge_cancels += 1
+                    hedge_extra += w_extra
+                    fleet_words += w_win
+                    per_shard_t2[s] += w_win
+                else:
+                    free_t2[s][r] = comp
+                    busy_t2[s][r] += service
+                    fleet_words += words
+                    per_shard_t2[s] += words
+                done = max(done, comp)
         latencies[i] = done - arrivals[i]  # from TRUE arrival (stw delays)
+        if sim_cache is not None:          # full answers become cacheable
+            sim_cache[ck] = t
+            if len(sim_cache) > cache_capacity:
+                sim_cache.popitem(last=False)
 
     apply_ingest(float("inf"))             # drain writes past the last read
     makespan = max(
@@ -296,6 +480,18 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         round(float(np.percentile(lat_ms, 95)), 6))
     obs.gauge("loadgen_p99_ms", "last loadgen run's p99 latency").set(
         round(float(np.percentile(lat_ms, 99)), 6))
+    # front-end counters/gauges — inc(0) still creates the series, so the
+    # telemetry check can require them from any loadgen-bearing run
+    _HEDGES.inc(n_hedges)
+    _SHEDS.inc(n_shed, kind="degraded")
+    _SHEDS.inc(n_shed_to_t2, kind="to_t2")
+    obs.gauge("loadgen_shed_frac",
+              "last loadgen run's shed fraction (degraded + demoted)").set(
+        round((n_shed + n_shed_to_t2) / n_queries, 6))
+    if sim_cache is not None:
+        obs.gauge("loadgen_cache_hit_rate",
+                  "last loadgen run's result-cache hit rate").set(
+            round(n_cache_hits / n_queries, 6))
     return LoadgenReport(
         n_queries=n_queries,
         offered_qps=rate_qps,
@@ -318,6 +514,15 @@ def run_loadgen(plan: ClusterPlan, eligible: np.ndarray, *,
         n_ingest_events=n_ingest,
         ingest_words_total=int(ingest_total),
         stw_delayed_queries=stw_delayed,
+        n_hedges=n_hedges,
+        n_hedge_wins=n_hedge_wins,
+        n_hedge_cancels=n_hedge_cancels,
+        hedge_extra_words=int(round(hedge_extra)),
+        n_shed_to_t2=n_shed_to_t2,
+        n_shed=n_shed,
+        shed_frac=(n_shed + n_shed_to_t2) / n_queries,
+        n_cache_hits=n_cache_hits,
+        cache_hit_rate=n_cache_hits / n_queries,
         latency_hist=hist.snapshot(),
     )
 

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.cluster import frontend
 from repro.cluster import shard as shard_mod
 from repro.cluster.rollout import (ClusterTieringBuffer, RollingSwap,
                                    StaleCorpusError)
@@ -136,6 +137,8 @@ class BatchTrace:
     corpus_version: int = 0                 # version the batch was served at
     t2_contents: tuple[int, ...] = ()       # Tier-2 content each server held
     expected_t2_contents: tuple[int, ...] = ()  # version's per-shard slices
+    n_cached: int = 0    # front-end result-cache hits (n_tier1/n_tier2 count
+    #                      only the fresh dispatches this batch paid for)
 
     @property
     def consistent(self) -> bool:
@@ -155,10 +158,13 @@ class ClusterRouter:
                  t1_groups: list[list[ShardReplica]],
                  t2_groups: list[list[ShardReplica]],
                  buffer0: ClusterTieringBuffer, n_docs: int, *,
-                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY):
+                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY,
+                 cache: frontend.ResultCache | None = None):
         self.shards = shards            # current target plan (grows in place)
         self.t1 = t1_groups
         self.t2 = t2_groups
+        self.cache = cache
+        frontend.prime_counters()       # export zeroed series cache or not
         self.n_docs = n_docs
         self._buffers: dict[int, ClusterTieringBuffer] = {
             buffer0.generation: buffer0}
@@ -251,6 +257,14 @@ class ClusterRouter:
     def _prune_buffers(self) -> None:
         keep = self.live_generations() | {self.target_generation}
         self._buffers = {g: b for g, b in self._buffers.items() if g in keep}
+        if self.cache is not None:
+            # epoch bump: results computed under a now-dead generation or
+            # corpus version can never be served again — free them eagerly
+            # instead of waiting for LRU pressure (lookup() would reject
+            # them anyway, so this is memory hygiene, not correctness)
+            self.cache.invalidate_below(
+                min(self._buffers),
+                min(b.corpus_version for b in self._buffers.values()))
 
     # -- routing --------------------------------------------------------------
     def _pick(self, group: list[ShardReplica], tier: int, shard_idx: int,
@@ -300,14 +314,68 @@ class ClusterRouter:
             self.stats.full_words_per_query = buf.w_total
         from repro import distributed
         plan = distributed.current_plan()
+        cache = self.cache
         with obs.span("serve", n=b, generation=gen,
                       corpus_version=buf.corpus_version,
                       fused=bool(plan.shard_fused)):
-            if plan.shard_fused:
-                out, elig = self._match_mesh(queries, buf, use_t1, plan)
+            # -- front-end result cache: after classify-key, before tier
+            # match, so the host and fused mesh paths share it. The key is
+            # the packed query vocab bitset (the ψ^clause operand): equal
+            # keys => equal token sets => bit-identical match sets at one
+            # epoch, and the epoch pins (generation, corpus version, tier
+            # path) so rolling swaps invalidate by construction.
+            keys = epoch = None
+            hits: list[tuple[int, tuple]] = []
+            miss_idx = np.arange(b)
+            if cache is not None:
+                epoch = (buf.generation, buf.corpus_version, use_t1)
+                with obs.span("frontend", n=b):
+                    qbits = np.asarray(matching.pack_query_bits(
+                        queries, buf.tiering.vocab_size))
+                    keys = [qbits[j].tobytes() for j in range(b)]
+                    miss = []
+                    for j, k in enumerate(keys):
+                        ent = cache.lookup(epoch, k)
+                        if ent is None:
+                            miss.append(j)
+                        else:
+                            hits.append((j, ent))
+                    miss_idx = np.asarray(miss, int)
+            if len(miss_idx) == b:          # no cache, or every query missed
+                if plan.shard_fused:
+                    out, elig = self._match_mesh(queries, buf, use_t1, plan)
+                else:
+                    out, elig = self._match_host(queries, buf, use_t1)
+                m_out, m_elig = out, elig
             else:
-                out, elig = self._match_host(queries, buf, use_t1)
-            self._account(buf, gen, elig, use_t1)
+                w_total = buf.w_total or self.stats.full_words_per_query
+                out = np.zeros((b, w_total), np.uint32)
+                elig = np.zeros(b, bool)
+                m_out = np.zeros((0, w_total), np.uint32)
+                m_elig = np.zeros(0, bool)
+                if len(miss_idx):           # fresh-match only the misses
+                    sub = [queries[j] for j in miss_idx]
+                    if plan.shard_fused:
+                        m_out, m_elig = self._match_mesh(sub, buf, use_t1,
+                                                         plan)
+                    else:
+                        m_out, m_elig = self._match_host(sub, buf, use_t1)
+                    out[miss_idx] = m_out
+                    elig[miss_idx] = m_elig
+                for j, (e, row) in hits:    # hits cost zero postings words
+                    out[j] = row
+                    elig[j] = e
+            if cache is not None and len(miss_idx):
+                for pos, j in enumerate(miss_idx):
+                    cache.insert(epoch, keys[j], bool(m_elig[pos]),
+                                 m_out[pos])
+            self._account(buf, gen, m_elig, use_t1, n_cached=len(hits))
+            if hits:
+                self.stats.cache_hits += len(hits)
+                # hits keep the traffic-mix metric (tier1_fraction) equal to
+                # a cache-off run: the stored elig bit says which tier the
+                # query BELONGS to, even though no replica was dispatched
+                self.stats.n_tier1 += sum(1 for _, (e, _r) in hits if e)
             self.stats.n_queries += b
             _CQUERIES.inc(b)
             with obs.span("merge", n=b):
@@ -394,7 +462,8 @@ class ClusterRouter:
         return self._pick(self.t2[shard_idx], 2, shard_idx, content=want,
                           draining_ok=draining_ok)
 
-    def _account(self, buf, gen: int, elig: np.ndarray, use_t1: bool) -> None:
+    def _account(self, buf, gen: int, elig: np.ndarray, use_t1: bool,
+                 n_cached: int = 0) -> None:
         """Stats + BatchTrace from the replicas this batch was served by (or
         accounted against, on the fused path) — `_rr` already rotated, so
         `_pick` with a rewound rotation would misattribute; instead the
@@ -438,7 +507,8 @@ class ClusterRouter:
             expected_contents=tuple(expected),
             corpus_version=buf.corpus_version,
             t2_contents=tuple(t2_contents),
-            expected_t2_contents=tuple(expected_t2)))
+            expected_t2_contents=tuple(expected_t2),
+            n_cached=n_cached))
 
 
 class TieredCluster:
@@ -455,9 +525,20 @@ class TieredCluster:
     def __init__(self, postings: np.ndarray, tiering: ClauseTiering,
                  n_docs: int, *, n_shards: int = 2, t1_replicas: int = 2,
                  t2_replicas: int = 1,
-                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY):
+                 trace_capacity: int | None = DEFAULT_TRACE_CAPACITY,
+                 cache: "bool | int | frontend.ResultCache | None" = None):
         if t1_replicas < 1 or t2_replicas < 1:
             raise ValueError("each replica group needs >= 1 replica")
+        # front-end result cache (repro.cluster.frontend): False/None = off,
+        # True = defaults, an int = capacity, or a configured ResultCache
+        if cache is None or cache is False:
+            cache_obj = None
+        elif isinstance(cache, frontend.ResultCache):
+            cache_obj = cache
+        elif cache is True:
+            cache_obj = frontend.ResultCache()
+        else:
+            cache_obj = frontend.ResultCache(capacity=int(cache))
         self.n_docs = n_docs
         self.corpus_version = 0
         self._postings_host = np.asarray(postings)
@@ -476,7 +557,8 @@ class TieredCluster:
                             content=self._t2_content[s.index])
                for _ in range(t2_replicas)] for s in self.shards]
         self.router = ClusterRouter(self.shards, t1, t2, buf0, n_docs,
-                                    trace_capacity=trace_capacity)
+                                    trace_capacity=trace_capacity,
+                                    cache=cache_obj)
 
     def _next_content(self) -> int:
         self._content_seq += 1
@@ -524,6 +606,12 @@ class TieredCluster:
     @property
     def stats(self) -> ServeStats:
         return self.router.stats
+
+    @property
+    def cache(self) -> frontend.ResultCache | None:
+        """The front-end result cache, when serving with one (see
+        `repro.cluster.frontend.ResultCache`)."""
+        return self.router.cache
 
     @property
     def tiering(self) -> ClauseTiering:

@@ -63,6 +63,18 @@ def main() -> None:
                     help="loadgen offered load, queries/s")
     ap.add_argument("--requests", type=int, default=4000,
                     help="loadgen arrivals per configuration")
+    ap.add_argument("--cache", action="store_true",
+                    help="serve through the classify-keyed front-end result "
+                         "cache (and give the loadgen its sim twin)")
+    ap.add_argument("--cache-capacity", type=int, default=8192)
+    ap.add_argument("--cache-ttl", type=float, default=None,
+                    help="result-cache TTL in seconds (default: no TTL)")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="loadgen hedged dispatch: fire a backup subquery "
+                         "after this many ms (default: no hedging)")
+    ap.add_argument("--admission", default="",
+                    help="loadgen overload admission QUEUE_MS[,DEADLINE_MS] "
+                         "('-' skips a bound; empty disables)")
     ap.add_argument("--no-baseline", action="store_true",
                     help="skip the single-engine A/B run")
     ap.add_argument("--verify", action="store_true",
@@ -101,7 +113,11 @@ def main() -> None:
           f"solver={args.solver} budget_frac={args.budget_frac} "
           f"budget_split={args.budget_split or '-'} "
           f"shards={args.shards} t1_replicas={args.replicas} "
-          f"t2_replicas={args.t2_replicas}")
+          f"t2_replicas={args.t2_replicas} cache={'on' if args.cache else '-'} "
+          f"hedge_ms={args.hedge_ms if args.hedge_ms is not None else '-'} "
+          f"admission={args.admission or '-'}")
+    admission = cluster.AdmissionPolicy.parse(args.admission) \
+        if args.admission else None
     budget_split = None
     if args.budget_split == "traffic":
         budget_split = "traffic"
@@ -124,6 +140,10 @@ def main() -> None:
     # -- 1. strong-scaling loadgen sweep -------------------------------------
     sweep = [int(s) for s in args.sweep.split(",") if s] or [args.shards]
     sample = pipe.log.queries[:min(2048, pipe.log.n_queries)]
+    # the loadgen cache twin keys arrivals by the sample's token sets, in
+    # the same i % size cycle the eligibility flags use — after one cycle
+    # every repeat is a front-end hit, like the real ResultCache
+    cache_keys = cluster.keys_of(sample) if args.cache else None
     elig = None     # eligibility depends only on ψ, not on the topology
     for n_shards in sweep:
         fleet = pipe.deploy_cluster(n_shards=n_shards,
@@ -133,7 +153,12 @@ def main() -> None:
             elig = fleet.classify(sample)
         plan = cluster.ClusterPlan.of_cluster(fleet)
         rep = cluster.run_loadgen(plan, elig, rate_qps=args.rate,
-                                  n_queries=args.requests, seed=args.seed)
+                                  n_queries=args.requests, seed=args.seed,
+                                  hedge_ms=args.hedge_ms,
+                                  admission=admission,
+                                  cache_keys=cache_keys,
+                                  cache_capacity=args.cache_capacity,
+                                  cache_ttl_s=args.cache_ttl)
         per_shard = max(rep.per_shard_t2_words) if rep.per_shard_t2_words \
             else 0
         print(f"[cluster] loadgen shards={len(fleet.shards)} "
@@ -148,9 +173,12 @@ def main() -> None:
         static = stream.run_stream(pipe, enable_refit=False, **run_kw)
         print(f"[cluster] single-engine static   {static.summary()}")
 
-    fleet = pipe.deploy_cluster(n_shards=args.shards,
-                                t1_replicas=args.replicas,
-                                t2_replicas=args.t2_replicas)
+    fleet = pipe.deploy_cluster(
+        n_shards=args.shards, t1_replicas=args.replicas,
+        t2_replicas=args.t2_replicas,
+        cache=cluster.ResultCache(capacity=args.cache_capacity,
+                                  ttl_s=args.cache_ttl)
+        if args.cache else None)
     report = stream.run_stream(pipe, engine=fleet,
                                verify_swaps=args.verify, **run_kw)
     for w in report.windows:
@@ -177,6 +205,23 @@ def main() -> None:
                                      "serving diverged from single-tier "
                                      "matching on the direct probe")
             direct_checks = len(probe)
+        cache_checks = 0
+        if args.cache:
+            # the second pass serves FROM the cache; its answers must stay
+            # bit-identical to the single-tier oracle (exactness of a hit)
+            import numpy as np
+            probe = pipe.log.queries[:128]
+            fleet.serve(probe)                     # populate
+            hits0 = fleet.cache.stats.hits
+            for a, b in zip(fleet.serve(probe), fleet.serve_reference(probe)):
+                if not np.array_equal(a, b):
+                    raise SystemExit("[cluster] CACHE PARITY FAILURE: a "
+                                     "cached answer diverged from "
+                                     "single-tier matching")
+            if fleet.cache.stats.hits <= hits0:
+                raise SystemExit("[cluster] CACHE FAILURE: repeat traffic "
+                                 "produced no front-end hits")
+            cache_checks = len(probe)
         if budget_split is not None:
             # per-shard Tier-1 doc counts must respect every cap B_k
             caps = pipe.result.extra["caps"]
@@ -190,8 +235,15 @@ def main() -> None:
         print(f"[cluster] verified: {report.n_parity_checks} swap parity "
               f"checks + {direct_checks} direct probes ok, "
               f"{len(fleet.trace)} batches pair-consistent"
+              + (f", {cache_checks} cached answers oracle-exact"
+                 if cache_checks else "")
               + (", per-shard caps respected" if budget_split is not None
                  else ""))
+    if args.cache:
+        c = fleet.cache.snapshot()
+        print(f"[cluster] frontend cache: {c['hits']}/{c['lookups']} hits "
+              f"(rate {c['hit_rate']:.3f}), {c['invalidations']} epoch "
+              f"invalidations, size {c['size']}/{c['capacity']}")
     if static is not None:
         delta = report.mean_coverage - static.mean_coverage
         print(f"[cluster] mean windowed tier-1 coverage: "

@@ -282,4 +282,13 @@ def default_slo_rules() -> list[SLORule]:
         SLORule("admission_reject_rate",
                 "ratio:admission_total{decision=reject}/admission_total",
                 max=0.999, fast_windows=2, slow_windows=4),
+        # front-end (cluster.frontend): a cache that stops hitting entirely
+        # under repeat traffic means epoch churn or key instability (the
+        # ratio is None — rule inert — until lookups actually flow), and a
+        # fleet shedding most of its traffic is answering degraded
+        SLORule("cache_hit_rate_floor",
+                "ratio:frontend_cache_hits_total/frontend_cache_lookups_total",
+                min=0.001, fast_windows=2, slow_windows=6),
+        SLORule("shed_ratio_ceiling", "gauge:loadgen_shed_frac", max=0.5,
+                fast_windows=2, slow_windows=4),
     ]

@@ -42,10 +42,16 @@ class ServeStats:
     tier1_words: int = 0            # postings words scanned in tier 1
     tier2_words: int = 0
     full_words_per_query: int = 0   # untiered per-query traffic (denominator)
+    cache_hits: int = 0             # front-end result-cache hits (zero words
+    #                                 scanned; cluster.frontend.ResultCache)
 
     @property
     def tier1_fraction(self) -> float:
         return self.n_tier1 / max(1, self.n_queries)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / max(1, self.n_queries)
 
     @property
     def cost_saving(self) -> float:
@@ -60,6 +66,7 @@ class ServeStats:
         `full_words_per_query` survives so ratios keep meaning."""
         self.n_queries = self.n_tier1 = 0
         self.tier1_words = self.tier2_words = 0
+        self.cache_hits = 0
 
     def merge(self, other: "ServeStats") -> "ServeStats":
         """Fold another window's counters into this one, in place."""
@@ -73,6 +80,7 @@ class ServeStats:
         self.n_tier1 += other.n_tier1
         self.tier1_words += other.tier1_words
         self.tier2_words += other.tier2_words
+        self.cache_hits += other.cache_hits
         return self
 
     def snapshot(self) -> "ServeStats":
@@ -85,6 +93,7 @@ class ServeStats:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
         d["tier1_fraction"] = self.tier1_fraction
         d["cost_saving"] = self.cost_saving
+        d["cache_hit_rate"] = self.cache_hit_rate
         return d
 
     @classmethod

@@ -37,6 +37,8 @@ _W_SAVING = obs.gauge("window_cost_saving", "last window's word-traffic saving")
 _W_TV = obs.gauge("window_tv_distance", "drift signal vs last refit")
 _GEN = obs.gauge("live_generation", "tiering generation serving traffic")
 _REFIT_S = obs.gauge("refit_seconds", "last refit wall-clock, seconds")
+_W_CACHE = obs.gauge("frontend_cache_hit_rate",
+                     "last window's front-end result-cache hit rate")
 
 
 @dataclasses.dataclass
@@ -64,6 +66,8 @@ class WindowReport:
             ("cov", self.coverage), ("saving", self.cost_saving),
             ("tv", self.tv_distance), ("refit", refit),
             ("gen", self.generation),
+            ("cache_hit", self.stats.cache_hit_rate
+             if self.stats.cache_hits else None),
             ("scope", list(self.scope) if self.scope else None),
             ("parity", self.parity_ok)])
 
@@ -307,6 +311,8 @@ class RetieringController:
         _W_SAVING.set(s.cost_saving)
         _W_TV.set(s.tv_distance)
         _GEN.set(s.generation)
+        if s.stats.cache_hits:      # fleet serves through a front-end cache
+            _W_CACHE.set(round(s.stats.cache_hit_rate, 6))
         if obs.enabled() and obs.get_exporter() is not None:
             obs.export_window(s.index, report=report.to_dict())
 

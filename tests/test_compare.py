@@ -197,16 +197,35 @@ def test_missing_metric_and_new_metric(tmp_path):
 def test_sections_only_compared_when_common(tmp_path, capsys):
     base = _tree(tmp_path, "base", p95=1.5)
     cand = _tree(tmp_path, "cand", p95=1.5)
-    # candidate grows an extra section: informational, never a failure
+    # candidate grows an extra section the baseline predates: a VISIBLE
+    # skipped-with-notice finding, never a failure
     _bench(tmp_path / "cand", "ingest", [_row("pipe", derived="docs=5")])
     assert compare.run_gate(base, cand, tolerance_file=_tol(tmp_path)) == 0
-    assert "section-only-in-candidate" in capsys.readouterr().out
+    out = capsys.readouterr().out
+    assert "skipped-new-section" in out
+    assert "regenerate the" in out
     # disjoint trees cannot vouch for anything -> hard failure
     d = tmp_path / "other"
     d.mkdir()
     _bench(d, "solvers", [_row("x", derived="v=1")])
     assert compare.run_gate(base, str(d), tolerance_file=_tol(tmp_path)) == 1
     assert "no common sections" in capsys.readouterr().out
+
+
+def test_candidate_dropping_a_whole_section_fails_the_gate(tmp_path, capsys):
+    # the baseline gates two sections; a candidate that silently stops
+    # emitting one of them must FAIL, not sail through as "not common"
+    base = _tree(tmp_path, "base", p95=1.5)
+    _bench(tmp_path / "base", "ingest", [_row("pipe", derived="docs=5")])
+    cand = _tree(tmp_path, "cand", p95=1.5)
+    assert compare.run_gate(base, cand, tolerance_file=_tol(tmp_path)) == 1
+    out = capsys.readouterr().out
+    assert "SECTION-MISSING" in out
+    assert "dropped this whole section" in out
+    findings = compare.diff_trees(compare.load_tree(base),
+                                  compare.load_tree(cand),
+                                  dict(compare.DEFAULT_TOLERANCE), [])
+    assert compare.gate(findings) == 1
 
 
 def test_empty_trees_fail_closed(tmp_path, capsys):

@@ -1,0 +1,509 @@
+"""repro.cluster.frontend: the classify-keyed result cache (LRU/TTL/epoch
+sharded store + router integration, bit-identical to `serve_reference`
+across rolling tiering AND corpus swaps), hedged dispatch and overload
+admission in the loadgen queue model (defaults-off runs pinned bit-identical
+to the pre-frontend generator), the Zipf traffic helpers, and — in a
+4-fake-device subprocess — cache-on serving mid-rollout on both the host and
+fused mesh paths against a cache-off oracle fleet."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import cluster, obs
+from repro.cluster import frontend
+from repro.core import SOLVERS
+from repro.core.tiering import ClauseTiering
+
+
+def _tiering(data, problem, budget_frac=0.5, solver="greedy"):
+    r = SOLVERS[solver](problem, int(data.n_docs * budget_frac))
+    return ClauseTiering.from_selection(data, r.selected)
+
+
+def _fleet(data, tiering, **kw):
+    return cluster.TieredCluster(data.postings, tiering, data.n_docs, **kw)
+
+
+# -- ResultCache store mechanics ----------------------------------------------
+
+def test_cache_validates_capacity_and_shards():
+    with pytest.raises(ValueError, match="capacity"):
+        frontend.ResultCache(capacity=0)
+    with pytest.raises(ValueError, match="n_shards"):
+        frontend.ResultCache(n_shards=0)
+    # shard count never exceeds capacity (each shard holds >= 1 entry)
+    c = frontend.ResultCache(capacity=3, n_shards=8)
+    assert c.n_shards == 3
+
+
+def test_cache_hit_miss_and_stats():
+    c = frontend.ResultCache(capacity=8)
+    epoch = (0, 0, True)
+    row = np.arange(3, dtype=np.uint32)
+    assert c.lookup(epoch, b"k") is None
+    c.insert(epoch, b"k", True, row)
+    elig, got = c.lookup(epoch, b"k")
+    assert elig is True
+    np.testing.assert_array_equal(got, row)
+    # the stored row is a private copy: mutating the source can't corrupt it
+    row[0] = 99
+    np.testing.assert_array_equal(c.lookup(epoch, b"k")[1], [0, 1, 2])
+    s = c.stats
+    assert (s.lookups, s.hits, s.misses, s.insertions) == (3, 2, 1, 1)
+    assert s.hit_rate == pytest.approx(2 / 3)
+    assert len(c) == 1
+    snap = c.snapshot()
+    assert snap["size"] == 1 and snap["hits"] == 2
+    assert c.stats.to_dict()["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_cache_lru_evicts_oldest_and_touch_refreshes():
+    c = frontend.ResultCache(capacity=2, n_shards=1)
+    epoch = (0, 0, True)
+    r = np.zeros(1, np.uint32)
+    c.insert(epoch, b"a", True, r)
+    c.insert(epoch, b"b", True, r)
+    assert c.lookup(epoch, b"a") is not None     # touch: a is now newest
+    c.insert(epoch, b"c", True, r)               # evicts b, not a
+    assert c.lookup(epoch, b"a") is not None
+    assert c.lookup(epoch, b"b") is None
+    assert c.stats.evictions == 1
+    assert len(c) == 2
+
+
+def test_cache_ttl_expires_entries():
+    now = [0.0]
+    c = frontend.ResultCache(capacity=8, ttl_s=1.0, clock=lambda: now[0])
+    epoch = (0, 0, True)
+    c.insert(epoch, b"k", False, np.zeros(1, np.uint32))
+    now[0] = 0.9
+    assert c.lookup(epoch, b"k") is not None
+    now[0] = 1.1
+    assert c.lookup(epoch, b"k") is None         # lapsed -> evicted on sight
+    assert c.stats.expirations == 1
+    assert len(c) == 0
+
+
+def test_cache_epoch_mismatch_and_invalidate_below():
+    c = frontend.ResultCache(capacity=32, n_shards=2)
+    r = np.zeros(1, np.uint32)
+    c.insert((1, 0, True), b"old", True, r)
+    c.insert((2, 1, True), b"new", True, r)
+    # a lookup at a moved epoch evicts the stale entry on sight
+    assert c.lookup((2, 0, True), b"old") is None
+    assert c.stats.invalidations == 1
+    # eager sweep: entries below (generation, corpus_version) drop at once
+    c.insert((1, 0, True), b"old2", True, r)
+    assert c.invalidate_below(2, 1) == 1
+    assert c.lookup((2, 1, True), b"new") is not None
+    c.clear()
+    assert len(c) == 0
+
+
+def test_cache_keys_spread_over_shards():
+    c = frontend.ResultCache(capacity=64, n_shards=8)
+    for i in range(64):
+        c.insert((0, 0, True), bytes([i, i >> 3]), True,
+                 np.zeros(1, np.uint32))
+    occupied = sum(1 for d in c._shards if len(d))
+    assert occupied >= 4                         # crc32 spreads the keys
+
+
+# -- AdmissionPolicy ----------------------------------------------------------
+
+def test_admission_policy_parse():
+    p = frontend.AdmissionPolicy.parse("0.5,2.0")
+    assert (p.queue_bound_ms, p.deadline_ms) == (0.5, 2.0)
+    assert p.active
+    assert frontend.AdmissionPolicy.parse("1.5").deadline_ms is None
+    q = frontend.AdmissionPolicy.parse("-,3")
+    assert q.queue_bound_ms is None and q.deadline_ms == 3.0
+    assert not frontend.AdmissionPolicy().active
+    with pytest.raises(ValueError, match="QUEUE_MS"):
+        frontend.AdmissionPolicy.parse("1,2,3")
+
+
+# -- traffic helpers ----------------------------------------------------------
+
+def test_zipf_keys_seeded_and_skewed():
+    a = frontend.zipf_keys(1000, 50, 1.1, seed=3)
+    b = frontend.zipf_keys(1000, 50, 1.1, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 50
+    # skew concentrates mass on the head ranks
+    skewed = (frontend.zipf_keys(4000, 50, 1.5, seed=0) == 0).mean()
+    uniform = (frontend.zipf_keys(4000, 50, 0.0, seed=0) == 0).mean()
+    assert skewed > 3 * uniform
+    with pytest.raises(ValueError, match="n_keys"):
+        frontend.zipf_keys(10, 0, 1.0)
+
+
+def test_keys_of_is_token_set_identity():
+    keys = frontend.keys_of([(1, 2), (2, 1), (1, 2, 2), (3,), (1, 2)])
+    # order and duplicates don't matter; ids are first-seen dense ints
+    assert keys.tolist() == [0, 0, 0, 1, 0]
+
+
+# -- router integration: hits bit-identical, stats preserved ------------------
+
+def test_router_cache_hits_bit_identical_and_stats(tiny_data, tiny_problem):
+    tiering = _tiering(tiny_data, tiny_problem)
+    queries = tiny_data.log.queries[:64]
+    plain = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=2)
+    cached = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=2, cache=True)
+    assert plain.cache is None and cached.cache is not None
+    a1 = plain.serve(queries)
+    b1 = cached.serve(queries)                   # cold: every query misses
+    assert cached.cache.stats.hits == 0
+    for x, y in zip(a1, b1):
+        np.testing.assert_array_equal(x, y)
+    words_after_miss = cached.stats.tier1_words + cached.stats.tier2_words
+    b2 = cached.serve(queries)                   # warm: every query hits
+    ref = cached.serve_reference(queries)
+    for x, y in zip(b2, ref):
+        np.testing.assert_array_equal(x, y)
+    assert cached.cache.stats.hits == len(queries)
+    assert cached.stats.cache_hits == len(queries)
+    # hits scan ZERO postings words...
+    assert cached.stats.tier1_words + cached.stats.tier2_words == \
+        words_after_miss
+    # ...but keep the traffic-mix metric equal to a cache-off run
+    plain.serve(queries)
+    assert cached.stats.n_queries == plain.stats.n_queries
+    assert cached.stats.tier1_fraction == plain.stats.tier1_fraction
+    tr = cached.trace[-1]
+    assert tr.n_cached == len(queries)
+    assert tr.n_tier1 == 0 and tr.n_tier2 == 0   # no fresh dispatches
+    assert cached.consistency_ok()
+
+
+def test_router_cache_coercion_forms(tiny_data, tiny_problem):
+    tiering = _tiering(tiny_data, tiny_problem)
+    assert _fleet(tiny_data, tiering, cache=None).cache is None
+    assert _fleet(tiny_data, tiering, cache=False).cache is None
+    assert _fleet(tiny_data, tiering, cache=64).cache.capacity == 64
+    rc = frontend.ResultCache(capacity=7)
+    assert _fleet(tiny_data, tiering, cache=rc).cache is rc
+
+
+def test_router_cache_exact_across_rolling_tiering_swap(tiny_data,
+                                                        tiny_problem):
+    tiering = _tiering(tiny_data, tiny_problem)
+    queries = tiny_data.log.queries[:48]
+    fleet = _fleet(tiny_data, tiering, n_shards=2, t1_replicas=2, cache=True)
+    fleet.serve(queries)                         # warm at generation 0
+    fleet.swap_tiering(_tiering(tiny_data, tiny_problem, budget_frac=0.25))
+    batches = 0
+    while fleet.router.rollout is not None and batches < 64:
+        got = fleet.serve(queries)
+        ref = fleet.serve_reference(queries)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+        batches += 1
+    assert fleet.router.rollout is None
+    assert fleet.consistency_ok()
+    # the epoch moved, so the swap forced invalidations AND fresh entries
+    assert fleet.cache.stats.invalidations > 0
+    got = fleet.serve(queries)                   # post-swap warm pass: hits
+    ref = fleet.serve_reference(queries)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+    assert fleet.cache.stats.hits > 0
+
+
+def test_router_cache_exact_across_rolling_corpus_swap():
+    # append_docs mutates TieringData in place: fresh data, never fixtures
+    from repro import api, ingest
+    from repro.data import incidence, synthetic
+    corpus, log = synthetic.make_tiering_dataset(0, "tiny")
+    data = incidence.build_tiering_data(corpus, log, min_support=1e-3)
+    pipe = api.TieringPipeline.from_data(data).solve("greedy",
+                                                     budget_frac=0.5)
+    fleet = pipe.deploy_cluster(n_shards=2, t1_replicas=2, cache=True)
+    queries = log.queries[:48]
+    fleet.serve(queries)
+    fleet.serve(queries)
+    assert fleet.cache.stats.hits > 0            # warm before the swap
+    feed = ingest.DocumentFeed(log=data.log,
+                               vocab_size=data.corpus.vocab_size,
+                               rate=48.0, seed=7)
+    delta = incidence.append_docs(data, list(feed.window(0)))
+    pipe.problem = pipe.problem.with_doc_block(delta.clause_cols,
+                                               delta.n_docs)
+    pipe.adopt_selection(pipe.problem.state_for(
+        np.nonzero(np.asarray(pipe.result.selected))[0]))
+    fleet.swap_corpus(data.postings, delta.n_docs, pipe.tiering())
+    batches = 0
+    while fleet.router.rollout is not None and batches < 64:
+        got = fleet.serve(queries)
+        v = fleet.trace[-1].corpus_version
+        ref = fleet.serve_reference(queries, corpus_version=v)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+        batches += 1
+    assert fleet.router.rollout is None
+    assert fleet.consistency_ok()
+    got = fleet.serve(queries)                   # warm at the new version
+    ref = fleet.serve_reference(queries)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_frontend_counters_track_cache(tiny_data, tiny_problem):
+    tiering = _tiering(tiny_data, tiny_problem)
+    queries = tiny_data.log.queries[:32]
+    prev_on = obs.set_enabled(True)
+    prev_ex = obs.set_exporter(None)
+    obs.reset()
+    try:
+        fleet = _fleet(tiny_data, tiering, cache=True)
+        # priming exports zeroed series before any traffic flows
+        assert obs.REGISTRY.total("frontend_cache_hits_total") == 0
+        fleet.serve(queries)
+        fleet.serve(queries)
+        s = fleet.cache.stats
+        assert obs.REGISTRY.total("frontend_cache_lookups_total") == s.lookups
+        assert obs.REGISTRY.total("frontend_cache_hits_total") == s.hits
+        assert obs.REGISTRY.total("frontend_cache_misses_total") == s.misses
+    finally:
+        obs.reset()
+        obs.set_exporter(prev_ex)
+        obs.set_enabled(prev_on)
+
+
+# -- loadgen: defaults-off runs pinned bit-identical to the seed generator ----
+
+_PLAN = cluster.ClusterPlan(t1_words=((3, 3), (0, 0), (5, 5)),
+                            t2_words=((8, 8), (7, 7), (9, 9)))
+_ELIG = np.array([1, 0, 1, 1, 0], bool)
+
+
+def _pin(rep, **want):
+    for k, v in want.items():
+        got = getattr(rep, k)
+        if isinstance(v, float):
+            assert got == pytest.approx(v, rel=1e-12, abs=0.0), (k, got)
+        else:
+            assert got == v, (k, got)
+
+
+def test_loadgen_defaults_off_pinned_base():
+    rep = cluster.run_loadgen(_PLAN, _ELIG)
+    _pin(rep,
+         p50_ms=0.04000000000001225,
+         p95_ms=0.056000000000000494,
+         p99_ms=0.38399999999999546,
+         mean_ms=0.053374920729458396,
+         max_ms=0.461990155094405,
+         fleet_words=57600,
+         throughput_qps=19618.68981448589,
+         max_t1_util=0.25210016411613734,
+         max_t1_backlog_ms=0.09904343179559238)
+    # the front-end fields exist and stay zero when every layer is off
+    assert (rep.n_hedges, rep.n_hedge_wins, rep.n_hedge_cancels,
+            rep.hedge_extra_words, rep.n_shed, rep.n_shed_to_t2,
+            rep.n_cache_hits) == (0,) * 7
+    assert rep.shed_frac == 0.0 and rep.cache_hit_rate == 0.0
+
+
+def test_loadgen_defaults_off_pinned_fast_and_rollout():
+    fast = cluster.run_loadgen(_PLAN, _ELIG, rate_qps=80000.0,
+                               n_queries=1500, seed=3)
+    _pin(fast,
+         p50_ms=0.31151297096737673,
+         p95_ms=1.230360015368779,
+         p99_ms=1.3049804630053103,
+         mean_ms=0.4536487489924385,
+         fleet_words=21600,
+         max_t1_util=0.9945387691335608)
+    roll = cluster.run_loadgen(_PLAN, _ELIG, rollout_at_s=0.01, swap_ms=2.0)
+    _pin(roll,
+         mean_ms=0.053453239520822926,
+         fleet_words=57600,
+         max_t1_util=0.2534734724031512)
+    stw = cluster.run_loadgen(_PLAN, _ELIG, rollout_at_s=0.01,
+                              rollout_mode="stw", ingest_qps=500.0)
+    _pin(stw,
+         p95_ms=52.36657698411578,
+         p99_ms=58.59492847543175,
+         mean_ms=13.45586276623517,
+         n_ingest_events=102,
+         ingest_words_total=13056,
+         stw_delayed_queries=1189)
+
+
+# -- loadgen: hedged dispatch -------------------------------------------------
+
+def test_hedging_cuts_p99_at_two_replicas():
+    base = cluster.run_loadgen(_PLAN, _ELIG)
+    hedged = cluster.run_loadgen(_PLAN, _ELIG, hedge_ms=0.1)
+    assert hedged.n_hedges > 0
+    assert 0 < hedged.n_hedge_wins <= hedged.n_hedges
+    assert hedged.n_hedge_cancels == hedged.n_hedges
+    assert hedged.hedge_extra_words > 0
+    # first-response-wins on straggled legs cuts the modelled tail
+    assert hedged.p99_ms < base.p99_ms
+    # winner-leg accounting: fleet words equal the unhedged run (the losing
+    # leg's partial scan is reported separately, not double-counted)
+    assert hedged.fleet_words == base.fleet_words
+    assert hedged.n_queries == base.n_queries
+
+
+def test_hedging_needs_a_second_replica():
+    solo = _PLAN.resized(t1_replicas=1, t2_replicas=1)
+    base = cluster.run_loadgen(solo, _ELIG)
+    hedged = cluster.run_loadgen(solo, _ELIG, hedge_ms=0.1)
+    assert hedged.n_hedges == 0
+    assert hedged.to_dict() == base.to_dict()    # no candidates: noop
+
+
+# -- loadgen: overload admission ----------------------------------------------
+
+def test_admission_sheds_under_overload():
+    kw = dict(rate_qps=200000.0, n_queries=3000, seed=0)
+    unprotected = cluster.run_loadgen(_PLAN, _ELIG, **kw)
+    policy = frontend.AdmissionPolicy(queue_bound_ms=0.3, deadline_ms=1.0)
+    shed = cluster.run_loadgen(_PLAN, _ELIG, admission=policy, **kw)
+    assert shed.n_shed > 0 and shed.n_shed_to_t2 > 0
+    assert shed.shed_frac == pytest.approx(
+        (shed.n_shed + shed.n_shed_to_t2) / shed.n_queries)
+    # shedding keeps the admitted tail flat while unprotected queues collapse
+    assert shed.p99_ms < unprotected.p99_ms
+    assert shed.fleet_words < unprotected.fleet_words
+    line = shed.line()
+    assert f"shed={shed.n_shed}+{shed.n_shed_to_t2}->t2" in line
+
+
+def test_inactive_admission_is_noop():
+    base = cluster.run_loadgen(_PLAN, _ELIG)
+    noop = cluster.run_loadgen(_PLAN, _ELIG,
+                               admission=frontend.AdmissionPolicy())
+    assert noop.to_dict() == base.to_dict()
+
+
+# -- loadgen: result-cache model ----------------------------------------------
+
+def test_loadgen_cache_hits_cut_words_and_tail():
+    base = cluster.run_loadgen(_PLAN, _ELIG)
+    keys = frontend.zipf_keys(4000, 100, 1.1, seed=0)
+    rep = cluster.run_loadgen(_PLAN, _ELIG, cache_keys=keys)
+    assert rep.n_cache_hits > 0
+    assert rep.cache_hit_rate == pytest.approx(
+        rep.n_cache_hits / rep.n_queries)
+    assert rep.cache_hit_rate > 0.5              # zipf repeat traffic
+    assert rep.fleet_words < base.fleet_words // 2
+    assert rep.p99_ms <= base.p99_ms
+    assert f"cache_hit={rep.cache_hit_rate:.3f}" in rep.line()
+    with pytest.raises(ValueError, match="cache_keys"):
+        cluster.run_loadgen(_PLAN, _ELIG, cache_keys=np.empty(0, np.int64))
+    with pytest.raises(ValueError, match="cache_capacity"):
+        cluster.run_loadgen(_PLAN, _ELIG, cache_keys=keys, cache_capacity=0)
+
+
+def test_loadgen_obs_counters_and_report_roundtrip():
+    prev_on = obs.set_enabled(True)
+    prev_ex = obs.set_exporter(None)
+    obs.reset()
+    try:
+        keys = frontend.zipf_keys(4000, 100, 1.1, seed=0)
+        rep = cluster.run_loadgen(_PLAN, _ELIG, hedge_ms=0.1,
+                                  cache_keys=keys)
+        assert obs.REGISTRY.total("loadgen_hedges_total") == rep.n_hedges
+    finally:
+        obs.reset()
+        obs.set_exporter(prev_ex)
+        obs.set_enabled(prev_on)
+    d = rep.to_dict()
+    for k in ("n_hedges", "n_hedge_wins", "n_hedge_cancels",
+              "hedge_extra_words", "n_shed", "n_shed_to_t2", "shed_frac",
+              "n_cache_hits", "cache_hit_rate"):
+        assert k in d
+    back = cluster.LoadgenReport.from_dict(d)
+    assert back.to_dict() == d
+
+
+# -- 4-device parity: cache-on serving mid-rollout, host AND mesh -------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, numpy as np
+from repro import api, cluster, distributed as D
+from repro.core import SOLVERS
+from repro.core.tiering import ClauseTiering
+
+assert len(jax.devices()) == 4
+pipe = (api.TieringPipeline.from_synthetic(seed=0, scale="tiny")
+        .mine(min_support=1e-3).solve("greedy", budget_frac=0.5))
+data = pipe.data
+queries = pipe.log.queries[:64]
+r2 = SOLVERS["greedy"](pipe.problem, int(data.n_docs * 0.25))
+t_new = ClauseTiering.from_selection(data, r2.selected)
+
+
+def full_snap(fleet):
+    s = fleet.stats
+    return (s.n_queries, s.n_tier1, s.tier1_words, s.tier2_words,
+            s.cache_hits,
+            [(t.psi_generation, t.n_tier1, t.n_tier2, t.n_cached,
+              t.corpus_version) for t in fleet.trace])
+
+
+def run_pair(mesh):
+    def build(cache):
+        return cluster.TieredCluster(data.postings, pipe.tiering(),
+                                     data.n_docs, n_shards=2, t1_replicas=2,
+                                     cache=cache)
+    cached, plain = build(True), build(False)
+    # pass 1 (cold cache, all-miss): stats and BatchTrace are BIT-IDENTICAL
+    a, b = cached.serve(queries), plain.serve(queries)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert full_snap(cached) == full_snap(plain)
+    # rolling swap with repeat traffic: every batch equal to the oracle
+    cached.swap_tiering(t_new)
+    plain.swap_tiering(t_new)
+    batches = 0
+    while (cached.router.rollout is not None
+           or plain.router.rollout is not None) and batches < 64:
+        a, b = cached.serve(queries), plain.serve(queries)
+        ref = cached.serve_reference(queries)
+        for x, y, z in zip(a, b, ref):
+            np.testing.assert_array_equal(x, y)
+            np.testing.assert_array_equal(x, z)
+        batches += 1
+    assert cached.router.rollout is None and plain.router.rollout is None
+    # warm pass at the landed generation: all hits, still oracle-exact
+    a = cached.serve(queries)
+    for x, z in zip(a, cached.serve_reference(queries)):
+        np.testing.assert_array_equal(x, z)
+    assert cached.cache.stats.hits > 0
+    assert cached.trace[-1].n_cached == len(queries)
+    assert cached.stats.n_queries == plain.stats.n_queries + len(queries)
+    assert cached.consistency_ok() and plain.consistency_ok()
+    assert cached.cache.stats.invalidations > 0
+    if mesh:
+        assert cached.router._mesh_tables, "fused path never engaged"
+    return cached.cache.stats.hit_rate
+
+
+host_rate = run_pair(mesh=False)
+with D.use_mesh(D.shard_mesh()):
+    mesh_rate = run_pair(mesh=True)
+assert host_rate > 0 and mesh_rate > 0
+print("FRONTEND-4DEV-OK")
+"""
+
+
+def test_frontend_cache_parity_4dev():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get(
+            "PATH", "/usr/bin:/bin"), "HOME": os.environ.get("HOME", "/root")},
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=900)
+    assert "FRONTEND-4DEV-OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"

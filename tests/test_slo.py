@@ -176,10 +176,13 @@ def test_segment_and_reset():
 def test_default_rules_cover_the_fleet_objectives():
     rules = {r.name: r for r in default_slo_rules()}
     assert {"serve_p95", "serve_p99", "coverage_floor", "t2_fallback_rate",
-            "refit_budget", "admission_reject_rate"} == set(rules)
+            "refit_budget", "admission_reject_rate",
+            "cache_hit_rate_floor", "shed_ratio_ceiling"} == set(rules)
     assert rules["serve_p95"].metric == "p95:loadgen_latency_ms"
     assert rules["coverage_floor"].min is not None
     assert rules["refit_budget"].when == "delta:refits_total"
+    assert rules["cache_hit_rate_floor"].min is not None
+    assert rules["shed_ratio_ceiling"].max is not None
     obs.SLO.set_rules(default_slo_rules())
     out = obs.SLO.evaluate(0)                   # cold registry: all N/A...
     assert set(out["rules"]) == set(rules)
